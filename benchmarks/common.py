@@ -1,0 +1,124 @@
+"""Shared benchmark plumbing: timing, training loops for the paper's
+experimental protocol (M_A / G_A / ETT / speedup), CSV emission.
+
+Timing caveat (stated in EXPERIMENTS.md): this container is a single-CPU
+host, so wall-clock numbers are *relative* CPU costs of the same XLA
+programs, not TPU/A100 latencies; the paper's speedup TRENDS (FFF log-depth
+vs MoE linear-expert scaling) are what these benchmarks reproduce.  Roofline
+numbers for the TPU target come from the dry-run (launch/roofline.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.core import ff, fff, moe
+
+
+def time_fn(fn, *args, iters: int = 30, warmup: int = 3) -> tuple[float, float]:
+    """(mean_us, std_us) per call of a jitted fn."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.mean(ts)), float(np.std(ts))
+
+
+def train_classifier(forward_train: Callable, params, ds, *, steps: int,
+                     batch: int = 256, lr: float = 0.2, seed: int = 0,
+                     opt=None, eval_every: int = 0,
+                     eval_fn: Optional[Callable] = None):
+    """Generic classifier training loop (paper protocol: pure SGD, lr=0.2).
+
+    forward_train(params, x, rng) -> (logits, aux_loss_scalar).
+    Returns (params, history) where history records (step, eval_fn(params)).
+    """
+    opt = opt or optim.sgd(lr)
+    state = opt.init(params)
+    base_key = jax.random.PRNGKey(seed + 12345)
+
+    def loss_fn(p, x, y, r):
+        logits, aux = forward_train(p, x, r)
+        ce = -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(logits), y[:, None], 1))
+        return ce + aux
+
+    @jax.jit
+    def step(p, s, x, y, r):
+        g = jax.grad(loss_fn)(p, x, y, r)
+        u, s = opt.update(g, s, p)
+        return optim.apply_updates(p, u), s
+
+    rng = np.random.default_rng(seed)
+    history = []
+    for i in range(steps):
+        sel = rng.integers(0, len(ds.x_train), batch)
+        params, state = step(params, state,
+                             jnp.asarray(ds.x_train[sel]),
+                             jnp.asarray(ds.y_train[sel]),
+                             jax.random.fold_in(base_key, i))
+        if eval_every and eval_fn and (i + 1) % eval_every == 0:
+            history.append((i + 1, eval_fn(params)))
+    return params, history
+
+
+def accuracy(predict: Callable, params, x, y, batch: int = 1024) -> float:
+    correct = 0
+    for i in range(0, len(x), batch):
+        logits = predict(params, jnp.asarray(x[i:i + batch]))
+        correct += int((np.asarray(logits.argmax(-1)) == y[i:i + batch]).sum())
+    return correct / len(x)
+
+
+# --- model builders used across tables -------------------------------------
+
+def build_fff(dim, classes, depth, leaf, h=3.0, seed=0, act="relu"):
+    cfg = fff.FFFConfig(dim_in=dim, dim_out=classes, depth=depth,
+                        leaf_width=leaf, activation=act, hardening_scale=h)
+    params = fff.init(jax.random.PRNGKey(seed), cfg)
+
+    def fwd_train(p, x, rng=None):
+        logits, aux = fff.forward_train(p, cfg, x)
+        return logits, h * fff.hardening_loss(aux["node_probs"])
+
+    def fwd_hard(p, x):
+        return fff.forward_hard(p, cfg, x)[0]
+
+    return cfg, params, fwd_train, fwd_hard
+
+
+def build_ff(dim, classes, width, seed=0, act="relu"):
+    cfg = ff.FFConfig(dim_in=dim, dim_out=classes, width=width,
+                      activation=act)
+    params = ff.init(jax.random.PRNGKey(seed), cfg)
+
+    def fwd_train(p, x, rng=None):
+        return ff.forward(p, cfg, x), jnp.zeros(())
+
+    def fwd(p, x):
+        return ff.forward(p, cfg, x)
+
+    return cfg, params, fwd_train, fwd
+
+
+def build_moe(dim, classes, experts, expert_width, k=2, seed=0):
+    cfg = moe.MoEConfig(dim_in=dim, dim_out=classes, num_experts=experts,
+                        expert_width=expert_width, top_k=k)
+    params = moe.init(jax.random.PRNGKey(seed), cfg)
+
+    def fwd_train(p, x, rng=None):
+        y, aux = moe.forward(p, cfg, x, rng=rng, train=True)
+        return y, aux["aux_loss"]
+
+    def fwd_infer(p, x):
+        return moe.forward_sparse(p, cfg, x)[0]
+
+    return cfg, params, fwd_train, fwd_infer

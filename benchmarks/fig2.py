@@ -1,0 +1,56 @@
+"""Paper Figure 2: FFFs vs FFs at equal *inference size*.
+
+For depths d in {2, 6} and leaf sizes l in {2, 4, 8, 16, 32}, the FFF
+inference size is l + d; FFs of width equal to that inference size are the
+baselines.  Claim reproduced: FFFs outperform FFs of the same inference size
+on both M_A and G_A (they bring 2^d * l training neurons to bear).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.data import synthetic
+
+DEPTHS = (2, 6)
+LEAVES = (2, 4, 8, 16, 32)
+
+
+def run(steps: int = 250, quick: bool = False) -> list[dict]:
+    ds = synthetic.make("cifar10_like")
+    rows = []
+    depths = DEPTHS if not quick else (2,)
+    leaves = LEAVES if not quick else (4, 16)
+    for d in depths:
+        for leaf in leaves:
+            inf_size = leaf + d
+            cfg, p, tr, fw = common.build_fff(ds.dim, ds.num_classes, d, leaf)
+            p, _ = common.train_classifier(tr, p, ds, steps=steps)
+            ma = common.accuracy(fw, p, ds.x_train[:2048], ds.y_train[:2048])
+            ga = common.accuracy(fw, p, ds.x_test, ds.y_test)
+            rows.append(dict(model="fff", depth=d, leaf=leaf,
+                             inference_size=inf_size, ma=ma, ga=ga))
+            # FF with width == FFF inference size
+            _, p_ff, tr_ff, fw_ff = common.build_ff(ds.dim, ds.num_classes,
+                                                    inf_size)
+            p_ff, _ = common.train_classifier(tr_ff, p_ff, ds, steps=steps)
+            rows.append(dict(
+                model="ff", depth=0, leaf=0, inference_size=inf_size,
+                ma=common.accuracy(fw_ff, p_ff, ds.x_train[:2048],
+                                   ds.y_train[:2048]),
+                ga=common.accuracy(fw_ff, p_ff, ds.x_test, ds.y_test)))
+    return rows
+
+
+def main(quick: bool = True):
+    rows = run(steps=120 if quick else 400, quick=quick)
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = (f"fig2/{r['model']}_d{r['depth']}_l{r['leaf']}"
+                f"_inf{r['inference_size']}")
+        print(f"{name},0.0,ma={r['ma']:.3f};ga={r['ga']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,89 @@
+"""Paper Figures 3-4: inference latency scaling — FFF's O(d) = O(log n_leaves)
+internal mechanism vs MoE's O(n_experts) gate, at BERT-base dimensions
+(dim_in = dim_out = 768), expert/leaf width 32, k = 1.
+
+The paper's claim is the SCALING SHAPE: MoE inference time grows linearly
+with the number of experts (exponentially in the depth exponent), FFF grows
+linearly in the depth d itself.  We measure both mechanisms' per-call time
+and additionally report the mechanism FLOPs (gate vs descent) which are
+hardware-independent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import fff, moe
+
+DIM = 768
+WIDTH = 32
+BATCH = 256
+
+
+def run(max_exp: int = 10, quick: bool = False) -> list[dict]:
+    exps = range(1, (6 if quick else max_exp) + 1)
+    x = jax.random.normal(jax.random.PRNGKey(0), (BATCH, DIM))
+    rows = []
+    for e in exps:
+        n_blocks = 2 ** e
+        # --- MoE with k=1 (paper: not trainable, but measures the gate) ---
+        mcfg = moe.MoEConfig(dim_in=DIM, dim_out=DIM, num_experts=n_blocks,
+                             expert_width=WIDTH, top_k=1)
+        mp = moe.init(jax.random.PRNGKey(e), mcfg)
+        f_moe = jax.jit(lambda p, x: moe.forward_sparse(p, mcfg, x)[0])
+        t_moe, s_moe = common.time_fn(f_moe, mp, x, iters=10 if quick else 20)
+        moe_gate_flops = BATCH * DIM * n_blocks          # the O(n) gate
+        rows.append(dict(model="moe", blocks=n_blocks, us=t_moe, std=s_moe,
+                         mech_flops=moe_gate_flops))
+        # --- FFF with depth e ---
+        fcfg = fff.FFFConfig(dim_in=DIM, dim_out=DIM, depth=e,
+                             leaf_width=WIDTH, activation="relu",
+                             leaf_bias=False)
+        fp = fff.init(jax.random.PRNGKey(e + 100), fcfg)
+        f_fff = jax.jit(lambda p, x: fff.forward_hard(p, fcfg, x)[0])
+        t_fff, s_fff = common.time_fn(f_fff, fp, x, iters=10 if quick else 20)
+        fff_desc_flops = BATCH * DIM * e                 # the O(d) descent
+        rows.append(dict(model="fff", blocks=n_blocks, us=t_fff, std=s_fff,
+                         mech_flops=fff_desc_flops))
+        # --- FF baseline of the same training width (small widths only) ---
+        if n_blocks * WIDTH <= 1024:
+            from repro.core import ff
+            fcfg2 = ff.FFConfig(dim_in=DIM, dim_out=DIM,
+                                width=n_blocks * WIDTH, activation="relu")
+            pp = ff.init(jax.random.PRNGKey(e + 200), fcfg2)
+            f_ff = jax.jit(lambda p, x: ff.forward(p, fcfg2, x))
+            t_ff, s_ff = common.time_fn(f_ff, pp, x, iters=10 if quick else 20)
+            rows.append(dict(model="ff", blocks=n_blocks, us=t_ff, std=s_ff,
+                             mech_flops=2 * BATCH * DIM * n_blocks * WIDTH))
+    return rows
+
+
+def scaling_exponents(rows: list[dict]) -> dict:
+    """log-log slope of mechanism cost vs block count: ~1.0 for MoE (linear),
+    ~0 (log) for FFF."""
+    out = {}
+    for model in ("moe", "fff"):
+        pts = [(r["blocks"], r["mech_flops"]) for r in rows
+               if r["model"] == model]
+        lx = np.log2([p[0] for p in pts])
+        ly = np.log2([p[1] for p in pts])
+        out[model] = float(np.polyfit(lx, ly, 1)[0])
+    return out
+
+
+def main(quick: bool = True):
+    rows = run(quick=quick)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"fig34/{r['model']}_n{r['blocks']},{r['us']:.1f},"
+              f"mech_flops={r['mech_flops']}")
+    exps = scaling_exponents(rows)
+    print(f"fig34/scaling_exponent_moe,0.0,slope={exps['moe']:.2f}")
+    print(f"fig34/scaling_exponent_fff,0.0,slope={exps['fff']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,46 @@
+"""Roofline summary: renders the dry-run artifact (experiments/dryrun_full.json)
+into the per-(arch x shape x mesh) three-term table used by EXPERIMENTS.md
+§Roofline.  Run ``python -m repro.launch.dryrun --all --out
+experiments/dryrun_full.json`` first (hours of compiles); this benchmark only
+formats and sanity-checks the stored records.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ARTIFACT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun_full.json")
+
+
+def load(path: str = ARTIFACT) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(quick: bool = True):
+    recs = load()
+    print("name,us_per_call,derived")
+    if not recs:
+        print("roofline/missing,0.0,run_dryrun_first=1")
+        return []
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in ok:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        t_max = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        print(f"{name},{t_max*1e6:.0f},"
+              f"tc={r['t_compute_s']:.3f};tm={r['t_memory_s']:.3f};"
+              f"tx={r['t_collective_s']:.3f};dom={r['dominant']};"
+              f"rf={r['roofline_fraction']:.4f};"
+              f"useful={r['useful_ratio']:.3f};"
+              f"fits={int(r.get('fits_v5e_16g', False))}")
+    n_skip = sum(r.get("status") == "skipped" for r in recs)
+    n_err = sum(r.get("status") == "error" for r in recs)
+    print(f"roofline/summary,0.0,ok={len(ok)};skipped={n_skip};errors={n_err}")
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Benchmark harness: one module per paper table/figure, each printing
+``name,us_per_call,derived`` CSV rows.
+
+  table1 -> paper Table 1 (FFF vs FF across widths/leaf sizes, M_A/G_A/speedup)
+  fig2   -> paper Figure 2 (equal inference size comparison)
+  table2 -> paper Table 2 (FFF vs MoE vs FF + epochs-to-train)
+  fig34  -> paper Figures 3-4 (mechanism latency scaling, BERT dims)
+  table3 -> paper Table 3 (ViT with FFF layers)
+  roofline -> formats the dry-run roofline artifact (assignment)
+
+``python -m benchmarks.run`` runs the quick profile (CPU-sized, ~minutes);
+``python -m benchmarks.run --full`` runs the paper-scale grids.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale grids (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: table1,fig2,table2,fig34,"
+                         "table3,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import fig2, fig34, roofline_bench, table1, table2, table3
+    suites = {
+        "table1": table1.main,
+        "fig2": fig2.main,
+        "table2": table2.main,
+        "fig34": fig34.main,
+        "table3": table3.main,
+        "roofline": roofline_bench.main,
+    }
+    selected = (args.only.split(",") if args.only else list(suites))
+    failures = []
+    for name in selected:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            suites[name](quick=not args.full)
+        except Exception as e:                       # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, e))
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILURES: {[n for n, _ in failures]}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

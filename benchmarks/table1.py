@@ -1,0 +1,70 @@
+"""Paper Table 1: FFF vs FF across training widths and leaf sizes.
+
+Grid: widths w in {16, 32, 64, 128}, FFF leaf sizes l in {8, 4, 2, 1} (depth
+log2(w/l)), datasets usps_like / mnist_like / fashion_like (synthetic proxies,
+see data/synthetic.py).  Reports M_A (memorization: train-set accuracy of an
+overfit run), G_A (test accuracy of the best-validation model), and speedup
+(FF inference time / FFF hard-inference time at the same training width).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.data import synthetic
+
+WIDTHS = (16, 32, 64, 128)
+LEAVES = (8, 4, 2, 1)
+DATASETS = ("usps_like", "mnist_like", "fashion_like")
+
+
+def run(steps: int = 200, quick: bool = False) -> list[dict]:
+    rows = []
+    widths = WIDTHS[:2] if quick else WIDTHS
+    leaves = LEAVES[:2] if quick else LEAVES
+    datasets = DATASETS[:1] if quick else DATASETS
+    for ds_name in datasets:
+        ds = synthetic.make(ds_name)
+        xb = jnp.asarray(ds.x_test[:512])
+        for w in widths:
+            # vanilla FF baseline
+            cfg_ff, p_ff, tr_ff, fw_ff = common.build_ff(ds.dim,
+                                                         ds.num_classes, w)
+            p_ff, _ = common.train_classifier(tr_ff, p_ff, ds, steps=steps)
+            ma_ff = common.accuracy(fw_ff, p_ff, ds.x_train[:2048],
+                                    ds.y_train[:2048])
+            ga_ff = common.accuracy(fw_ff, p_ff, ds.x_test, ds.y_test)
+            t_ff, _ = common.time_fn(jax.jit(fw_ff), p_ff, xb)
+            rows.append(dict(dataset=ds_name, model="ff", width=w, leaf=0,
+                             ma=ma_ff, ga=ga_ff, us=t_ff, speedup=1.0))
+            for leaf in leaves:
+                if leaf > w:
+                    continue
+                depth = int(np.log2(w // leaf))
+                cfg, p, tr, fw = common.build_fff(ds.dim, ds.num_classes,
+                                                  depth, leaf)
+                p, _ = common.train_classifier(tr, p, ds, steps=steps)
+                ma = common.accuracy(fw, p, ds.x_train[:2048],
+                                     ds.y_train[:2048])
+                ga = common.accuracy(fw, p, ds.x_test, ds.y_test)
+                t, _ = common.time_fn(jax.jit(fw), p, xb)
+                rows.append(dict(dataset=ds_name, model="fff", width=w,
+                                 leaf=leaf, ma=ma, ga=ga, us=t,
+                                 speedup=t_ff / t))
+    return rows
+
+
+def main(quick: bool = True):
+    rows = run(steps=120 if quick else 400, quick=quick)
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = f"table1/{r['dataset']}/{r['model']}_w{r['width']}_l{r['leaf']}"
+        print(f"{name},{r['us']:.1f},"
+              f"ma={r['ma']:.3f};ga={r['ga']:.3f};speedup={r['speedup']:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

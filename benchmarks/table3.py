@@ -1,0 +1,127 @@
+"""Paper Table 3: vision transformer with FFF layers replacing FFs.
+
+4-layer ViT, hidden 128, patch-embedded synthetic CIFAR-like images; FFF
+training width 128 with leaf sizes l in {32, 8, 1} (quick subset; full run
+sweeps {32, 16, 8, 4, 2, 1}).  Reports G_A and the FFN-site speedup (timed on
+the FFN layers alone, matching the paper's "speedup at the feedforward
+layers"), plus training/inference size accounting of Table 3's columns.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro import optim
+from repro.configs.paper_vit import vit_config
+from repro.core import ff as ff_lib
+from repro.core import fff as fff_lib
+from repro.data import synthetic
+from repro.models import lm
+from repro.nn import mlp
+
+
+def _vit_batchify(ds, patch=4, side=32, channels=3):
+    xtr = synthetic.patches(ds.x_train, side, channels, patch)
+    xte = synthetic.patches(ds.x_test, side, channels, patch)
+    return xtr, xte
+
+
+def _train_vit(cfg, ds_patches, labels, test_patches, test_labels,
+               steps, seed=0):
+    """ViT = patch-projection frontend + lm stack; classify via mean-pooled
+    final hidden -> vocab head (vocab = n_classes)."""
+    key = jax.random.PRNGKey(seed)
+    params = lm.init(key, cfg)
+    # project raw patches to d_model with a fixed random matrix (frontend stub
+    # owns the learned projection)
+    dpatch = ds_patches.shape[-1]
+    proj = jax.random.normal(jax.random.fold_in(key, 1),
+                             (dpatch, cfg.d_model)) / np.sqrt(dpatch)
+
+    def fwd(p, x_patches, mode):
+        emb = jnp.einsum("bsp,pd->bsd", x_patches, proj)
+        from repro.nn import transformer
+        x = lm._embed_inputs(p, cfg, {"embeds": emb})
+        x, _, aux = transformer.stack_forward(p["stack"], cfg, x, mode=mode,
+                                              causal=False)
+        x = x.mean(axis=1)
+        logits = lm._head(p, cfg, x[:, None, :])[:, 0]
+        return logits, aux
+
+    def fwd_train(p, x, rng=None):
+        logits, aux = fwd(p, x, "train")
+        return logits, aux["hardening"]
+
+    def fwd_infer(p, x):
+        # FORWARD_I at every FFF site (mode="eval": hard tree routing)
+        return fwd(p, x, "eval")[0]
+
+    class DS:
+        x_train, y_train = ds_patches, labels
+        x_test, y_test = test_patches, test_labels
+
+    p, _ = common.train_classifier(fwd_train, params, DS, steps=steps,
+                                   batch=128, opt=optim.adamw(4e-4))
+    ga = common.accuracy(jax.jit(fwd_infer), p, test_patches, test_labels,
+                         batch=256)
+    return p, ga
+
+
+def _ffn_site_speedup(leaf: int, d_model: int = 128, d_ff: int = 128,
+                      batch: int = 2048) -> float:
+    """Timed FFN-site comparison: dense FF(128) vs hard FFF(depth, leaf)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (batch, d_model))
+    fcfg = ff_lib.FFConfig(dim_in=d_model, dim_out=d_model, width=d_ff,
+                           activation="gelu")
+    fp = ff_lib.init(jax.random.PRNGKey(1), fcfg)
+    t_ff, _ = common.time_fn(jax.jit(
+        lambda p, x: ff_lib.forward(p, fcfg, x)), fp, x, iters=15)
+    depth = int(np.log2(d_ff // leaf))
+    xcfg = fff_lib.FFFConfig(dim_in=d_model, dim_out=d_model, depth=depth,
+                             leaf_width=leaf, activation="gelu",
+                             leaf_bias=False)
+    xp = fff_lib.init(jax.random.PRNGKey(2), xcfg)
+    t_fff, _ = common.time_fn(jax.jit(
+        lambda p, x: fff_lib.forward_hard(p, xcfg, x)[0]), xp, x, iters=15)
+    return t_ff / t_fff
+
+
+def run(steps: int = 200, leaves=(32, 8, 1), quick: bool = False):
+    ds = synthetic.make("cifar10_like")
+    xtr, xte = _vit_batchify(ds)
+    rows = []
+    # dense baseline
+    cfg0 = vit_config("dense")
+    _, ga0 = _train_vit(cfg0, xtr, ds.y_train, xte, ds.y_test, steps)
+    rows.append(dict(model="ff", leaf=0, depth=0, ga=ga0, speedup=1.0,
+                     train_size=128, inf_width=128))
+    for leaf in (leaves[:2] if quick else leaves):
+        cfg = vit_config("fff", leaf_width=leaf)
+        depth = int(np.log2(128 // leaf))
+        _, ga = _train_vit(cfg, xtr, ds.y_train, xte, ds.y_test, steps)
+        spd = _ffn_site_speedup(leaf)
+        rows.append(dict(model="fff", leaf=leaf, depth=depth, ga=ga,
+                         speedup=spd,
+                         train_size=(2 ** depth - 1) + 128,
+                         inf_width=leaf))
+    return rows
+
+
+def main(quick: bool = True):
+    rows = run(steps=80 if quick else 300, quick=quick)
+    print("name,us_per_call,derived")
+    base_ga = rows[0]["ga"]
+    for r in rows:
+        rel = (base_ga - r["ga"]) / max(base_ga, 1e-9) * 100
+        print(f"table3/{r['model']}_l{r['leaf']},0.0,"
+              f"ga={r['ga']:.3f};rel_drop={rel:.1f}%;"
+              f"ffn_speedup={r['speedup']:.2f}x;inf_width={r['inf_width']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=False)

@@ -1,0 +1,53 @@
+"""Serving with the TPU kernel path: routes a batch through the Pallas
+tree-router + grouped leaf GEMM (interpret mode on CPU) and cross-checks
+against the pure-JAX oracle — the production inference dataflow end to end.
+
+Run:  PYTHONPATH=src python examples/serve_fff_kernels.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fff, routing
+from repro.kernels.fused_fff import fff_decode
+from repro.kernels.leaf_gemm import fff_infer
+
+# a transformer-FFN-sized FFF layer: d_model 512, 16 leaves x 256 = 4096 width
+cfg = fff.FFFConfig(dim_in=512, dim_out=512, depth=4, leaf_width=256,
+                    activation="swiglu", leaf_bias=False)
+params = fff.init(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (256, 512))
+
+print(f"FFF layer: {cfg.num_leaves} leaves x {cfg.leaf_width} wide "
+      f"(training width {cfg.training_width}, inference width "
+      f"{cfg.inference_width})")
+
+# --- oracle ------------------------------------------------------------
+t0 = time.time()
+y_ref, aux = fff.forward_hard(params, cfg, x)
+print(f"oracle  forward_hard        {1e3*(time.time()-t0):7.1f}ms")
+
+# --- batch path: router kernel + sorted-dispatch ragged GEMM ------------
+t0 = time.time()
+y_grouped = fff_infer(x, params, cfg, interpret=True)
+err = float(jnp.abs(y_grouped - y_ref).max())
+print(f"kernels fff_infer (grouped) {1e3*(time.time()-t0):7.1f}ms   "
+      f"max|err| vs oracle = {err:.2e}")
+
+# --- decode path: per-token gathered weights (the offset-load) ----------
+xd = x[:8]
+y_dec = fff_decode(xd, params, cfg, interpret=True)
+y_dec_ref, _ = fff.forward_hard(params, cfg, xd)
+print(f"kernels fff_decode (gather)           max|err| vs oracle = "
+      f"{float(jnp.abs(y_dec - y_dec_ref).max()):.2e}")
+
+# --- routing statistics --------------------------------------------------
+leaf_idx = aux["leaf_idx"][:, 0]
+hist = np.asarray(routing.leaf_histogram(leaf_idx, cfg.num_leaves))
+skew = float(routing.routing_skew(leaf_idx, cfg.num_leaves))
+print(f"\nrouting: leaf loads {hist.tolist()}  skew={skew:.2f} "
+      f"(1.0 = perfectly balanced; capacity dispatch bounds the worst case)")
+print("note: interpret=True executes the Pallas kernel bodies on CPU; on a "
+      "TPU the same calls lower to MXU code (see DESIGN.md §3).")

@@ -1,0 +1,5 @@
+"""Checkpointing: sharded save/restore, rolling async manager, elastic
+re-sharding across device-count changes."""
+from repro.checkpoint.ckpt import restore_tree, save_tree
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.elastic import reshard_restore

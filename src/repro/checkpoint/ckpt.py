@@ -1,0 +1,118 @@
+"""Checkpoint serialization: a pytree -> directory of .npz shards + manifest.
+
+Format:
+  <dir>/manifest.json   {"step", "leaf_paths", "treedef", "meta"}
+  <dir>/arrays-<k>.npz  flat leaf arrays, keyed by escaped path strings
+
+Arrays are gathered to host before writing (on multi-host pods each process
+writes its addressable shards; the single-process degenerate case writes the
+whole array).  Restore is sharding-agnostic: arrays are loaded on host and
+re-placed by the caller (see elastic.py), which is what makes N->M device
+count changes trivial.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+PyTree = Any
+
+_SEP = "/"
+
+# numpy can't round-trip ml_dtypes (bf16 etc.) through npz: store the raw bits
+# in a same-width integer view and restore via the manifest's dtype string.
+_BITCAST = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _flatten_with_paths(tree: PyTree) -> tuple[list[tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_tree(directory: str, tree: PyTree, step: int = 0,
+              meta: Optional[dict] = None, max_shard_mb: int = 512) -> None:
+    os.makedirs(directory, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    manifest = {"step": int(step), "meta": meta or {}, "shards": [],
+                "leaves": []}
+    shard: dict[str, np.ndarray] = {}
+    shard_bytes = 0
+    shard_id = 0
+
+    def flush():
+        nonlocal shard, shard_bytes, shard_id
+        if not shard:
+            return
+        fname = f"arrays-{shard_id}.npz"
+        np.savez(os.path.join(directory, fname), **shard)
+        manifest["shards"].append(fname)
+        shard = {}
+        shard_bytes = 0
+        shard_id += 1
+
+    for key, leaf in flat:
+        arr = np.asarray(jax.device_get(leaf))
+        dtype_name = str(arr.dtype)
+        if dtype_name in _BITCAST:
+            arr = arr.view(_BITCAST[dtype_name][1])
+        manifest["leaves"].append(
+            {"key": key, "shape": list(arr.shape), "dtype": dtype_name,
+             "shard": shard_id})
+        shard[key] = arr
+        shard_bytes += arr.nbytes
+        if shard_bytes >= max_shard_mb * 1024 * 1024:
+            flush()
+    flush()
+    with open(os.path.join(directory, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def restore_tree(directory: str, like: PyTree) -> tuple[PyTree, int, dict]:
+    """Restore into the structure of ``like``; returns (tree, step, meta)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays: dict[str, np.ndarray] = {}
+    for fname in manifest["shards"]:
+        with np.load(os.path.join(directory, fname)) as z:
+            for k in z.files:
+                arrays[k] = z[k]
+    dtypes = {l["key"]: l["dtype"] for l in manifest["leaves"]}
+    flat, treedef = _flatten_with_paths(like)
+    leaves = []
+    for key, leaf in flat:
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        dtype_name = dtypes.get(key, "")
+        if dtype_name in _BITCAST:
+            arr = arr.view(_BITCAST[dtype_name][0])
+        want = tuple(np.shape(leaf))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
+                             f"vs model {want}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest["step"], manifest.get("meta", {})

@@ -1,0 +1,86 @@
+"""Rolling checkpoint manager: atomic commits, keep-k retention, async writer.
+
+Durability contract: a checkpoint directory is visible under its final name
+only after a complete write (tmp-dir + rename), so a crash mid-save can never
+corrupt the latest restorable state — the supervisor (distributed/fault.py)
+always restarts from the newest *committed* step.
+"""
+from __future__ import annotations
+
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+from repro.checkpoint import ckpt
+
+PyTree = Any
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3, async_save: bool = True):
+        self.root = root
+        self.keep = keep
+        self.async_save = async_save
+        self._worker: Optional[threading.Thread] = None
+        os.makedirs(root, exist_ok=True)
+
+    # -- write ---------------------------------------------------------------
+    def save(self, step: int, tree: PyTree, meta: Optional[dict] = None,
+             block: bool = False) -> None:
+        self.wait()                      # one in-flight save at a time
+        if self.async_save and not block:
+            # snapshot to host synchronously (cheap vs. serialization), then
+            # serialize + fsync + commit off-thread
+            self._worker = threading.Thread(
+                target=self._save_impl, args=(step, tree, meta), daemon=True)
+            self._worker.start()
+        else:
+            self._save_impl(step, tree, meta)
+
+    def _save_impl(self, step: int, tree: PyTree, meta: Optional[dict]):
+        final = os.path.join(self.root, f"step_{step}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        ckpt.save_tree(tmp, tree, step=step, meta=meta)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)            # atomic commit
+        self._gc()
+
+    def wait(self) -> None:
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+
+    # -- read ----------------------------------------------------------------
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.root):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.root, name,
+                                                 "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, like: PyTree, step: Optional[int] = None
+                ) -> tuple[PyTree, int, dict]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.root}")
+        return ckpt.restore_tree(os.path.join(self.root, f"step_{step}"), like)
+
+    # -- retention -----------------------------------------------------------
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s}"),
+                          ignore_errors=True)

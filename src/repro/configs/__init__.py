@@ -1,0 +1,4 @@
+"""Architecture configs: one module per assigned arch + the paper's own."""
+from repro.configs.base import (BlockSpec, EncoderSpec, FFNSpec, ModelConfig,
+                                SHAPES, ShapeSpec, shape_applicable)
+from repro.configs.registry import ARCH_IDS, get_config

@@ -1,0 +1,41 @@
+"""The paper's own Table-3 setting: a 4-layer vision transformer, patch size
+4, hidden dimension 128, with FFN sites of training width 128 that are
+replaced by FFF layers of leaf size l in {1,2,4,8,16,32} and depth
+log2(128/l).  Used by benchmarks/table3.py and examples/vit_cifar_fff.py."""
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, FFNSpec, ModelConfig
+
+
+def vit_config(ffn_kind: str = "dense", leaf_width: int = 32,
+               hardening_scale: float = 10.0) -> ModelConfig:
+    if ffn_kind == "dense":
+        ffn = FFNSpec(kind="dense", d_ff=128, activation="gelu")
+    else:
+        ffn = FFNSpec(kind="dense", d_ff=128,
+                      activation="gelu").as_fff(leaf_width=leaf_width, trees=1)
+        ffn = dataclasses.replace(ffn, hardening_scale=hardening_scale)
+    return ModelConfig(
+        arch_id=f"paper-vit-{ffn_kind}-l{leaf_width}",
+        family="vlm",
+        d_model=128,
+        n_layers=4,
+        n_heads=4,
+        n_kv_heads=4,
+        vocab_size=10,            # CIFAR-10 classes (head reuses vocab)
+        max_seq_len=65,           # 8x8 patches + CLS
+        pos_emb="learned",
+        norm="layernorm",
+        frontend="vision_stub",
+        period=(BlockSpec(mixer="attn", ffn=ffn),),
+        param_dtype=jnp.float32,
+        accum_dtype=jnp.float32,
+        scan_layers=False,
+        attn_chunk=64,
+    )
+
+
+CONFIG = vit_config("dense")
+FFF_CONFIG = vit_config("fff", leaf_width=32)

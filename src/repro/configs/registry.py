@@ -1,0 +1,37 @@
+"""Arch registry: ``--arch <id>`` lookup for every assigned architecture.
+
+``get_config(arch_id, ffn="fff")`` returns the FFF variant (the paper's
+technique as a first-class feature); ``ffn="native"`` returns the published
+baseline (dense or MoE as the source model ships)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "whisper-small": "repro.configs.whisper_small",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t_a32b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "command-r-35b": "repro.configs.command_r_35b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "paper-vit": "repro.configs.paper_vit",
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if k != "paper-vit")
+
+
+def get_config(arch_id: str, ffn: str = "fff") -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    if ffn == "fff":
+        return mod.FFF_CONFIG
+    if ffn == "native":
+        return mod.CONFIG
+    return mod.CONFIG.with_ffn_kind(ffn)

@@ -1,0 +1,45 @@
+"""xlstm-1.3b [ssm] — 48L d_model=2048 4H (GQA kv=4) d_ff=0 vocab=50304 —
+sLSTM + mLSTM blocks (xLSTM[7:1]: seven mLSTM per sLSTM).
+[arXiv:2405.04517; unverified]
+
+ARCH-APPLICABILITY (DESIGN.md §4): d_ff = 0 — these blocks have NO FFN site;
+the up/down projections inside the mLSTM block are integral to the recurrence
+(pre-up-projection design), not a replaceable feedforward layer.  The paper's
+FFF technique therefore does not apply; the arch runs FFF-free rather than
+forcing a degenerate port.  Constant-state recurrence => runs long_500k."""
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, FFNSpec, ModelConfig
+
+_NONE = FFNSpec(kind="none")
+
+CONFIG = ModelConfig(
+    arch_id="xlstm-1.3b",
+    family="ssm",
+    d_model=2048,
+    n_layers=48,
+    n_heads=4,
+    n_kv_heads=4,
+    lstm_heads=4,
+    vocab_size=50304,
+    max_seq_len=524288,
+    pos_emb="none",
+    subquadratic=True,
+    period=(
+        BlockSpec(mixer="mlstm", ffn=_NONE),
+        BlockSpec(mixer="mlstm", ffn=_NONE),
+        BlockSpec(mixer="mlstm", ffn=_NONE),
+        BlockSpec(mixer="mlstm", ffn=_NONE),
+        BlockSpec(mixer="mlstm", ffn=_NONE),
+        BlockSpec(mixer="mlstm", ffn=_NONE),
+        BlockSpec(mixer="mlstm", ffn=_NONE),
+        BlockSpec(mixer="slstm", ffn=_NONE),
+    ),
+    param_dtype=jnp.bfloat16,
+    accum_dtype=jnp.bfloat16,
+    remat="full",
+    grad_accum=16,
+)
+
+# FFF inapplicable (no FFN sites) — FFF_CONFIG is identical to CONFIG.
+FFF_CONFIG = CONFIG

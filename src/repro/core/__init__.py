@@ -1,0 +1,14 @@
+"""The paper's primary contribution: fast feedforward networks, with their
+baselines (vanilla FF, noisy-top-k MoE), routing/dispatch machinery and
+region-partition utilities."""
+from repro.core import ff, fff, moe, regions, routing
+from repro.core.fff import (FFFConfig, bernoulli_entropy, decisive_fraction,
+                            forward_hard, forward_train, hardening_loss,
+                            mixture_weights, route_hard)
+
+__all__ = [
+    "ff", "fff", "moe", "regions", "routing",
+    "FFFConfig", "forward_train", "forward_hard", "route_hard",
+    "mixture_weights", "hardening_loss", "bernoulli_entropy",
+    "decisive_fraction",
+]

@@ -1,0 +1,78 @@
+"""Vanilla feedforward baseline — the ``FF`` peer the paper compares against.
+
+One hidden layer in the paper's single-set-of-neurons terminology: each of the
+``width`` neurons has ``dim_in`` input weights and ``dim_out`` output weights.
+Also provides the SwiGLU variant used at transformer FFN sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class FFConfig:
+    dim_in: int
+    dim_out: int
+    width: int
+    activation: str = "gelu"       # relu|gelu|silu|swiglu
+    bias: bool = True
+    param_dtype: Any = jnp.float32
+    accum_dtype: Any = jnp.float32
+
+    @property
+    def training_width(self) -> int:  # symmetry with FFFConfig
+        return self.width
+
+    @property
+    def inference_width(self) -> int:
+        return self.width
+
+
+def init(key: jax.Array, cfg: FFConfig) -> Params:
+    D, H, O = cfg.dim_in, cfg.width, cfg.dim_out
+    ks = jax.random.split(key, 3)
+    pd = cfg.param_dtype
+    if cfg.activation == "swiglu":
+        return {
+            "wg": utils.truncated_init(ks[0], (D, H), 1.0 / math.sqrt(D), pd),
+            "wu": utils.truncated_init(ks[1], (D, H), 1.0 / math.sqrt(D), pd),
+            "wd": utils.truncated_init(ks[2], (H, O), 1.0 / math.sqrt(H), pd),
+        }
+    p: Params = {
+        "w1": utils.he_normal(ks[0], (D, H), pd),
+        "w2": utils.lecun_normal(ks[1], (H, O), pd),
+    }
+    if cfg.bias:
+        p["b1"] = jnp.zeros((H,), pd)
+        p["b2"] = jnp.zeros((O,), pd)
+    return p
+
+
+def forward(params: Params, cfg: FFConfig, x: jax.Array) -> jax.Array:
+    ad = cfg.accum_dtype
+    xf, lead = utils.flatten_leading(x)
+    xf = xf.astype(ad)
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("bd,dh->bh", xf, params["wg"], preferred_element_type=ad)
+        u = jnp.einsum("bd,dh->bh", xf, params["wu"], preferred_element_type=ad)
+        y = jnp.einsum("bh,ho->bo", jax.nn.silu(g) * u, params["wd"],
+                       preferred_element_type=ad)
+        return utils.unflatten_leading(y, lead)
+    act = utils.get_activation(cfg.activation)
+    h = jnp.einsum("bd,dh->bh", xf, params["w1"], preferred_element_type=ad)
+    if "b1" in params:
+        h = h + params["b1"].astype(ad)
+    h = act(h)
+    y = jnp.einsum("bh,ho->bo", h, params["w2"], preferred_element_type=ad)
+    if "b2" in params:
+        y = y + params["b2"].astype(ad)
+    return utils.unflatten_leading(y, lead)

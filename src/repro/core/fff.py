@@ -1,0 +1,471 @@
+"""Fast Feedforward (FFF) layer — Belcak & Wattenhofer, 2023.
+
+A differentiable balanced binary tree of depth ``d`` with ``2^d - 1`` node
+networks (``<dim_in, n, 1>`` feedforward nets with a sigmoid head) and ``2^d``
+leaf networks (``<dim_in, l, dim_out>`` feedforward nets).
+
+Two forward semantics, exactly as in the paper's Algorithm 1:
+
+* ``forward_train``  (FORWARD_T): every node emits a Bernoulli probability;
+  each leaf's mixture weight is the product of branch probabilities along its
+  root-to-leaf path; *all* leaves are evaluated and mixed.
+* ``forward_hard``   (FORWARD_I): each node decision is rounded; a single
+  root-to-leaf path is followed and exactly one leaf is evaluated.
+
+Node/leaf numbering follows the paper: the children of node ``N[m, k]`` are
+``N[m+1, 2k]`` (left, taken with weight ``1 - c``) and ``N[m+1, 2k+1]``
+(right, weight ``c``).  Nodes are stored level-major: global index of
+``N[m, k]`` is ``2^m - 1 + k``.
+
+Beyond-paper extensions (all default-off; the defaults reproduce the paper):
+
+* ``trees > 1``      — a *forest* of independent trees whose outputs are
+  summed; matches MoE top-k active width while keeping O(k*d) routing.
+* ``st_training``    — straight-through top-1 training (O(l) instead of
+  O(2^d * l) per token).
+* SwiGLU leaves      — LLM-style gated leaves for transformer FFN sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class FFFConfig:
+    dim_in: int
+    dim_out: int
+    depth: int                      # d >= 0; 2^d leaves
+    leaf_width: int                 # l
+    node_width: int = 1             # n (paper: n = 1 suffices)
+    activation: str = "gelu"        # leaf hidden activation: relu|gelu|silu|swiglu
+    trees: int = 1                  # forest size; 1 == paper
+    hardening_scale: float = 0.0    # h; 0 disables the hardening loss term
+    transposition_prob: float = 0.0  # randomized child transposition (paper §Overfragmentation)
+    freeze_tree: bool = False       # paper's h = inf: boundaries not trainable
+    leaf_bias: bool = True          # LLM FFNs conventionally drop biases
+    st_training: bool = False       # straight-through top-1 training (beyond paper)
+    param_dtype: Any = jnp.float32
+    accum_dtype: Any = jnp.float32
+
+    @property
+    def num_leaves(self) -> int:
+        return 2 ** self.depth
+
+    @property
+    def num_nodes(self) -> int:
+        return 2 ** self.depth - 1
+
+    @property
+    def training_width(self) -> int:
+        return self.trees * self.num_leaves * self.leaf_width
+
+    @property
+    def inference_width(self) -> int:
+        return self.trees * self.leaf_width
+
+    @property
+    def training_size(self) -> int:
+        return self.trees * (self.num_nodes * self.node_width
+                             + self.num_leaves * self.leaf_width)
+
+    @property
+    def inference_size(self) -> int:
+        return self.trees * (self.depth * self.node_width + self.leaf_width)
+
+    def validate(self) -> "FFFConfig":
+        if self.depth < 0:
+            raise ValueError("depth must be >= 0")
+        if self.leaf_width < 1 or self.node_width < 1 or self.trees < 1:
+            raise ValueError("leaf_width, node_width, trees must be >= 1")
+        if self.activation != "swiglu":
+            utils.get_activation(self.activation)
+        return self
+
+
+def for_ffn(dim: int, d_ff: int, leaf_width: int, *, trees: int = 1,
+            activation: str = "swiglu", **kw) -> FFFConfig:
+    """Paper 'user manual' Case 1: replace a width-``d_ff`` FFN keeping the
+    training width: ``2^d * l * trees == next_pow2(d_ff)``."""
+    per_tree = utils.cdiv(d_ff, trees)
+    depth = max(0, math.ceil(math.log2(max(1, utils.cdiv(per_tree, leaf_width)))))
+    return FFFConfig(dim_in=dim, dim_out=dim, depth=depth, leaf_width=leaf_width,
+                     trees=trees, activation=activation, leaf_bias=False, **kw)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, cfg: FFFConfig) -> Params:
+    """Parameters, stacked over a leading ``trees`` axis.
+
+    node_w1: (T, N, dim_in, n)   node hidden weights
+    node_b1: (T, N, n)
+    node_w2: (T, N, n)           head -> scalar logit (sigmoid applied in fwd)
+    node_b2: (T, N)
+    leaves:
+      gelu/relu: leaf_w1 (T, L, dim_in, l), leaf_b1 (T, L, l),
+                 leaf_w2 (T, L, l, dim_out), leaf_b2 (T, L, dim_out)
+      swiglu:    leaf_wg, leaf_wu (T, L, dim_in, l), leaf_wd (T, L, l, dim_out)
+    """
+    cfg.validate()
+    T, N, L = cfg.trees, cfg.num_nodes, cfg.num_leaves
+    D, O, l, n = cfg.dim_in, cfg.dim_out, cfg.leaf_width, cfg.node_width
+    pd = cfg.param_dtype
+    ks = jax.random.split(key, 8)
+    # Node nets start near p = 0.5 everywhere (balanced tree) with hyperplane
+    # normals of modest norm so boundaries start soft (paper Fig. 1 bottom).
+    params: Params = {
+        "node_w1": utils.truncated_init(ks[0], (T, max(N, 1), D, n), 1.0 / math.sqrt(D), pd),
+        "node_b1": jnp.zeros((T, max(N, 1), n), pd),
+        "node_w2": utils.truncated_init(ks[1], (T, max(N, 1), n), 1.0 / math.sqrt(n), pd),
+        "node_b2": jnp.zeros((T, max(N, 1)), pd),
+    }
+    if cfg.activation == "swiglu":
+        params.update({
+            "leaf_wg": utils.truncated_init(ks[2], (T, L, D, l), 1.0 / math.sqrt(D), pd),
+            "leaf_wu": utils.truncated_init(ks[3], (T, L, D, l), 1.0 / math.sqrt(D), pd),
+            "leaf_wd": utils.truncated_init(ks[4], (T, L, l, O), 1.0 / math.sqrt(l), pd),
+        })
+    else:
+        params.update({
+            "leaf_w1": utils.he_normal(ks[2], (T, L, D, l), pd, fan_in_axis=-2),
+            "leaf_w2": utils.lecun_normal(ks[3], (T, L, l, O), pd, fan_in_axis=-2),
+        })
+        if cfg.leaf_bias:
+            params["leaf_b1"] = jnp.zeros((T, L, l), pd)
+            params["leaf_b2"] = jnp.zeros((T, L, O), pd)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# node math
+# ---------------------------------------------------------------------------
+
+def _node_logits_all(params: Params, cfg: FFFConfig, x: jax.Array) -> jax.Array:
+    """Logits of every node for every token: (B, T, N).
+
+    The node net is <dim_in, n, 1>; for n == 1 the hidden activation is the
+    identity so the boundary is exactly the hyperplane of the single neuron
+    (paper §Regions of responsibility)."""
+    h = jnp.einsum("bd,tndk->btnk", x, params["node_w1"],
+                   preferred_element_type=cfg.accum_dtype)
+    h = h + params["node_b1"][None].astype(cfg.accum_dtype)
+    if cfg.node_width > 1:
+        h = jax.nn.gelu(h)
+    logit = jnp.einsum("btnk,tnk->btn", h, params["node_w2"].astype(cfg.accum_dtype))
+    logit = logit + params["node_b2"][None].astype(cfg.accum_dtype)
+    # pin to data-parallel: node weights are replicated and tiny, but left
+    # unconstrained XLA "helpfully" model-partitions this einsum, adding an
+    # unneeded (tokens, D) psum in its transpose (§Perf iter 3)
+    from repro.distributed import act as _act
+    return _act.shard(logit, _act.NODE_BTN)
+
+
+def _node_logit_at(params: Params, cfg: FFFConfig, x: jax.Array,
+                   gidx: jax.Array) -> jax.Array:
+    """Logit of one (per-token, per-tree) node: x (B, D), gidx (B, T) -> (B, T).
+
+    params['node_w1']: (T, N, D, n); we need per (b, t) the row gidx[b, t] of
+    tree t.  vmap over the tree axis keeps the gather 1-D per tree."""
+    def per_tree(w1_t, b1_t, w2_t, b2_t, idx_t):       # idx_t: (B,)
+        w1_g = jnp.take(w1_t, idx_t, axis=0)           # (B, D, n)
+        b1_g = jnp.take(b1_t, idx_t, axis=0)           # (B, n)
+        w2_g = jnp.take(w2_t, idx_t, axis=0)           # (B, n)
+        b2_g = jnp.take(b2_t, idx_t, axis=0)           # (B,)
+        h = jnp.einsum("bd,bdn->bn", x, w1_g,
+                       preferred_element_type=cfg.accum_dtype)
+        h = h + b1_g.astype(cfg.accum_dtype)
+        if cfg.node_width > 1:
+            h = jax.nn.gelu(h)
+        return jnp.einsum("bn,bn->b", h, w2_g.astype(cfg.accum_dtype)) \
+            + b2_g.astype(cfg.accum_dtype)
+
+    return jax.vmap(per_tree, in_axes=(0, 0, 0, 0, 1), out_axes=1)(
+        params["node_w1"], params["node_b1"], params["node_w2"],
+        params["node_b2"], gidx)
+
+
+def mixture_weights(node_probs: jax.Array, depth: int) -> jax.Array:
+    """Leaf mixture weights from level-major node probabilities.
+
+    node_probs: (..., 2^d - 1) with node (m, k) at index 2^m - 1 + k.
+    Returns (..., 2^d): w[leaf] = prod over path of p (right) / 1-p (left).
+    Weights form a distribution over leaves (sum to 1) by construction.
+    """
+    lead = node_probs.shape[:-1]
+    w = jnp.ones(lead + (1,), node_probs.dtype)
+    off = 0
+    for m in range(depth):
+        p = node_probs[..., off:off + 2 ** m]
+        w = jnp.stack([w * (1.0 - p), w * p], axis=-1).reshape(lead + (2 ** (m + 1),))
+        off += 2 ** m
+    return w
+
+
+# ---------------------------------------------------------------------------
+# leaf math
+# ---------------------------------------------------------------------------
+
+def _leaf_forward_all(params: Params, cfg: FFFConfig, x: jax.Array) -> jax.Array:
+    """Evaluate every leaf of every tree: x (B, D) -> (B, T, L, dim_out)."""
+    ad = cfg.accum_dtype
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("bd,tldh->btlh", x, params["leaf_wg"], preferred_element_type=ad)
+        u = jnp.einsum("bd,tldh->btlh", x, params["leaf_wu"], preferred_element_type=ad)
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("btlh,tlho->btlo", h, params["leaf_wd"],
+                          preferred_element_type=ad)
+    act = utils.get_activation(cfg.activation)
+    h = jnp.einsum("bd,tldh->btlh", x, params["leaf_w1"], preferred_element_type=ad)
+    if "leaf_b1" in params:
+        h = h + params["leaf_b1"][None].astype(ad)
+    h = act(h)
+    y = jnp.einsum("btlh,tlho->btlo", h, params["leaf_w2"], preferred_element_type=ad)
+    if "leaf_b2" in params:
+        y = y + params["leaf_b2"][None].astype(ad)
+    return y
+
+
+def _leaf_forward_gather(params: Params, cfg: FFFConfig, x: jax.Array,
+                         leaf_idx: jax.Array) -> jax.Array:
+    """Evaluate only the selected leaf per (token, tree).
+
+    x (B, D), leaf_idx (B, T) -> (B, T, dim_out).  This is the reference
+    gather path; the production serving path uses the sorted-dispatch ragged
+    GEMM in ``repro.kernels.leaf_gemm`` (see core/routing.py).
+    """
+    ad = cfg.accum_dtype
+
+    def per_tree(tree_params, idx_t):  # idx_t: (B,)
+        def tk(name):
+            return jnp.take(tree_params[name], idx_t, axis=0)
+        if cfg.activation == "swiglu":
+            g = jnp.einsum("bd,bdh->bh", x, tk("leaf_wg"), preferred_element_type=ad)
+            u = jnp.einsum("bd,bdh->bh", x, tk("leaf_wu"), preferred_element_type=ad)
+            h = jax.nn.silu(g) * u
+            return jnp.einsum("bh,bho->bo", h, tk("leaf_wd"), preferred_element_type=ad)
+        act = utils.get_activation(cfg.activation)
+        h = jnp.einsum("bd,bdh->bh", x, tk("leaf_w1"), preferred_element_type=ad)
+        if "leaf_b1" in tree_params:
+            h = h + tk("leaf_b1").astype(ad)
+        h = act(h)
+        y = jnp.einsum("bh,bho->bo", h, tk("leaf_w2"), preferred_element_type=ad)
+        if "leaf_b2" in tree_params:
+            y = y + tk("leaf_b2").astype(ad)
+        return y
+
+    leaf_names = [k for k in params if k.startswith("leaf_")]
+    tree_params = {k: params[k] for k in leaf_names}
+    return jax.vmap(per_tree, in_axes=(0, 1), out_axes=1)(tree_params, leaf_idx)
+
+
+# ---------------------------------------------------------------------------
+# forward passes (paper Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def forward_train(params: Params, cfg: FFFConfig, x: jax.Array,
+                  rng: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
+    """FORWARD_T: soft mixture over all leaves.
+
+    x: (..., dim_in) -> (..., dim_out), plus aux dict with
+    ``node_probs`` (B, T, N), ``mixture`` (B, T, L), ``entropy`` scalar.
+    """
+    xf, lead = utils.flatten_leading(x)
+    xf = xf.astype(cfg.accum_dtype)
+    if cfg.depth == 0:
+        y = _leaf_forward_all(params, cfg, xf)[:, :, 0, :].sum(axis=1)
+        aux = {"node_probs": jnp.zeros((xf.shape[0], cfg.trees, 0), cfg.accum_dtype),
+               "mixture": jnp.ones((xf.shape[0], cfg.trees, 1), cfg.accum_dtype),
+               "entropy": jnp.zeros((), cfg.accum_dtype)}
+        return utils.unflatten_leading(y, lead), aux
+
+    logits = _node_logits_all(params, cfg, xf)            # (B, T, N)
+    if cfg.freeze_tree:                                    # paper's h = inf
+        logits = jax.lax.stop_gradient(logits)
+    probs = jax.nn.sigmoid(logits)
+    if cfg.transposition_prob > 0.0 and rng is not None:
+        # randomized child transposition: swap <1-p, p> -> <p, 1-p> with low
+        # probability, exposing children to neighbouring regions' data.
+        flip = jax.random.bernoulli(rng, cfg.transposition_prob, probs.shape)
+        probs = jnp.where(flip, 1.0 - probs, probs)
+
+    mix = mixture_weights(probs, cfg.depth)               # (B, T, L)
+    ent = bernoulli_entropy(probs).mean()
+
+    if cfg.st_training:
+        y = _forward_straight_through(params, cfg, xf, probs)
+    else:
+        leaf_out = _leaf_forward_all(params, cfg, xf)     # (B, T, L, O)
+        y = jnp.einsum("btl,btlo->bo", mix, leaf_out)
+    aux = {"node_probs": probs, "mixture": mix, "entropy": ent}
+    return utils.unflatten_leading(y, lead), aux
+
+
+def _forward_straight_through(params: Params, cfg: FFFConfig, xf: jax.Array,
+                              probs: jax.Array,
+                              capacity_factor: float = 1.5) -> jax.Array:
+    """Beyond-paper: top-1 training at O(l) leaf cost with an ST estimator.
+
+    The hard path is followed (stop-gradient); the selected leaf output is
+    scaled by ``path_prob + sg(1 - path_prob)`` so the forward value equals
+    the leaf output while gradients flow into the path probabilities.  Leaf
+    execution is the differentiable capacity-bounded grouped dispatch
+    (core/routing.py) — O(B * l * D) compute and memory, EP-shardable; this
+    is what makes trillion-scale FFF-for-MoE training feasible (DESIGN.md §8).
+    """
+    from repro.core import routing as routing_lib
+    B, T = probs.shape[0], probs.shape[1]
+    idx = jnp.zeros((B, T), jnp.int32)
+    path_prob = jnp.ones((B, T), cfg.accum_dtype)
+    off = 0
+    for m in range(cfg.depth):
+        p_level = probs[:, :, off:off + 2 ** m]                       # (B, T, 2^m)
+        p_here = jnp.take_along_axis(p_level, idx[..., None], axis=2)[..., 0]
+        bit = jax.lax.stop_gradient((p_here >= 0.5).astype(jnp.int32))
+        path_prob = path_prob * jnp.where(bit == 1, p_here, 1.0 - p_here)
+        idx = 2 * idx + bit
+        off += 2 ** m
+    scale = path_prob + jax.lax.stop_gradient(1.0 - path_prob)        # (B, T)
+    out = None
+    for t in range(cfg.trees):
+        tree_leaves = {k: v[t] for k, v in params.items()
+                       if k.startswith("leaf_")}
+        y = routing_lib.grouped_leaf_apply(
+            xf, idx[:, t], tree_leaves, cfg.activation,
+            capacity_factor=capacity_factor, accum_dtype=cfg.accum_dtype)
+        y = y * scale[:, t:t + 1]
+        out = y if out is None else out + y
+    return out
+
+
+def forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
+                         capacity_factor: float = 2.0
+                         ) -> tuple[jax.Array, dict]:
+    """FORWARD_I via capacity-bounded grouped dispatch (pure jnp, EP-shardable).
+
+    The lowering-friendly twin of kernels/leaf_gemm.fff_infer: same dispatch
+    structure, expressed in einsums so pjit/SPMD can partition it.  Used by
+    the serving path for MoE-scale FFF sites."""
+    xf, lead = utils.flatten_leading(x)
+    xf = xf.astype(cfg.accum_dtype)
+    from repro.core import routing as routing_lib
+    leaf_idx = route_hard(params, cfg, xf).reshape(xf.shape[0], cfg.trees)
+    out = None
+    for t in range(cfg.trees):
+        tree_leaves = {k: v[t] for k, v in params.items()
+                       if k.startswith("leaf_")}
+        y = routing_lib.grouped_leaf_apply(
+            xf, leaf_idx[:, t], tree_leaves, cfg.activation,
+            capacity_factor=capacity_factor, accum_dtype=cfg.accum_dtype,
+            serving=True)
+        out = y if out is None else out + y
+    return utils.unflatten_leading(out, lead), \
+        {"leaf_idx": leaf_idx.reshape(*lead, cfg.trees)}
+
+
+def route_hard(params: Params, cfg: FFFConfig, x: jax.Array,
+               dense_levels: int = 8) -> jax.Array:
+    """FORWARD_I descent only: x (..., dim_in) -> leaf indices (..., trees).
+
+    Two regimes (DESIGN.md §3): for shallow levels one dense MXU matmul
+    computes every node logit and the descent is a register-local
+    take_along_axis; deep levels fall back to per-token gathers.  The node
+    FLOPs are O(2^min(d,dense) * n) per token — negligible next to the leaf
+    cost for the depths the paper uses (and d <= 8 covers every config here).
+    """
+    xf, lead = utils.flatten_leading(x)
+    xf = xf.astype(cfg.accum_dtype)
+    B = xf.shape[0]
+    idx = jnp.zeros((B, cfg.trees), jnp.int32)
+    nd = min(dense_levels, cfg.depth)
+    if nd > 0:
+        n_dense = 2 ** nd - 1
+        p_dense = {k: (v[:, :n_dense] if k.startswith("node_") else v)
+                   for k, v in params.items()}
+        logits = _node_logits_all(p_dense, cfg, xf)       # (B, T, n_dense)
+        off = 0
+        for m in range(nd):
+            level = logits[:, :, off:off + 2 ** m]        # (B, T, 2^m)
+            cur = jnp.take_along_axis(level, idx[..., None], axis=2)[..., 0]
+            idx = 2 * idx + (cur >= 0).astype(jnp.int32)
+            off += 2 ** m
+    for m in range(nd, cfg.depth):
+        gidx = (2 ** m - 1) + idx
+        logit = _node_logit_at(params, cfg, xf, gidx)     # (B, T)
+        idx = 2 * idx + (logit >= 0).astype(jnp.int32)
+    return idx.reshape(*lead, cfg.trees)
+
+
+def forward_hard(params: Params, cfg: FFFConfig, x: jax.Array) -> tuple[jax.Array, dict]:
+    """FORWARD_I: hard descent + single-leaf evaluation per tree."""
+    xf, lead = utils.flatten_leading(x)
+    xf = xf.astype(cfg.accum_dtype)
+    leaf_idx = route_hard(params, cfg, xf).reshape(xf.shape[0], cfg.trees)
+    y = _leaf_forward_gather(params, cfg, xf, leaf_idx).sum(axis=1)
+    return utils.unflatten_leading(y, lead), {"leaf_idx":
+                                              leaf_idx.reshape(*lead, cfg.trees)}
+
+
+# ---------------------------------------------------------------------------
+# hardening (paper §Hardening)
+# ---------------------------------------------------------------------------
+
+def bernoulli_entropy(p: jax.Array, eps: float = 1e-7) -> jax.Array:
+    """H(Bernoulli(p)) in nats, elementwise, numerically safe at p in {0,1}."""
+    p = jnp.clip(p, eps, 1.0 - eps)
+    return -(p * jnp.log(p) + (1.0 - p) * jnp.log1p(-p))
+
+
+def hardening_loss(node_probs: jax.Array, reduction: str = "mean") -> jax.Array:
+    """L_harden = sum over batch and nodes of H(N(iota)).
+
+    The paper sums; ``mean`` (default) is scale-invariant across depths and is
+    what we use in training loops (the scale is folded into ``h``)."""
+    ent = bernoulli_entropy(node_probs)
+    if reduction == "sum":
+        return ent.sum()
+    return ent.mean()
+
+
+def decision_entropy_per_node(node_probs: jax.Array) -> jax.Array:
+    """Batch-mean Bernoulli entropy per node: (B, T, N) -> (T, N).
+
+    The paper's hardening monitor: below ~0.10 rounding is nearly lossless."""
+    return bernoulli_entropy(node_probs).mean(axis=0)
+
+
+def decisive_fraction(node_probs: jax.Array, threshold: float = 0.10) -> jax.Array:
+    """Fraction of (token, node) decisions whose entropy is below threshold."""
+    return (bernoulli_entropy(node_probs) < threshold).mean()
+
+
+# ---------------------------------------------------------------------------
+# equivalence helper (paper §Size and width)
+# ---------------------------------------------------------------------------
+
+def as_dense_ff_params(params: Params, cfg: FFFConfig) -> Params:
+    """FFF with all node weights zero == vanilla FF with 2^d*l neurons, up to a
+    uniform output rescale of 2^-d (every leaf mixed with weight 2^-d).
+
+    Returns the equivalent dense-FF parameter set (single tree only)."""
+    if cfg.trees != 1 or cfg.activation == "swiglu":
+        raise ValueError("dense equivalence defined for single-tree MLP leaves")
+    L = cfg.num_leaves
+    w1 = params["leaf_w1"][0].transpose(1, 0, 2).reshape(cfg.dim_in, L * cfg.leaf_width)
+    w2 = (params["leaf_w2"][0] * (1.0 / L)).reshape(L * cfg.leaf_width, cfg.dim_out)
+    out: Params = {"w1": w1, "w2": w2}
+    if "leaf_b1" in params:
+        out["b1"] = params["leaf_b1"][0].reshape(L * cfg.leaf_width)
+        out["b2"] = params["leaf_b2"][0].sum(axis=0) * (1.0 / L)
+    return out

@@ -1,0 +1,159 @@
+"""Sparsely-gated mixture-of-experts baseline (Shazeer et al., 2017).
+
+The paper's direct contender: noisy top-k gating over ``E`` expert blocks with
+importance and load-balancing auxiliary losses.  Kept faithful to the original
+formulation (noise = softplus(x @ Wn) * N(0,1); load loss via the normal-CDF
+inclusion probability) because Table 2 compares against exactly this.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.stats import norm
+
+from repro import utils
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    dim_in: int
+    dim_out: int
+    num_experts: int
+    expert_width: int
+    top_k: int = 2
+    activation: str = "gelu"
+    noisy_gating: bool = True
+    w_importance: float = 0.1      # paper's comparison uses 0.1 for both
+    w_load: float = 0.1
+    bias: bool = True
+    param_dtype: Any = jnp.float32
+    accum_dtype: Any = jnp.float32
+
+    @property
+    def training_width(self) -> int:
+        return self.num_experts * self.expert_width
+
+    @property
+    def inference_width(self) -> int:
+        return self.top_k * self.expert_width
+
+
+def init(key: jax.Array, cfg: MoEConfig) -> Params:
+    E, D, H, O = cfg.num_experts, cfg.dim_in, cfg.expert_width, cfg.dim_out
+    ks = jax.random.split(key, 5)
+    pd = cfg.param_dtype
+    p: Params = {
+        "gate_w": jnp.zeros((D, E), pd),          # Shazeer: zero-init gates
+        "noise_w": jnp.zeros((D, E), pd),
+        "expert_w1": utils.he_normal(ks[0], (E, D, H), pd, fan_in_axis=-2),
+        "expert_w2": utils.lecun_normal(ks[1], (E, H, O), pd, fan_in_axis=-2),
+    }
+    if cfg.bias:
+        p["expert_b1"] = jnp.zeros((E, H), pd)
+        p["expert_b2"] = jnp.zeros((E, O), pd)
+    return p
+
+
+def _cv_squared(x: jax.Array, eps: float = 1e-10) -> jax.Array:
+    """Squared coefficient of variation — the balancing loss shape."""
+    x = x.astype(jnp.float32)
+    return x.var() / (x.mean() ** 2 + eps)
+
+
+def _top_k_gates(clean: jax.Array, noisy: jax.Array, noise_std: jax.Array,
+                 k: int, train: bool, num_experts: int
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Gates (B, E) plus the differentiable load estimate (E,)."""
+    logits = noisy if train else clean
+    kk = min(k + 1, num_experts)
+    top_vals, top_idx = jax.lax.top_k(logits, kk)
+    topk_vals = top_vals[:, :k]
+    gates_k = jax.nn.softmax(topk_vals, axis=-1)
+    gates = jnp.zeros_like(logits).at[
+        jnp.arange(logits.shape[0])[:, None], top_idx[:, :k]].set(gates_k)
+
+    if not train or kk <= k:
+        load = (gates > 0).astype(jnp.float32).sum(axis=0)
+        return gates, load
+
+    # P(expert e stays in the top-k when its noise alone is resampled):
+    # threshold is the k-th highest *other* noisy logit (Shazeer App. A).
+    in_topk = (jnp.zeros_like(logits, dtype=bool).at[
+        jnp.arange(logits.shape[0])[:, None], top_idx[:, :k]].set(True))
+    thr_if_in = top_vals[:, k][:, None]        # displaced by the (k+1)-th
+    thr_if_out = top_vals[:, k - 1][:, None]   # must beat the current k-th
+    threshold = jnp.where(in_topk, thr_if_in, thr_if_out)
+    prob = norm.cdf((clean - threshold) / jnp.maximum(noise_std, 1e-4))
+    return gates, prob.sum(axis=0)
+
+
+def forward(params: Params, cfg: MoEConfig, x: jax.Array,
+            rng: Optional[jax.Array] = None, train: bool = True
+            ) -> tuple[jax.Array, dict]:
+    """x (..., D) -> (..., O), aux: gates, aux_loss (importance + load)."""
+    ad = cfg.accum_dtype
+    xf, lead = utils.flatten_leading(x)
+    xf = xf.astype(ad)
+    clean = jnp.einsum("bd,de->be", xf, params["gate_w"], preferred_element_type=ad)
+    if cfg.noisy_gating and train and rng is not None:
+        raw = jnp.einsum("bd,de->be", xf, params["noise_w"], preferred_element_type=ad)
+        noise_std = jax.nn.softplus(raw) + 1e-2
+        noisy = clean + jax.random.normal(rng, clean.shape) * noise_std
+    else:
+        noise_std = jnp.ones_like(clean)
+        noisy = clean
+    gates, load = _top_k_gates(clean, noisy, noise_std, cfg.top_k,
+                               train and cfg.noisy_gating, cfg.num_experts)
+    importance = gates.sum(axis=0)
+    aux_loss = cfg.w_importance * _cv_squared(importance) \
+        + cfg.w_load * _cv_squared(load)
+
+    # Dense combine: evaluate all experts, weight by gates.  (The serving path
+    # reuses the same sorted-dispatch machinery as FFF; see core/routing.py.)
+    act = utils.get_activation(cfg.activation)
+    h = jnp.einsum("bd,edh->beh", xf, params["expert_w1"], preferred_element_type=ad)
+    if "expert_b1" in params:
+        h = h + params["expert_b1"][None].astype(ad)
+    h = act(h)
+    y_e = jnp.einsum("beh,eho->beo", h, params["expert_w2"], preferred_element_type=ad)
+    if "expert_b2" in params:
+        y_e = y_e + params["expert_b2"][None].astype(ad)
+    y = jnp.einsum("be,beo->bo", gates, y_e)
+    aux = {"gates": gates, "aux_loss": aux_loss, "load": load,
+           "importance": importance}
+    return utils.unflatten_leading(y, lead), aux
+
+
+def forward_sparse(params: Params, cfg: MoEConfig, x: jax.Array) -> tuple[jax.Array, dict]:
+    """Inference path: clean top-k, only selected experts evaluated (gathered).
+
+    Complexity is O(g) = O(E) in the gate — the linear cost the paper contrasts
+    with FFF's O(log E) descent (Figures 3-4)."""
+    ad = cfg.accum_dtype
+    xf, lead = utils.flatten_leading(x)
+    xf = xf.astype(ad)
+    clean = jnp.einsum("bd,de->be", xf, params["gate_w"], preferred_element_type=ad)
+    top_vals, top_idx = jax.lax.top_k(clean, cfg.top_k)          # (B, k)
+    gates_k = jax.nn.softmax(top_vals, axis=-1)
+
+    def eval_expert(idx):                                        # idx (B,)
+        w1 = jnp.take(params["expert_w1"], idx, axis=0)          # (B, D, H)
+        w2 = jnp.take(params["expert_w2"], idx, axis=0)
+        h = jnp.einsum("bd,bdh->bh", xf, w1, preferred_element_type=ad)
+        if "expert_b1" in params:
+            h = h + jnp.take(params["expert_b1"], idx, axis=0).astype(ad)
+        h = utils.get_activation(cfg.activation)(h)
+        y = jnp.einsum("bh,bho->bo", h, w2, preferred_element_type=ad)
+        if "expert_b2" in params:
+            y = y + jnp.take(params["expert_b2"], idx, axis=0).astype(ad)
+        return y
+
+    y = sum(eval_expert(top_idx[:, j]) * gates_k[:, j:j + 1]
+            for j in range(cfg.top_k))
+    return utils.unflatten_leading(y, lead), {"expert_idx": top_idx}

@@ -1,0 +1,81 @@
+"""Input-space regionalization utilities (paper §Regions of responsibility).
+
+Each FFF leaf owns one region of the learned tree partition.  For node width
+n = 1 the boundary at each node is the activation hyperplane of its single
+neuron, so every leaf region is an intersection of half-spaces — algebraically
+identifiable, which the paper highlights for interpretability, surgical model
+editing and replay-budget reduction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fff
+
+
+class Halfspace(NamedTuple):
+    normal: np.ndarray   # (dim_in,)
+    offset: float        # region satisfies sign * (normal . x + offset) >= 0
+    sign: int            # +1 if the path took the right child here
+
+
+def leaf_region(params: fff.Params, cfg: fff.FFFConfig, leaf: int,
+                tree: int = 0) -> list[Halfspace]:
+    """The half-space constraints defining ``leaf``'s region of responsibility."""
+    if cfg.node_width != 1:
+        raise ValueError("closed-form regions require node_width == 1")
+    constraints = []
+    idx = 0
+    w1 = np.asarray(params["node_w1"][tree, :, :, 0])
+    b1 = np.asarray(params["node_b1"][tree, :, 0])
+    w2 = np.asarray(params["node_w2"][tree, :, 0])
+    b2 = np.asarray(params["node_b2"][tree])
+    for m in range(cfg.depth):
+        bit = (leaf >> (cfg.depth - 1 - m)) & 1
+        g = 2 ** m - 1 + idx
+        # logit(x) = w2 * (w1 . x + b1) + b2; right child iff logit >= 0
+        normal = w2[g] * w1[g]
+        offset = w2[g] * b1[g] + b2[g]
+        constraints.append(Halfspace(normal, float(offset), +1 if bit else -1))
+        idx = 2 * idx + bit
+    return constraints
+
+
+def region_membership(constraints: list[Halfspace], x: np.ndarray) -> np.ndarray:
+    """Vectorized membership test for a batch of points (B, D) -> (B,) bool."""
+    ok = np.ones(x.shape[0], bool)
+    for c in constraints:
+        val = x @ c.normal + c.offset
+        ok &= (val >= 0) if c.sign > 0 else (val < 0)
+    return ok
+
+
+def partition_histogram(params: fff.Params, cfg: fff.FFFConfig,
+                        x: jax.Array) -> jax.Array:
+    """How many of the given samples fall into each leaf region: (T, 2^d)."""
+    leaf_idx = fff.route_hard(params, cfg, x)        # (B, T)
+    counts = jax.vmap(lambda col: jnp.bincount(col, length=cfg.num_leaves),
+                      in_axes=1)(leaf_idx.reshape(-1, cfg.trees))
+    return counts
+
+
+def is_partition(params: fff.Params, cfg: fff.FFFConfig, x: jax.Array) -> bool:
+    """Every sample belongs to exactly one closed-form region, and it is the
+    region of the leaf FORWARD_I selects — the partition invariant."""
+    xf = np.asarray(x.reshape(-1, cfg.dim_in))
+    routed = np.asarray(fff.route_hard(params, cfg, x)).reshape(-1, cfg.trees)
+    for t in range(cfg.trees):
+        membership = np.zeros(xf.shape[0], dtype=int)
+        agree = np.zeros(xf.shape[0], dtype=bool)
+        for leaf in range(cfg.num_leaves):
+            cons = leaf_region(params, cfg, leaf, tree=t)
+            inside = region_membership(cons, xf)
+            membership += inside.astype(int)
+            agree |= inside & (routed[:, t] == leaf)
+        if not (membership == 1).all() or not agree.all():
+            return False
+    return True

@@ -1,0 +1,222 @@
+"""Token -> leaf dispatch machinery for FFF serving on TPU.
+
+The paper's CUDA implementation exploits per-token offset loads.  On TPU the
+equivalent-cost primitive is *sorted dispatch*: sort tokens by their routed
+leaf id, run a ragged grouped GEMM over contiguous per-leaf token runs, and
+scatter results back (DESIGN.md §3).  This module provides the host-side
+dispatch plan; the GEMM itself lives in ``repro.kernels.leaf_gemm``.
+
+Also provides Switch-style capacity-bounded dispatch (with an optional
+overflow-to-dense fallback) used when serving under adversarial routing skew.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+
+
+class SortedDispatch(NamedTuple):
+    """A plan for grouped execution of tokens sorted by leaf id.
+
+    sort_idx:    (B,) permutation; x_sorted = x[sort_idx]
+    unsort_idx:  (B,) inverse permutation
+    group_sizes: (E,) tokens routed to each leaf (sums to B)
+    group_offsets: (E+1,) exclusive prefix sums of group_sizes
+    leaf_ids_sorted: (B,) leaf id per sorted slot
+    """
+    sort_idx: jax.Array
+    unsort_idx: jax.Array
+    group_sizes: jax.Array
+    group_offsets: jax.Array
+    leaf_ids_sorted: jax.Array
+
+
+def make_sorted_dispatch(leaf_idx: jax.Array, num_leaves: int) -> SortedDispatch:
+    """Build the sorted-dispatch plan from per-token leaf ids (B,)."""
+    B = leaf_idx.shape[0]
+    sort_idx = jnp.argsort(leaf_idx, stable=True)
+    leaf_sorted = jnp.take(leaf_idx, sort_idx)
+    unsort_idx = jnp.argsort(sort_idx)
+    group_sizes = jnp.bincount(leaf_idx, length=num_leaves)
+    group_offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes).astype(jnp.int32)])
+    return SortedDispatch(sort_idx.astype(jnp.int32), unsort_idx.astype(jnp.int32),
+                          group_sizes.astype(jnp.int32), group_offsets,
+                          leaf_sorted.astype(jnp.int32))
+
+
+def apply_sorted(x: jax.Array, plan: SortedDispatch) -> jax.Array:
+    return jnp.take(x, plan.sort_idx, axis=0)
+
+
+def unapply_sorted(y_sorted: jax.Array, plan: SortedDispatch) -> jax.Array:
+    return jnp.take(y_sorted, plan.unsort_idx, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# capacity-bounded dispatch (Switch-transformer style; beyond-paper hardening
+# of FFF serving against routing skew)
+# ---------------------------------------------------------------------------
+
+class CapacityDispatch(NamedTuple):
+    """Dense dispatch/combine plan bounded by per-leaf capacity C.
+
+    dispatch: (B, E, C) one-hot: token b occupies slot (e, c)
+    kept:     (B,) bool; False = token overflowed its leaf's capacity
+    """
+    dispatch: jax.Array
+    kept: jax.Array
+    capacity: int
+
+
+def make_capacity_dispatch(leaf_idx: jax.Array, num_leaves: int,
+                           capacity_factor: float = 1.25) -> CapacityDispatch:
+    B = leaf_idx.shape[0]
+    capacity = max(1, int(capacity_factor * utils.cdiv(B, num_leaves)))
+    onehot = jax.nn.one_hot(leaf_idx, num_leaves, dtype=jnp.int32)     # (B, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot - onehot                 # slot per token
+    slot = jnp.take_along_axis(pos, leaf_idx[:, None], axis=1)[:, 0]
+    kept = slot < capacity
+    slot = jnp.where(kept, slot, 0)
+    dispatch = (jax.nn.one_hot(leaf_idx, num_leaves, dtype=jnp.float32)
+                * kept[:, None])[..., None] * jax.nn.one_hot(
+                    slot, capacity, dtype=jnp.float32)[:, None, :]
+    return CapacityDispatch(dispatch, kept, capacity)
+
+
+def capacity_gather(x: jax.Array, plan: CapacityDispatch) -> jax.Array:
+    """x (B, D) -> per-leaf buffers (E, C, D)."""
+    return jnp.einsum("bec,bd->ecd", plan.dispatch, x)
+
+
+def capacity_scatter(y: jax.Array, plan: CapacityDispatch) -> jax.Array:
+    """(E, C, O) -> (B, O); dropped tokens receive zeros (caller may fall back
+    to a dense path for them — overflow-to-dense, DESIGN.md §8)."""
+    return jnp.einsum("bec,eco->bo", plan.dispatch, y)
+
+
+# ---------------------------------------------------------------------------
+# grouped leaf execution over a sorted plan (pure-jnp reference; the Pallas
+# ragged GEMM in kernels/leaf_gemm implements the same contract)
+# ---------------------------------------------------------------------------
+
+def grouped_leaf_matmul_ref(x_sorted: jax.Array, leaf_ids_sorted: jax.Array,
+                            w: jax.Array) -> jax.Array:
+    """Reference grouped GEMM: y[i] = x_sorted[i] @ w[leaf_ids_sorted[i]].
+
+    x_sorted (B, D), w (E, D, H) -> (B, H).  O(B*D*H) with a per-token gather
+    of the weight block — the oracle for kernels/leaf_gemm.
+    """
+    w_g = jnp.take(w, leaf_ids_sorted, axis=0)          # (B, D, H)
+    return jnp.einsum("bd,bdh->bh", x_sorted, w_g,
+                      preferred_element_type=jnp.float32)
+
+
+def group_slots(leaf_idx: jax.Array, num_groups: int) -> jax.Array:
+    """Per-token slot index within its routed group, O(B log B).
+
+    slot[i] = |{j : leaf[j] == leaf[i], j < i in sorted order}| — computed
+    from sort ranks: rank_in_sorted(i) - group_offset(leaf[i])."""
+    B = leaf_idx.shape[0]
+    sort_idx = jnp.argsort(leaf_idx, stable=True)
+    rank = jnp.zeros((B,), jnp.int32).at[sort_idx].set(
+        jnp.arange(B, dtype=jnp.int32))
+    sizes = jnp.bincount(leaf_idx, length=num_groups)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(sizes)[:-1].astype(jnp.int32)])
+    return rank - jnp.take(offsets, leaf_idx)
+
+
+def grouped_leaf_apply(x: jax.Array, leaf_idx: jax.Array, params: dict,
+                       activation: str, capacity_factor: float = 1.5,
+                       accum_dtype=jnp.float32, serving: bool = False
+                       ) -> jax.Array:
+    """Differentiable capacity-bounded grouped leaf execution (pure jnp).
+
+    The scale path for both ST training and batched serving of MoE-sized FFF
+    layers.  LOCAL dispatch semantics (DESIGN.md §5, §Perf iter 1): the token
+    axis is blocked by the data-shard count G so every scatter/gather stays
+    shard-local under SPMD — capacity is per (shard, leaf), exactly like a
+    production MoE.  Per-leaf GEMMs are batched over (G-data, E-model); the
+    only cross-shard traffic is what the leaf-weight sharding itself implies.
+
+    Tokens over their shard's capacity contribute zeros (standard MoE-style
+    drop; exactness, when needed, comes from the kernels' overflow-to-dense
+    fallback).
+
+    x (B, D); params: single-tree leaf weights {leaf_w1/leaf_w2} or
+    {leaf_wg/leaf_wu/leaf_wd}; returns (B, dim_out).
+    """
+    from repro import utils as _u
+    from repro.distributed import act as _act
+    B, D = x.shape
+    swiglu = "leaf_wg" in params
+    E = (params["leaf_wg"] if swiglu else params["leaf_w1"]).shape[0]
+    G = _act.data_shard_count()
+    if B % G:
+        G = 1
+    Bg = B // G
+    capacity = max(8, _u.round_up(int(capacity_factor * _u.cdiv(Bg, E)), 8))
+
+    xg_ = x.reshape(G, Bg, D)
+    idx_g = leaf_idx.reshape(G, Bg)
+    # slot-within-(shard, leaf) via sort ranks, NOT cumsum(one_hot): XLA
+    # lowers a (B, E) token-axis cumsum to an O(B^2) reduce-window
+    # (measured 260x FLOP inflation at 64 experts — §Perf iter 1).
+    slot = jax.vmap(lambda i: group_slots(i, E))(idx_g)           # (G, Bg)
+    kept = slot < capacity
+    slot_c = jnp.where(kept, slot, capacity - 1)
+    flat_idx = idx_g * capacity + slot_c                          # (G, Bg)
+
+    def scatter_one(xg, fi, kp):
+        buf = jnp.zeros((E * capacity, D), x.dtype)
+        return buf.at[fi].set(jnp.where(kp[:, None], xg, 0.0))
+
+    xbuf = jax.vmap(scatter_one)(xg_, flat_idx, kept)             # (G, E*C, D)
+    xbuf = xbuf.reshape(G, E, capacity, D)
+    dispatch_kind = _act.DISPATCH_SERVE if serving else _act.DISPATCH_ECD
+    xbuf = _act.shard(xbuf, dispatch_kind)
+    ad = accum_dtype
+    if swiglu:
+        g = jnp.einsum("gecd,edh->gech", xbuf, params["leaf_wg"],
+                       preferred_element_type=ad)
+        u = jnp.einsum("gecd,edh->gech", xbuf, params["leaf_wu"],
+                       preferred_element_type=ad)
+        yg = jnp.einsum("gech,eho->geco", jax.nn.silu(g) * u,
+                        params["leaf_wd"], preferred_element_type=ad)
+    else:
+        h = jnp.einsum("gecd,edh->gech", xbuf, params["leaf_w1"],
+                       preferred_element_type=ad)
+        if "leaf_b1" in params:
+            h = h + params["leaf_b1"][None, :, None].astype(ad)
+        h = _u.get_activation(activation)(h)
+        yg = jnp.einsum("gech,eho->geco", h, params["leaf_w2"],
+                        preferred_element_type=ad)
+        if "leaf_b2" in params:
+            yg = yg + params["leaf_b2"][None, :, None].astype(ad)
+    yg = _act.shard(yg, dispatch_kind)
+    O = yg.shape[-1]
+
+    def gather_one(yb, fi, kp):
+        out = jnp.take(yb.reshape(E * capacity, O), fi, axis=0)
+        return jnp.where(kp[:, None], out, 0.0)
+
+    y = jax.vmap(gather_one)(yg, flat_idx, kept)                  # (G, Bg, O)
+    return y.reshape(B, O)
+
+
+def leaf_histogram(leaf_idx: jax.Array, num_leaves: int) -> jax.Array:
+    """Load histogram over leaves; FFF needs no balancing loss (regions are
+    learned geometrically) but serving wants visibility into skew."""
+    return jnp.bincount(leaf_idx.reshape(-1), length=num_leaves)
+
+
+def routing_skew(leaf_idx: jax.Array, num_leaves: int) -> jax.Array:
+    """max-load / mean-load; 1.0 = perfectly balanced."""
+    h = leaf_histogram(leaf_idx, num_leaves).astype(jnp.float32)
+    return h.max() / jnp.maximum(h.mean(), 1e-9)

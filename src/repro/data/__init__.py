@@ -1,0 +1,4 @@
+"""Data pipeline: synthetic image-like and token-stream sources (the
+environment is offline; datasets are procedurally generated with fixed seeds
+so memorization/generalization semantics match the paper's protocol)."""
+from repro.data import pipeline, synthetic, tokens

@@ -1,0 +1,2 @@
+"""Distribution: meshes, sharding rules, compression, fault tolerance."""
+from repro.distributed import act, compression, fault, sharding, straggler

@@ -1,0 +1,77 @@
+"""Activation-sharding constraint points.
+
+Model code calls ``shard(x, kind)`` at block boundaries; the launch layer
+installs a (mesh, rules) context so the same model code runs unsharded on one
+CPU device and fully sharded under pjit on the production mesh.  With no
+context installed this is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _ctx() -> Optional[tuple]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: dict[str, P]):
+    """Install activation sharding rules for the dynamic extent of a trace."""
+    prev = _ctx()
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def data_shard_count() -> int:
+    """Number of data-parallel shards in the installed mesh context (1 when
+    tracing unsharded).  Model code uses this to block token axes so that
+    data-dependent dispatch stays shard-local (DESIGN.md §5)."""
+    ctx = _ctx()
+    if ctx is None:
+        return 1
+    mesh, _ = ctx
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def shard(x: jax.Array, kind: str) -> jax.Array:
+    ctx = _ctx()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.get(kind)
+    if spec is None:
+        return x
+    # pad/truncate the spec to the array rank
+    spec = P(*(tuple(spec) + (None,) * x.ndim)[:x.ndim])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# canonical rule keys used by the model code
+TOKENS_BS = "tokens_bs"          # (B, S) token ids
+ACT_BSD = "act_bsd"              # (B, S, D) residual stream
+LOGITS_BSV = "logits_bsv"        # (B, S, V)
+KV_CACHE = "kv_cache"            # (B, S, K, hd)
+EXPERT_BLD = "expert_bld"        # (B, leaves/experts, ...) mixtures
+DISPATCH_ECD = "dispatch_ecd"    # (G, E, capacity, D) grouped-dispatch
+                                 # buffers, training: G on the data axes so
+                                 # per-leaf GEMMs stay data-parallel
+NODE_BTN = "node_btn"           # (B, T, N) FFF node logits: data-parallel
+DISPATCH_SERVE = "dispatch_serve"  # serving: E on the model axis — tokens
+                                   # travel to the (expert-parallel) leaf
+                                   # shards instead of weights being gathered
+                                   # to tokens (decode reads O(B*l*D) weight
+                                   # bytes, not O(2^d*l*D))

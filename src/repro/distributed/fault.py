@@ -1,0 +1,102 @@
+"""Fault tolerance: the training supervisor (checkpoint/restart loop).
+
+``TrainSupervisor`` wraps a step function with:
+  * periodic checkpointing through CheckpointManager (async, atomic)
+  * crash recovery: on any step exception, restore the latest committed
+    checkpoint and resume (bounded retries, exponential backoff budget)
+  * straggler escalation hooks (distributed/straggler.py): on "eject", the
+    supervisor raises ElasticRemesh so the launcher rebuilds the mesh with the
+    surviving hosts and re-enters with reshard_restore
+
+Failure injection for tests: pass ``failure_hook(step) -> bool``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Optional
+
+from repro.checkpoint.manager import CheckpointManager
+
+log = logging.getLogger("repro.fault")
+
+PyTree = Any
+
+
+class ElasticRemesh(Exception):
+    """Raised to request a re-mesh onto ``surviving_hosts``."""
+
+    def __init__(self, surviving_hosts: list[int]):
+        super().__init__(f"elastic re-mesh onto {len(surviving_hosts)} hosts")
+        self.surviving_hosts = surviving_hosts
+
+
+@dataclasses.dataclass
+class SupervisorConfig:
+    ckpt_every: int = 100
+    max_restarts: int = 5
+    keep: int = 3
+
+
+@dataclasses.dataclass
+class RunResult:
+    state: PyTree
+    step: int
+    restarts: int
+    ejections: int
+
+
+class TrainSupervisor:
+    def __init__(self, manager: CheckpointManager,
+                 cfg: SupervisorConfig = SupervisorConfig()):
+        self.manager = manager
+        self.cfg = cfg
+
+    def run(self, state: PyTree, step_fn: Callable[[PyTree, int], PyTree],
+            num_steps: int, *,
+            failure_hook: Optional[Callable[[int], bool]] = None,
+            straggler_hook: Optional[Callable[[int], Optional[list[int]]]] = None
+            ) -> RunResult:
+        """Run ``num_steps`` of ``step_fn`` with checkpoint/restart semantics.
+
+        step_fn(state, step) -> state.  Deterministic given (state, step), so
+        replay after restore is consistent.
+        """
+        start = 0
+        restarts = 0
+        ejections = 0
+        if self.manager.latest_step() is not None:
+            state, start, _ = self.manager.restore(state)
+            log.info("resuming from step %d", start)
+
+        step = start
+        while step < num_steps:
+            try:
+                if failure_hook is not None and failure_hook(step):
+                    raise RuntimeError(f"injected failure at step {step}")
+                state = step_fn(state, step)
+                step += 1
+                if step % self.cfg.ckpt_every == 0 or step == num_steps:
+                    self.manager.save(step, state)
+                if straggler_hook is not None:
+                    eject = straggler_hook(step)
+                    if eject:
+                        ejections += 1
+                        self.manager.save(step, state, block=True)
+                        raise ElasticRemesh(eject)
+            except ElasticRemesh:
+                raise
+            except Exception as e:                        # noqa: BLE001
+                restarts += 1
+                if restarts > self.cfg.max_restarts:
+                    raise RuntimeError(
+                        f"exceeded {self.cfg.max_restarts} restarts") from e
+                log.warning("step %d failed (%s); restoring", step, e)
+                self.manager.wait()
+                if self.manager.latest_step() is not None:
+                    state, step, _ = self.manager.restore(state)
+                else:
+                    step = 0
+        self.manager.wait()
+        return RunResult(state, step, restarts, ejections)

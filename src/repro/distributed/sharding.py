@@ -1,0 +1,245 @@
+"""Parameter and activation sharding rules (DESIGN.md §5).
+
+Rules are (regex over the parameter path) -> axis assignment, evaluated in
+order; the first match wins.  Axis placeholders:
+
+  MODEL  -> the "model" mesh axis (TP / EP)
+  FSDP   -> the compound batch axes ("pod","data") — ZeRO-3 style parameter
+            sharding, gathered per-layer by SPMD inside the stack scan
+  None   -> replicated
+
+Conventions in this codebase (see the respective modules):
+  stack params carry a leading n_periods scan axis   -> never sharded
+  fff leaf weights (P, T, L, D, l)                    -> L on MODEL (EP), D FSDP
+  moe expert weights (P, E, D, H)                     -> E on MODEL (EP), D FSDP
+  attention wq/wk/wv (P, D, H, hd)                    -> H on MODEL (TP), D FSDP
+  mamba/mlstm in/up projections (P, D, E)             -> E on MODEL (column)
+  mamba/mlstm out/down projections (P, E, D)          -> E on MODEL (row)
+  embeddings (V, D)                                   -> V on MODEL
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+MODEL = "__model__"
+FSDP = "__fsdp__"
+
+# (path regex, LIST of candidate per-dimension assignments aligned to the
+# LAST len(spec) dims; the first candidate whose sharded dims all divide is
+# used).  The leading scan axis (and any unmatched leading dims) is
+# replicated.  Expert/leaf weights fall back to tensor parallelism over the
+# hidden width when the expert count doesn't divide the model axis (e.g.
+# olmoe's 8 leaves/tree on a 16-way axis left the axis idle — §Perf iter 1).
+PARAM_RULES: list[tuple[str, tuple]] = [
+    # --- FFF ---
+    (r".*leaf_w[gu1]$", ((MODEL, FSDP, None),          # (T,L,D,l): L on model
+                         (None, FSDP, MODEL))),        # fallback: l column-TP
+    (r".*leaf_w[d2]$", ((MODEL, None, FSDP),           # (T,L,l,O): L on model
+                        (None, MODEL, FSDP))),         # fallback: l row-TP
+    (r".*leaf_b[12]$", ((MODEL, None),)),              # (T,L,l)
+    (r".*node_w1$", ((None, FSDP, None),)),            # (T,N,D,n)
+    (r".*node_(b1|w2|b2)$", ((None, None),)),
+    # --- MoE ---
+    (r".*expert_w1$", ((MODEL, FSDP, None),            # (E,D,H)
+                       (None, FSDP, MODEL))),
+    (r".*expert_w2$", ((MODEL, None, FSDP),            # (E,H,O)
+                       (None, MODEL, FSDP))),
+    (r".*expert_b[12]$", ((MODEL, None),)),
+    (r".*(gate_w|noise_w)$", ((FSDP, None),)),
+    # --- dense FF (megatron column/row) ---
+    (r".*ffn/w(g|u|1)$", ((FSDP, MODEL),)),            # (D,H)
+    (r".*ffn/w(d|2)$", ((MODEL, FSDP),)),              # (H,D)
+    (r".*ffn/b1$", ((MODEL,),)),
+    (r".*ffn/b2$", ((None,),)),
+    # --- attention ---
+    (r".*(mixer|cross)/w[qkv]$", ((FSDP, MODEL, None),  # (D,H,hd) heads model
+                                  (FSDP, None, MODEL))),  # fallback: hd TP
+    (r".*(mixer|cross)/wo$", ((MODEL, None, FSDP),      # (H,hd,D)
+                              (None, MODEL, FSDP))),
+    (r".*(mixer|cross)/b[qkv]$", ((MODEL, None),)),
+    (r".*(mixer|cross)/bo$", ((None,),)),
+    # --- mamba ---
+    (r".*mixer/in_proj$", ((FSDP, MODEL),)),
+    (r".*mixer/out_proj$", ((MODEL, FSDP),)),
+    (r".*mixer/(conv_w|conv_b|dt_bias|A_log|D_skip)$", ((None, MODEL),)),
+    (r".*mixer/x_proj$", ((MODEL, None),)),
+    (r".*mixer/dt_proj$", ((None, MODEL),)),
+    # --- xlstm ---
+    (r".*mixer/up_proj$", ((FSDP, MODEL),)),
+    (r".*mixer/down_proj$", ((MODEL, FSDP),)),
+    (r".*mixer/w[qkv]$", ((MODEL, None, None),)),       # (DI,H,hd)->DI model
+    (r".*mixer/w_if$", ((MODEL, None),)),
+    (r".*mixer/w_h$", ((None, None, None),)),
+    (r".*mixer/(b_if|b|gn_scale)$", ((None,),)),
+    (r".*mixer/w_x$", ((FSDP, MODEL),)),
+    # --- embeddings / head / frontends ---
+    (r".*embed/tok$", ((MODEL, FSDP),)),                # (V,D) vocab-sharded
+    (r".*embed/head$", ((FSDP, MODEL),)),
+    (r".*pos/pos$", ((None, None),)),
+    (r".*frontend/proj$", ((None, MODEL),)),
+    (r".*frontend/bias$", ((MODEL,),)),
+    # --- norms & fallback ---
+    (r".*(norm|scale|bias).*", ()),
+    (r".*", ()),
+]
+
+# activation rules consumed by distributed/act.py
+def activation_rules(mesh: Mesh) -> dict:
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    model = "model" if "model" in mesh.axis_names else None
+    from repro.distributed import act
+    return {
+        act.TOKENS_BS: P(batch_axes),
+        act.ACT_BSD: P(batch_axes, None, None),
+        act.LOGITS_BSV: P(batch_axes, None, model),
+        act.KV_CACHE: P(batch_axes, None, None, None),
+        act.NODE_BTN: P(batch_axes, None, None),
+        act.DISPATCH_ECD: P(batch_axes, None, None, None),  # (G, E, C, D)
+        act.DISPATCH_SERVE: P(None, model, None, None),     # (G, E, C, D)
+    }
+
+
+def _try_resolve(assign: tuple, ndim: int, mesh: Mesh, shape: tuple
+                 ) -> tuple[P, bool]:
+    """Align the rule to the trailing dims; replicate leading (scan) dims.
+    Returns (spec, complete) — complete=False if any requested sharding had
+    to be dropped for divisibility (a fallback candidate should be tried)."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    fsdp_size = int(np.prod([mesh.shape[a] for a in batch_axes])) \
+        if batch_axes else 1
+    model_size = mesh.shape.get("model", 1)
+    out: list = [None] * ndim
+    complete = True
+    k = ndim - len(assign)
+    for i, a in enumerate(assign):
+        if k + i < 0:
+            continue
+        dim = shape[k + i]
+        if a == MODEL:
+            if "model" in mesh.axis_names and dim % model_size == 0 \
+                    and dim >= model_size:
+                out[k + i] = "model"
+            elif "model" in mesh.axis_names:
+                complete = False
+        elif a == FSDP:
+            if batch_axes and dim % fsdp_size == 0 and dim >= fsdp_size:
+                out[k + i] = batch_axes if len(batch_axes) > 1 \
+                    else batch_axes[0]
+            elif batch_axes:
+                complete = False
+    return P(*out), complete
+
+
+def spec_for_path(path: str, ndim: int, mesh: Mesh, shape: tuple,
+                  fsdp: bool = True) -> P:
+    for pattern, candidates in PARAM_RULES:
+        if re.match(pattern, path):
+            if not candidates:
+                return P()
+            best = P()
+            for assign in candidates:
+                if not fsdp:
+                    assign = tuple(None if a == FSDP else a for a in assign)
+                spec, complete = _try_resolve(assign, ndim, mesh, shape)
+                if complete:
+                    return spec
+                if tuple(best) == () or tuple(best).count(None) == len(best):
+                    best = spec
+            return best
+    return P()
+
+
+def path_of(key_path) -> str:
+    parts = []
+    for p in key_path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params: PyTree, mesh: Mesh, fsdp: bool = True) -> PyTree:
+    """PartitionSpec pytree matching ``params``.
+
+    fsdp=True  -> ZeRO-3 layout (params sharded over the batch axes too)
+    fsdp=False -> ZeRO-1 layout (params model-sharded, data-replicated);
+                  optimizer moments always use fsdp=True so the update and
+                  param all-gather happen once per step, not per layer."""
+    def spec(kp, leaf):
+        return spec_for_path(path_of(kp), np.ndim(leaf), mesh,
+                             tuple(np.shape(leaf)), fsdp=fsdp)
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(params: PyTree, mesh: Mesh, fsdp: bool = True) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh, fsdp),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_params(params: PyTree, mesh: Mesh, fsdp: bool = True) -> PyTree:
+    """Place an existing (host/single-device) param tree onto the mesh."""
+    sh = param_shardings(params, mesh, fsdp)
+    return jax.tree_util.tree_map(jax.device_put, params, sh)
+
+
+# ---------------------------------------------------------------------------
+# cache/state shardings for serving
+# ---------------------------------------------------------------------------
+
+def cache_specs(caches: PyTree, mesh: Mesh, batch: int, *,
+                seq_shard_below_batch: bool = True) -> PyTree:
+    """KV caches: batch on data axes when divisible; for tiny batches
+    (long-context decode) shard the *sequence* dim instead (DESIGN.md §5)."""
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    fsdp_size = int(np.prod([mesh.shape[a] for a in batch_axes])) \
+        if batch_axes else 1
+    dp = batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes
+                                                 else None)
+
+    model_size = mesh.shape.get("model", 1)
+
+    def spec(kp, leaf):
+        shape = tuple(np.shape(leaf))
+        nd = len(shape)
+        path = path_of(kp)
+        is_kv = ("kv/" in path) or path.endswith(("/k", "/v")) \
+            or ("cross_" in path)
+        if is_kv and nd == 5:                       # (n_periods, B, S, K, hd)
+            # the model axis carries KV heads when they divide it (olmoe's
+            # MHA), otherwise the SEQUENCE dim (context parallelism): decode
+            # softmax over a sharded S lowers to tiny (B,K,G) stat psums and
+            # the cache never replicates across the model axis — replication
+            # both OOMs and wastes cache bandwidth (§Perf iter 2).
+            m_k = m_s = None
+            if "model" in mesh.axis_names:
+                if shape[3] % model_size == 0 and shape[3] >= model_size:
+                    m_k = "model"
+                elif shape[2] % model_size == 0 and shape[2] >= model_size:
+                    m_s = "model"
+            if batch % fsdp_size == 0 and batch >= fsdp_size:
+                return P(None, dp, m_s, m_k, None)
+            if seq_shard_below_batch and shape[2] % fsdp_size == 0 \
+                    and shape[2] >= fsdp_size:
+                dp_s = (tuple([a for a in (dp if isinstance(dp, tuple)
+                                           else (dp,))]) + ((m_s,) if m_s
+                                                            else ()))
+                return P(None, None, dp_s, m_k, None)
+            return P(None, None, m_s, m_k, None)
+        # recurrent states / lengths: (n_periods, B, ...) batch-shard if divisible
+        if nd >= 2 and shape[1] == batch and batch % fsdp_size == 0 \
+                and batch >= fsdp_size:
+            return P(*([None, dp] + [None] * (nd - 2)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, caches)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the FFF hot spots (DESIGN.md §3):
+
+  tree_router  — fused multi-level tree descent (routing)
+  leaf_gemm    — ragged grouped GEMM over sorted tokens (batch serving)
+  fused_fff    — per-token gathered leaf matmul (decode; the paper's
+                 offset-load, expressed as a scalar-prefetch index map)
+
+Each kernel ships ops.py (jit wrapper) and ref.py (pure-jnp oracle); tests
+sweep shapes x dtypes in interpret mode against the oracle.
+"""
+from repro.kernels import fused_fff, leaf_gemm, tree_router

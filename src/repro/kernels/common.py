@@ -1,0 +1,22 @@
+"""Shared kernel plumbing: interpret-mode autodetection, tiling helpers."""
+from __future__ import annotations
+
+import jax
+
+from repro import utils
+
+
+def default_interpret() -> bool:
+    """Pallas kernels target TPU; everywhere else run the interpreter
+    (bit-accurate Python execution of the kernel body — how this CPU container
+    validates them)."""
+    return jax.default_backend() != "tpu"
+
+
+def pick_tile(n: int, preferred: int, align: int = 8) -> int:
+    """Largest tile <= preferred that divides n, preferring MXU-aligned."""
+    preferred = min(preferred, n)
+    for t in range(preferred, 0, -1):
+        if n % t == 0 and (t % align == 0 or t == n or t < align):
+            return t
+    return 1

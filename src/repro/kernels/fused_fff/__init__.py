@@ -1,0 +1,4 @@
+from repro.kernels.fused_fff.kernel import gathered_matmul, gathered_matmul_dual
+from repro.kernels.fused_fff.ops import fff_decode, gathered_leaf_mlp
+from repro.kernels.fused_fff.ref import (gathered_matmul_dual_ref,
+                                         gathered_matmul_ref)

@@ -1,0 +1,139 @@
+"""Pallas TPU kernel: per-token gathered leaf matmul (decode path).
+
+The most literal TPU analogue of the paper's CUDA observation that selective
+weight indexing is "a simple offset in the data load": the scalar-prefetched
+``leaf_idx`` drives the weight BlockSpec ``index_map``, so the pipeline DMAs
+exactly one leaf's weight tiles from HBM per token — HBM traffic is
+O(l * D) per token instead of O(2^d * l * D).  Decode is memory-bound, so this
+IS the paper's speedup mechanism on TPU (roofline: memory term, §Perf).
+
+Used for small decode batches where the sort/scatter of the grouped path
+costs more than it saves; the crossover is measured in EXPERIMENTS.md §Perf.
+
+Grid: (B, H/bh, D/bk), k innermost, accumulation in a VMEM f32 scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_ACTS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def _gathered_kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, act: str,
+                     out_dtype):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = _ACTS[act](acc_ref[...]).astype(out_dtype)
+
+
+def gathered_matmul(x: jax.Array, w: jax.Array, leaf_idx: jax.Array, *,
+                    act: str = "none", block_h: int = 512, block_k: int = 512,
+                    interpret: bool = False, out_dtype=None) -> jax.Array:
+    """y[i] = act(x[i] @ w[leaf_idx[i]]).  x (B, D), w (E, D, H) -> (B, H).
+
+    The weight tile fetched at grid step (i, h, k) is w[leaf_idx[i], k, h] —
+    the scalar-prefetch index map is the offset-load."""
+    B, D = x.shape
+    E, _, H = w.shape
+    out_dtype = out_dtype or x.dtype
+    bh = min(block_h, H)
+    bk = min(block_k, D)
+    while H % bh:
+        bh -= 1
+    while D % bk:
+        bk -= 1
+    grid = (B, H // bh, D // bk)
+    return pl.pallas_call(
+        functools.partial(_gathered_kernel, act=act, out_dtype=out_dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bk), lambda i, h, k, idx: (i, k)),
+                pl.BlockSpec((1, bk, bh), lambda i, h, k, idx: (idx[i], k, h)),
+            ],
+            out_specs=pl.BlockSpec((1, bh), lambda i, h, k, idx: (i, h)),
+            scratch_shapes=[pltpu.VMEM((1, bh), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H), out_dtype),
+        interpret=interpret,
+    )(leaf_idx, x, w)
+
+
+def _gathered_dual_kernel(idx_ref, x_ref, wg_ref, wu_ref, o_ref, accg_ref,
+                          accu_ref, *, out_dtype):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    xt = x_ref[...]
+    accg_ref[...] += jax.lax.dot_general(
+        xt, wg_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    accu_ref[...] += jax.lax.dot_general(
+        xt, wu_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = (jax.nn.silu(accg_ref[...])
+                      * accu_ref[...]).astype(out_dtype)
+
+
+def gathered_matmul_dual(x: jax.Array, wg: jax.Array, wu: jax.Array,
+                         leaf_idx: jax.Array, *, block_h: int = 512,
+                         block_k: int = 512, interpret: bool = False,
+                         out_dtype=None) -> jax.Array:
+    """SwiGLU up with per-token leaf selection: (B, D) -> (B, H)."""
+    B, D = x.shape
+    E, _, H = wg.shape
+    out_dtype = out_dtype or x.dtype
+    bh = min(block_h, H)
+    bk = min(block_k, D)
+    while H % bh:
+        bh -= 1
+    while D % bk:
+        bk -= 1
+    grid = (B, H // bh, D // bk)
+    return pl.pallas_call(
+        functools.partial(_gathered_dual_kernel, out_dtype=out_dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bk), lambda i, h, k, idx: (i, k)),
+                pl.BlockSpec((1, bk, bh), lambda i, h, k, idx: (idx[i], k, h)),
+                pl.BlockSpec((1, bk, bh), lambda i, h, k, idx: (idx[i], k, h)),
+            ],
+            out_specs=pl.BlockSpec((1, bh), lambda i, h, k, idx: (i, h)),
+            scratch_shapes=[pltpu.VMEM((1, bh), jnp.float32),
+                            pltpu.VMEM((1, bh), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H), out_dtype),
+        interpret=interpret,
+    )(leaf_idx, x, wg, wu)

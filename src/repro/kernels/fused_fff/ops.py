@@ -1,0 +1,63 @@
+"""Jitted decode path: route + per-token gathered leaf MLP (no sort/scatter).
+
+``fff_decode`` is exact (no capacity bound — every token fetches its own
+leaf).  Preferred over the grouped path when B is small (decode); crossover
+vs. the sorted-dispatch path measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+from repro.core import fff as fff_lib
+from repro.kernels import common
+from repro.kernels.fused_fff import kernel as K
+from repro.kernels.tree_router import ops as router_ops
+
+
+@partial(jax.jit, static_argnames=("activation", "interpret", "block_h",
+                                   "block_k"))
+def gathered_leaf_mlp(x: jax.Array, leaf_idx: jax.Array, params: dict, *,
+                      activation: str = "gelu",
+                      interpret: Optional[bool] = None,
+                      block_h: int = 512, block_k: int = 512) -> jax.Array:
+    if interpret is None:
+        interpret = common.default_interpret()
+    if "leaf_b1" in params or "leaf_b2" in params:
+        raise ValueError("kernel path requires bias-free leaves")
+    kw = dict(block_h=block_h, block_k=block_k, interpret=interpret)
+    if "leaf_wg" in params:
+        h = K.gathered_matmul_dual(x, params["leaf_wg"], params["leaf_wu"],
+                                   leaf_idx, **kw)
+        return K.gathered_matmul(h, params["leaf_wd"], leaf_idx,
+                                 act="none", **kw)
+    h = K.gathered_matmul(x, params["leaf_w1"], leaf_idx, act=activation, **kw)
+    return K.gathered_matmul(h, params["leaf_w2"], leaf_idx, act="none", **kw)
+
+
+def fff_decode(x: jax.Array, params: dict, cfg: fff_lib.FFFConfig, *,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Exact FORWARD_I via router kernel + gathered leaf kernels.
+
+    x (B, D) -> (B, dim_out); sums over forest trees."""
+    if cfg.node_width != 1:
+        raise ValueError("kernel path supports node_width == 1 (paper default)")
+    out = None
+    for t in range(cfg.trees):
+        nw = params["node_w1"][t, :, :, 0] * params["node_w2"][t, :, 0:1]
+        nb = params["node_b1"][t, :, 0] * params["node_w2"][t, :, 0] \
+            + params["node_b2"][t]
+        leaf_idx = router_ops.route(x, nw, nb, depth=cfg.depth,
+                                    interpret=interpret)
+        tree_leaves = {k: v[t] for k, v in params.items()
+                       if k.startswith("leaf_")}
+        y = gathered_leaf_mlp(
+            x, leaf_idx, tree_leaves,
+            activation=cfg.activation if cfg.activation != "swiglu" else "swiglu",
+            interpret=interpret)
+        out = y if out is None else out + y
+    return out

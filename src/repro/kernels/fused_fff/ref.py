@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the gathered (per-token) leaf matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def gathered_matmul_ref(x: jax.Array, w: jax.Array, leaf_idx: jax.Array, *,
+                        act: str = "none") -> jax.Array:
+    wg = jnp.take(w, leaf_idx, axis=0)                    # (B, D, H)
+    y = jnp.einsum("bd,bdh->bh", x.astype(jnp.float32), wg.astype(jnp.float32))
+    return _ACTS[act](y).astype(x.dtype)
+
+
+def gathered_matmul_dual_ref(x: jax.Array, wg: jax.Array, wu: jax.Array,
+                             leaf_idx: jax.Array) -> jax.Array:
+    g = gathered_matmul_ref(x, wg, leaf_idx, act="none").astype(jnp.float32)
+    u = gathered_matmul_ref(x, wu, leaf_idx, act="none").astype(jnp.float32)
+    return (jax.nn.silu(g) * u).astype(x.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.leaf_gemm.kernel import grouped_matmul, grouped_matmul_dual
+from repro.kernels.leaf_gemm.ops import (fff_infer, fff_leaf_mlp,
+                                         gather_from_groups, scatter_to_groups)
+from repro.kernels.leaf_gemm.ref import (grouped_matmul_dual_ref,
+                                         grouped_matmul_ref)

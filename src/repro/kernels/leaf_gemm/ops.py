@@ -1,0 +1,151 @@
+"""Jitted wrappers: sorted-dispatch scatter/gather plumbing and the complete
+TPU-native FFF inference path (route -> sort -> grouped GEMMs -> unsort).
+
+This is the production serving path for FFF layers (DESIGN.md §3).  The
+capacity-padded layout turns the ragged problem into a statically-shaped one;
+tokens overflowing a leaf's capacity fall back to the exact gather path
+(overflow-to-dense, DESIGN.md §8) so results are always exact.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+from repro.core import fff as fff_lib
+from repro.core import routing as routing_lib
+from repro.kernels import common
+from repro.kernels.leaf_gemm import kernel as K
+from repro.kernels.tree_router import ops as router_ops
+
+
+class GroupedLayout(NamedTuple):
+    x_grouped: jax.Array      # (E, C, D) capacity-padded sorted tokens
+    leaf_idx: jax.Array       # (B,) routed leaf per original token
+    slot: jax.Array           # (B,) slot within the leaf's buffer
+    kept: jax.Array           # (B,) bool: token fit under capacity
+    group_sizes: jax.Array    # (E,) clipped to capacity
+
+
+def scatter_to_groups(x: jax.Array, leaf_idx: jax.Array, num_leaves: int,
+                      capacity: int) -> GroupedLayout:
+    """x (B, D) -> capacity-padded per-leaf buffers.  O(B log B) sort +
+    O(B) scatter (no (B, E) cumsum — see core/routing.group_slots)."""
+    B, D = x.shape
+    slot = routing_lib.group_slots(leaf_idx, num_leaves)
+    kept = slot < capacity
+    slot_c = jnp.where(kept, slot, capacity - 1)
+    flat_idx = leaf_idx * capacity + slot_c
+    xg = jnp.zeros((num_leaves * capacity, D), x.dtype)
+    xg = xg.at[flat_idx].set(jnp.where(kept[:, None], x, 0.0),
+                             mode="drop")
+    sizes = jnp.minimum(jnp.bincount(leaf_idx, length=num_leaves), capacity)
+    return GroupedLayout(xg.reshape(num_leaves, capacity, D), leaf_idx,
+                         slot_c, kept, sizes.astype(jnp.int32))
+
+
+def gather_from_groups(y_grouped: jax.Array, layout: GroupedLayout
+                       ) -> jax.Array:
+    """(E, C, O) -> per-token outputs (B, O); overflowed tokens get zeros."""
+    E, C, O = y_grouped.shape
+    flat = y_grouped.reshape(E * C, O)
+    idx = layout.leaf_idx * C + layout.slot
+    y = jnp.take(flat, idx, axis=0)
+    return jnp.where(layout.kept[:, None], y, 0.0)
+
+
+@partial(jax.jit, static_argnames=("activation", "capacity_factor",
+                                   "interpret", "block_c", "block_h",
+                                   "block_k"))
+def fff_leaf_mlp(x: jax.Array, leaf_idx: jax.Array, params: dict, *,
+                 activation: str = "gelu", capacity_factor: float = 2.0,
+                 interpret: Optional[bool] = None, block_c: int = 128,
+                 block_h: int = 512, block_k: int = 512) -> jax.Array:
+    """Evaluate each token's routed leaf MLP via the grouped kernels.
+
+    params: single-tree leaf weights — MLP: {leaf_w1 (E,D,l), leaf_w2 (E,l,O)}
+    or SwiGLU: {leaf_wg, leaf_wu, leaf_wd}.  Returns (B, O).
+    """
+    if interpret is None:
+        interpret = common.default_interpret()
+    if "leaf_b1" in params or "leaf_b2" in params:
+        # biases break the zero-row padding invariant; transformer FFF sites
+        # are bias-free (LLM convention).  Small biased MLPs use the core path.
+        raise ValueError("kernel path requires bias-free leaves")
+    B, D = x.shape
+    swiglu = "leaf_wg" in params
+    E = (params["leaf_wg"] if swiglu else params["leaf_w1"]).shape[0]
+    capacity = max(block_c,
+                   utils.round_up(int(capacity_factor * utils.cdiv(B, E)),
+                                  block_c))
+    layout = scatter_to_groups(x, leaf_idx, E, capacity)
+    kw = dict(block_c=block_c, block_h=block_h, block_k=block_k,
+              interpret=interpret)
+    if swiglu:
+        h = K.grouped_matmul_dual(layout.x_grouped, params["leaf_wg"],
+                                  params["leaf_wu"], layout.group_sizes, **kw)
+        yg = K.grouped_matmul(h, params["leaf_wd"], layout.group_sizes,
+                              act="none", **kw)
+    else:
+        act = "gelu" if activation == "gelu" else activation
+        h = K.grouped_matmul(layout.x_grouped, params["leaf_w1"],
+                             layout.group_sizes, act=act, **kw)
+        yg = K.grouped_matmul(h, params["leaf_w2"], layout.group_sizes,
+                              act="none", **kw)
+    y = gather_from_groups(yg, layout)
+
+    # overflow-to-dense fallback: exact gather path for dropped tokens
+    any_dropped = jnp.logical_not(layout.kept.all())
+
+    def fallback(y):
+        dense = _exact_gather_leaf(x, leaf_idx, params, swiglu, activation)
+        return jnp.where(layout.kept[:, None], y, dense)
+
+    return jax.lax.cond(any_dropped, fallback, lambda y: y, y)
+
+
+def _exact_gather_leaf(x, leaf_idx, params, swiglu, activation):
+    if swiglu:
+        wg = jnp.take(params["leaf_wg"], leaf_idx, axis=0)
+        wu = jnp.take(params["leaf_wu"], leaf_idx, axis=0)
+        wd = jnp.take(params["leaf_wd"], leaf_idx, axis=0)
+        g = jnp.einsum("bd,bdh->bh", x, wg, preferred_element_type=jnp.float32)
+        u = jnp.einsum("bd,bdh->bh", x, wu, preferred_element_type=jnp.float32)
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("bh,bho->bo", h, wd,
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+    w1 = jnp.take(params["leaf_w1"], leaf_idx, axis=0)
+    w2 = jnp.take(params["leaf_w2"], leaf_idx, axis=0)
+    h = jnp.einsum("bd,bdh->bh", x, w1, preferred_element_type=jnp.float32)
+    h = utils.get_activation(activation)(h)
+    return jnp.einsum("bh,bho->bo", h, w2,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def fff_infer(x: jax.Array, params: dict, cfg: fff_lib.FFFConfig, *,
+              capacity_factor: float = 2.0,
+              interpret: Optional[bool] = None) -> jax.Array:
+    """Full TPU-native FORWARD_I for a (possibly multi-tree) FFF layer:
+    kernel-routed descent + grouped leaf GEMMs.  x (B, D) -> (B, dim_out)."""
+    if cfg.node_width != 1:
+        raise ValueError("kernel path supports node_width == 1 (paper default)")
+    B = x.shape[0]
+    out = None
+    for t in range(cfg.trees):
+        # collapse the <D, 1, 1> node net to a hyperplane (w2 * w1, w2*b1+b2)
+        nw = params["node_w1"][t, :, :, 0] * params["node_w2"][t, :, 0:1]
+        nb = params["node_b1"][t, :, 0] * params["node_w2"][t, :, 0] \
+            + params["node_b2"][t]
+        leaf_idx = router_ops.route(x, nw, nb, depth=cfg.depth,
+                                    interpret=interpret)
+        tree_leaves = {k: v[t] for k, v in params.items()
+                       if k.startswith("leaf_")}
+        y = fff_leaf_mlp(x, leaf_idx, tree_leaves,
+                         activation=cfg.activation if cfg.activation != "swiglu"
+                         else "swiglu",
+                         capacity_factor=capacity_factor, interpret=interpret)
+        out = y if out is None else out + y
+    return out

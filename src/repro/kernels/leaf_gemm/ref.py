@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the grouped leaf GEMM kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
+                       act: str = "none") -> jax.Array:
+    """x (E, C, D) @ w (E, D, H) -> (E, C, H); rows beyond each group's size
+    produce zeros (matching the kernel's skip semantics at tile granularity is
+    up to the caller — the oracle zeroes *exactly* at group_sizes)."""
+    y = jnp.einsum("ecd,edh->ech", x.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    y = _ACTS[act](y)
+    C = x.shape[1]
+    mask = jnp.arange(C)[None, :] < group_sizes[:, None]
+    return (y * mask[..., None]).astype(x.dtype)
+
+
+def grouped_matmul_dual_ref(x: jax.Array, wg: jax.Array, wu: jax.Array,
+                            group_sizes: jax.Array) -> jax.Array:
+    g = jnp.einsum("ecd,edh->ech", x.astype(jnp.float32), wg.astype(jnp.float32))
+    u = jnp.einsum("ecd,edh->ech", x.astype(jnp.float32), wu.astype(jnp.float32))
+    y = jax.nn.silu(g) * u
+    C = x.shape[1]
+    mask = jnp.arange(C)[None, :] < group_sizes[:, None]
+    return (y * mask[..., None]).astype(x.dtype)

@@ -1,0 +1,2 @@
+from repro.kernels.tree_router.ops import route, route_forest
+from repro.kernels.tree_router.ref import tree_router_ref

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fused FFF tree descent (FORWARD_I routing).
+
+TPU adaptation of the paper's per-token offset loads (DESIGN.md §3): the node
+weight matrix of the whole tree lives in VMEM; ONE MXU matmul computes every
+node logit for the token tile, and the d-level descent then runs entirely on
+registers/VMEM with ``take_along_axis`` (a sublane dynamic gather) — no HBM
+traffic per level.
+
+For node counts where the full matrix no longer pays off (deep trees), ops.py
+caps the dense phase at ``dense_levels`` and finishes the descent with the
+pure-JAX gather path; the crossover arithmetic is worked out in DESIGN.md §8
+and measured in EXPERIMENTS.md §Perf.
+
+Grid: (B // block_b,).  VMEM per step: block_b*D (x tile) + N*D (node weights)
++ block_b*N (logits); with the default block_b=256, d=6, D=7168, bf16 that is
+3.5 MiB + 0.9 MiB + 32 KiB — comfortably inside the ~16 MiB VMEM budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _router_kernel(x_ref, nw_ref, nb_ref, idx_ref, *, depth: int):
+    x = x_ref[...]                                           # (bB, D)
+    nw = nw_ref[...]                                         # (N, D)
+    logits = jax.lax.dot_general(
+        x, nw, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (bB, N)
+    logits = logits + nb_ref[...][None, :].astype(jnp.float32)
+    bB = x.shape[0]
+    idx = jnp.zeros((bB, 1), jnp.int32)
+    off = 0
+    for m in range(depth):
+        level = logits[:, off:off + 2 ** m]                  # (bB, 2^m) static
+        cur = jnp.take_along_axis(level, idx, axis=1)        # (bB, 1)
+        idx = 2 * idx + (cur >= 0.0).astype(jnp.int32)
+        off += 2 ** m
+    idx_ref[...] = idx[:, 0]
+
+
+def tree_router(x: jax.Array, node_w: jax.Array, node_b: jax.Array, *,
+                depth: int, block_b: int = 256,
+                interpret: bool = False) -> jax.Array:
+    """x (B, D), node_w (N, D), node_b (N,) with N = 2^depth - 1 -> (B,) int32
+    leaf indices.  B must be a multiple of block_b (ops.py pads)."""
+    B, D = x.shape
+    N = node_w.shape[0]
+    assert N == 2 ** depth - 1, (N, depth)
+    assert B % block_b == 0, (B, block_b)
+    grid = (B // block_b,)
+    return pl.pallas_call(
+        functools.partial(_router_kernel, depth=depth),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, D), lambda i: (i, 0)),
+            pl.BlockSpec((N, D), lambda i: (0, 0)),
+            pl.BlockSpec((N,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )(x, node_w, node_b)

@@ -1,0 +1,61 @@
+"""Jitted wrapper for the tree_router kernel: padding, the dense/gather level
+split for deep trees, and multi-tree (forest) batching."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+from repro.kernels import common
+from repro.kernels.tree_router import kernel as K
+from repro.kernels.tree_router import ref as R
+
+
+@partial(jax.jit, static_argnames=("depth", "dense_levels", "block_b",
+                                   "interpret"))
+def route(x: jax.Array, node_w: jax.Array, node_b: jax.Array, *, depth: int,
+          dense_levels: int | None = None, block_b: int = 256,
+          interpret: bool | None = None) -> jax.Array:
+    """Leaf index per token.  x (B, D); node_w (N, D); node_b (N,).
+
+    ``dense_levels`` caps how many levels the fused dense-logit kernel
+    handles; the remainder descends with per-token gathers (cheaper once
+    2^m >> d — crossover analysis in DESIGN.md §8).  Default: all levels up
+    to 8 are dense."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    if dense_levels is None:
+        dense_levels = min(depth, 8)
+    dense_levels = min(dense_levels, depth)
+    B, D = x.shape
+
+    if dense_levels == 0:
+        return R.tree_router_ref(x, node_w, node_b, depth=depth)
+
+    block_b = common.pick_tile(B, block_b)
+    pad = (-B) % block_b
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    n_dense = 2 ** dense_levels - 1
+    idx = K.tree_router(xp, node_w[:n_dense], node_b[:n_dense],
+                        depth=dense_levels, block_b=block_b,
+                        interpret=interpret)
+    idx = idx[:B]
+
+    # finish deep levels with the gather path
+    for m in range(dense_levels, depth):
+        g = (2 ** m - 1) + idx
+        w = jnp.take(node_w, g, axis=0)
+        b = jnp.take(node_b, g, axis=0)
+        logit = jnp.einsum("bd,bd->b", x.astype(jnp.float32),
+                           w.astype(jnp.float32)) + b.astype(jnp.float32)
+        idx = 2 * idx + (logit >= 0.0).astype(jnp.int32)
+    return idx
+
+
+def route_forest(x: jax.Array, node_w: jax.Array, node_b: jax.Array, *,
+                 depth: int, **kw) -> jax.Array:
+    """Forest variant: node_w (T, N, D), node_b (T, N) -> (B, T)."""
+    f = jax.vmap(lambda w, b: route(x, w, b, depth=depth, **kw))
+    return f(node_w, node_b).T

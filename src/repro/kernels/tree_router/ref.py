@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the tree_router kernel (paper Algorithm 1 FORWARD_I,
+descent only, single tree, node width 1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_router_ref(x: jax.Array, node_w: jax.Array, node_b: jax.Array, *,
+                    depth: int) -> jax.Array:
+    """x (B, D), node_w (N, D), node_b (N,) -> (B,) int32 leaf indices."""
+    B = x.shape[0]
+    idx = jnp.zeros((B,), jnp.int32)
+    for m in range(depth):
+        g = (2 ** m - 1) + idx                       # global node ids (B,)
+        w = jnp.take(node_w, g, axis=0)              # (B, D)
+        b = jnp.take(node_b, g, axis=0)              # (B,)
+        logit = jnp.einsum("bd,bd->b", x.astype(jnp.float32),
+                           w.astype(jnp.float32)) + b.astype(jnp.float32)
+        idx = 2 * idx + (logit >= 0.0).astype(jnp.int32)
+    return idx

@@ -1,0 +1,2 @@
+"""Launch layer: meshes, multi-pod dry-run, roofline analysis, drivers."""
+from repro.launch import mesh, roofline, specs

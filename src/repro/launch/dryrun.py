@@ -1,0 +1,430 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: pjit partitions
+every entry point over the production meshes ((16,16) single-pod, (2,16,16)
+multi-pod), ``compiled.memory_analysis()`` reports the per-device footprint,
+``compiled.cost_analysis()`` + the optimized HLO feed §Roofline.
+
+NOTE the XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init) — this file is the only place the 512 placeholder
+devices exist; smoke tests and benchmarks see the real single CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-20b \
+      --shape train_4k --multi-pod both
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim, utils
+from repro.configs import SHAPES, registry, shape_applicable
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed import act, sharding
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline, specs
+from repro.models import lm
+
+
+def _dp_axes(mesh, batch: int):
+    """Batch-dim sharding axes, or None when the batch is too small to
+    shard (long-context decode: B=1 -> replicate batch, shard sequence)."""
+    daxes = mesh_lib.data_axes(mesh)
+    import numpy as _np
+    dsize = int(_np.prod([mesh.shape[a] for a in daxes]))
+    if batch % dsize or batch < dsize:
+        return None
+    return daxes if len(daxes) > 1 else daxes[0]
+
+
+def _batch_shardings(batch_struct: dict, mesh) -> dict:
+    def spec(x):
+        dp = _dp_axes(mesh, x.shape[0])
+        return NamedSharding(mesh, P(dp, *([None] * (len(x.shape) - 1))))
+
+    return jax.tree_util.tree_map(spec, batch_struct)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _cost_of(fn, structs, in_shardings, mesh, rules):
+    """Lower+compile one component and return (flops, bytes, collectives)."""
+    with act.use_mesh(mesh, rules):
+        lowered = jax.jit(fn, in_shardings=in_shardings).lower(*structs)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else (cost or {})
+    colls = roofline.parse_collectives(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), colls)
+
+
+def cost_model(cfg: ModelConfig, shape: ShapeSpec, mesh, rules) -> dict:
+    """Per-device roofline inputs with correct loop-trip accounting.
+
+    ``compiled.cost_analysis()`` counts a scanned layer body ONCE (XLA does
+    not multiply while-loop bodies by their trip count), so the full-model
+    numbers undercount by ~n_periods.  We therefore lower one *period* of the
+    stack separately (unrolled, exact) and aggregate:
+
+        total = period_cost * n_periods + embed/head cost
+
+    Both artifacts are compiled dry-run products; the full-model compile
+    still provides memory_analysis + the end-to-end partitioning proof.
+    """
+    import dataclasses as _dc
+    from repro.nn import transformer
+
+    daxes = mesh_lib.data_axes(mesh)
+    dp = daxes if len(daxes) > 1 else daxes[0]
+    # train lowers one *microbatch* through one period and scales by
+    # grad_accum * n_periods — FSDP param re-gathers per micro-step are real
+    # traffic and must multiply (remat recompute is inside the grad already).
+    accum = cfg.grad_accum if shape.mode == "train" else 1
+    B = shape.global_batch // accum
+    S = shape.seq_len if shape.mode != "decode" else 1
+    D = cfg.d_model
+    cfg1 = _dc.replace(cfg, n_layers=len(cfg.period), scan_layers=False,
+                       remat="none")
+    dp_b = _dp_axes(mesh, B)
+    x_struct = jax.ShapeDtypeStruct((B, S, D), cfg.accum_dtype)
+    x_sh = NamedSharding(mesh, P(dp_b, None, None))
+    fsdp_params = cfg.zero_stage >= 3
+    stack1_struct = jax.eval_shape(
+        lambda k: transformer.stack_init(k, cfg1), jax.random.PRNGKey(0))
+    s_shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        sharding.param_specs(stack1_struct, mesh, fsdp=fsdp_params),
+        is_leaf=lambda x: isinstance(x, P))
+
+    enc_struct = None
+    enc_sh = None
+    if cfg.encoder is not None:
+        enc_struct = jax.ShapeDtypeStruct((B, cfg.encoder.seq_len, D),
+                                          cfg.accum_dtype)
+        enc_sh = NamedSharding(mesh, P(dp_b, None, None))
+
+    # ---- one period of the stack -------------------------------------
+    if shape.mode == "train":
+        if cfg.encoder is not None:
+            def body(p1, x, enc):
+                y, _, aux = transformer.stack_forward(
+                    p1, cfg1, x, mode="train", enc_out=enc)
+                return (y.astype(jnp.float32).sum()
+                        + aux["hardening"] + aux["moe_aux"])
+            fn = jax.grad(body, argnums=(0, 1))
+            fl, by, co = _cost_of(fn, (stack1_struct, x_struct, enc_struct),
+                                  (s_shardings, x_sh, enc_sh), mesh, rules)
+        else:
+            def body(p1, x):
+                y, _, aux = transformer.stack_forward(p1, cfg1, x, mode="train")
+                return (y.astype(jnp.float32).sum()
+                        + aux["hardening"] + aux["moe_aux"])
+            fn = jax.grad(body, argnums=(0, 1))
+            fl, by, co = _cost_of(fn, (stack1_struct, x_struct),
+                                  (s_shardings, x_sh), mesh, rules)
+    else:
+        mode = "prefill" if shape.mode == "prefill" else "decode"
+        cache_len = shape.seq_len
+        caches1 = jax.eval_shape(
+            lambda: transformer.init_caches(
+                cfg1, B, cache_len,
+                enc_len=cfg.encoder.seq_len if cfg.encoder else 0,
+                dtype=cfg.param_dtype))
+        c_shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s),
+            sharding.cache_specs(caches1, mesh, B),
+            is_leaf=lambda x: isinstance(x, P))
+        if cfg.encoder is not None and mode == "prefill":
+            def body(p1, x, caches, enc):
+                y, cs, _ = transformer.stack_forward(
+                    p1, cfg1, x, mode=mode, caches=caches, enc_out=enc)
+                return y, cs
+            fl, by, co = _cost_of(
+                body, (stack1_struct, x_struct, caches1, enc_struct),
+                (s_shardings, x_sh, c_shardings, enc_sh), mesh, rules)
+        else:
+            def body(p1, x, caches):
+                y, cs, _ = transformer.stack_forward(
+                    p1, cfg1, x, mode=mode, caches=caches)
+                return y, cs
+            fl, by, co = _cost_of(body, (stack1_struct, x_struct, caches1),
+                                  (s_shardings, x_sh, c_shardings), mesh, rules)
+
+    n_periods = (cfg.n_layers // len(cfg.period)) * accum
+    flops = fl * n_periods
+    bytes_ = by * n_periods
+    colls = [(c, n_periods) for c in co]
+
+    # ---- encoder stack (whisper) ---------------------------------------
+    if cfg.encoder is not None and shape.mode != "decode":
+        cfg_e = _dc.replace(cfg1, period=cfg.encoder.period,
+                            n_layers=len(cfg.encoder.period))
+        enc_stack_struct = jax.eval_shape(
+            lambda k: transformer.stack_init(k, cfg_e, causal=False),
+            jax.random.PRNGKey(0))
+        e_shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s),
+            sharding.param_specs(enc_stack_struct, mesh, fsdp=fsdp_params),
+            is_leaf=lambda x: isinstance(x, P))
+        if shape.mode == "train":
+            def ebody(p1, x):
+                y, _, _ = transformer.stack_forward(
+                    p1, cfg_e, x, mode="train", causal=False,
+                    period=cfg.encoder.period)
+                return y.astype(jnp.float32).sum()
+            efn = jax.grad(ebody, argnums=(0, 1))
+        else:
+            def efn(p1, x):
+                return transformer.stack_forward(
+                    p1, cfg_e, x, mode="train", causal=False,
+                    period=cfg.encoder.period)[0]
+        efl, eby, eco = _cost_of(efn, (enc_stack_struct, enc_struct),
+                                 (e_shardings, enc_sh), mesh, rules)
+        n_enc = (cfg.encoder.n_layers // len(cfg.encoder.period)) * accum
+        flops += efl * n_enc
+        bytes_ += eby * n_enc
+        colls += [(c, n_enc) for c in eco]
+
+    # ---- embed + head (+ loss) ------------------------------------------
+    ends_struct = {k: v for k, v in jax.eval_shape(
+        partial(lm.init, cfg=_dc.replace(cfg, n_layers=len(cfg.period))),
+        jax.random.PRNGKey(0)).items() if k not in ("stack", "enc_stack")}
+    ends_shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        sharding.param_specs(ends_struct, mesh, fsdp=fsdp_params),
+        is_leaf=lambda x: isinstance(x, P))
+    batch_struct = specs._token_batch(
+        cfg, B, S, shape.mode == "train") if shape.mode != "decode" else {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    b_shardings = _batch_shardings(batch_struct, mesh)
+    if shape.mode == "train":
+        def ends(hp, y, batch):
+            x0 = lm._embed_inputs(hp, cfg, batch)
+            lg = lm._head(hp, cfg, x0 * 0.5 + y)
+            return lm.cross_entropy(lg, batch["labels"])[0]
+        efn2 = jax.grad(ends, argnums=(0, 1))
+    else:
+        def efn2(hp, y, batch):
+            x0 = lm._embed_inputs(hp, cfg, batch)
+            return lm._head(hp, cfg, x0 * 0.5 + y[:, -1:, :])
+    hfl, hby, hco = _cost_of(efn2, (ends_struct, x_struct, batch_struct),
+                             (ends_shardings, x_sh, b_shardings), mesh, rules)
+    flops += hfl * accum
+    bytes_ += hby * accum
+    colls += [(c, accum) for c in hco]
+    return {"flops": flops, "bytes": bytes_, "colls": colls}
+
+
+def make_train_fn(cfg: ModelConfig):
+    opt = optim.chain_clip(optim.adamw(1e-4, weight_decay=0.1), 1.0)
+    grad_fn = optim.gradient_accumulation(
+        lambda p, b, r: lm.loss_fn(p, cfg, b, r), cfg.grad_accum)
+
+    def train_step(params, opt_state, batch, rng):
+        grads, (loss, metrics) = grad_fn(params, batch, rng)
+        updates, opt_state2 = opt.update(grads, opt_state, params)
+        params2 = optim.apply_updates(params, updates)
+        return params2, opt_state2, metrics
+
+    return train_step, opt
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               ffn: str = "fff", compile_: bool = True) -> dict:
+    """Lower+compile one cell; returns the §Dry-run/§Roofline record."""
+    cfg = registry.get_config(arch, ffn=ffn)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec: dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "ffn": ffn,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+    }
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_lib.num_chips(mesh)
+    t0 = time.time()
+
+    params_struct = jax.eval_shape(partial(lm.init, cfg=cfg),
+                                   jax.random.PRNGKey(0))
+    fsdp_params = cfg.zero_stage >= 3
+    p_shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        sharding.param_specs(params_struct, mesh, fsdp=fsdp_params),
+        is_leaf=lambda x: isinstance(x, P))
+    total_params = utils.tree_size(params_struct)
+    embed_params = utils.tree_size(params_struct["embed"])
+    rules = sharding.activation_rules(mesh)
+
+    with act.use_mesh(mesh, rules):
+        if shape.mode == "train":
+            train_step, opt = make_train_fn(cfg)
+            opt_struct = jax.eval_shape(opt.init, params_struct)
+            # moments are always fully sharded (ZeRO-1/3); scalars replicated
+            m_shardings = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s),
+                sharding.param_specs(params_struct, mesh, fsdp=True),
+                is_leaf=lambda x: isinstance(x, P))
+            o_shardings = type(opt_struct)(
+                step=_replicated(mesh), mu=m_shardings, nu=m_shardings)
+            batch_struct = specs.input_specs(cfg, shape)
+            b_shardings = _batch_shardings(batch_struct, mesh)
+            fn = jax.jit(train_step,
+                         in_shardings=(p_shardings, o_shardings, b_shardings,
+                                       _replicated(mesh)),
+                         out_shardings=(p_shardings, o_shardings, None),
+                         donate_argnums=(0, 1))
+            rng_s = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            lowered = fn.lower(params_struct, opt_struct, batch_struct, rng_s)
+        elif shape.mode == "prefill":
+            batch_struct = specs.input_specs(cfg, shape)
+            b_shardings = _batch_shardings(batch_struct, mesh)
+
+            def prefill_step(params, batch):
+                caches = lm.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                        dtype=cfg.param_dtype)
+                return lm.prefill(params, cfg, batch, caches)
+
+            fn = jax.jit(prefill_step, in_shardings=(p_shardings, b_shardings))
+            lowered = fn.lower(params_struct, batch_struct)
+        else:  # decode
+            token_s, caches_s, pos_s = specs.decode_specs(cfg, shape)
+            c_shardings = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s),
+                sharding.cache_specs(caches_s, mesh, shape.global_batch),
+                is_leaf=lambda x: isinstance(x, P))
+            tok_sh = NamedSharding(
+                mesh, P(_dp_axes(mesh, shape.global_batch), None))
+
+            def decode_step(params, token, caches, pos):
+                return lm.decode_step(params, cfg, token, caches, pos)
+
+            fn = jax.jit(decode_step,
+                         in_shardings=(p_shardings, tok_sh, c_shardings,
+                                       _replicated(mesh)),
+                         donate_argnums=(2,))
+            lowered = fn.lower(params_struct, token_s, caches_s, pos_s)
+
+        rec["lower_s"] = round(time.time() - t0, 1)
+        if not compile_:
+            rec["status"] = "lowered"
+            return rec
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    # ---- artifacts -----------------------------------------------------
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "peak_memory_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+        args_b = rec.get("argument_size_in_bytes", 0)
+        peak_b = rec.get("peak_memory_in_bytes", 0) \
+            or rec.get("temp_size_in_bytes", 0)
+        rec["bytes_per_device"] = args_b + peak_b
+        rec["fits_v5e_16g"] = bool(rec["bytes_per_device"] < 16 * 1024 ** 3)
+    mf = roofline.model_flops(cfg, shape, total_params, embed_params)
+    # trip-count-correct per-device roofline terms (see cost_model docstring)
+    cm = cost_model(cfg, shape, mesh, rules)
+    terms = roofline.analyze_terms(cm["flops"], cm["bytes"], cm["colls"],
+                                   chips, mf)
+    rec.update({
+        "status": "ok",
+        "total_params": total_params,
+        "active_params": roofline.param_counts(cfg, total_params)[1],
+        "hlo_flops_per_device": terms.flops,
+        "hlo_bytes_per_device": terms.bytes_hbm,
+        "ici_bytes_per_device": terms.bytes_ici,
+        "dcn_bytes_per_device": terms.bytes_dcn,
+        "t_compute_s": terms.t_compute,
+        "t_memory_s": terms.t_memory,
+        "t_collective_s": terms.t_collective,
+        "dominant": terms.dominant,
+        "model_flops": mf,
+        "useful_ratio": terms.useful_ratio,
+        "roofline_fraction": terms.roofline_fraction,
+        "n_collectives": sum(c.count * m for c, m in cm["colls"]),
+    })
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=list(registry.ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--ffn", default="fff", choices=["fff", "native", "dense"])
+    ap.add_argument("--multi-pod", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = list(registry.ARCH_IDS) if (args.all or args.arch is None) \
+        else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.multi_pod]
+
+    records = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                t0 = time.time()
+                try:
+                    rec = lower_cell(arch, shape_name, multi_pod=mp,
+                                     ffn=args.ffn)
+                except Exception as e:            # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error",
+                           "error": f"{type(e).__name__}: {e}"}
+                    traceback.print_exc()
+                rec["wall_s"] = round(time.time() - t0, 1)
+                records.append(rec)
+                status = rec.get("status")
+                extra = ""
+                if status == "ok":
+                    extra = (f" bytes/dev={utils.human_bytes(rec['bytes_per_device'])}"
+                             f" dominant={rec['dominant']}"
+                             f" roofline={rec['roofline_fraction']:.3f}")
+                elif status == "skipped":
+                    extra = f" ({rec['reason']})"
+                print(f"[{rec['mesh']:8s}] {arch:24s} {shape_name:12s} "
+                      f"{status}{extra}", flush=True)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(records, f, indent=1)
+    n_ok = sum(r.get("status") == "ok" for r in records)
+    n_skip = sum(r.get("status") == "skipped" for r in records)
+    n_err = len(records) - n_ok - n_skip
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"/ {len(records)} cells")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production meshes.
+
+``make_production_mesh`` builds the assignment's target topology as a
+FUNCTION (importing this module never touches jax device state):
+  single-pod:  (16, 16)    axes (data, model)        = 256 chips (one v5e pod)
+  multi-pod:   (2, 16, 16) axes (pod, data, model)   = 512 chips
+
+The ``pod`` axis composes with ``data`` everywhere batch/FSDP sharding is
+expressed — model code never names a pod, so scaling to N pods is a mesh-shape
+change only.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """Arbitrary mesh (tests / elastic re-mesh)."""
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever devices exist, as a 1-D data mesh (CPU tests, examples)."""
+    n = jax.device_count()
+    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def num_chips(mesh: Mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,247 @@
+"""Roofline-term derivation from compiled dry-run artifacts (DESIGN.md §6).
+
+CPU container, TPU v5e target: no wall clocks — the three terms come from the
+compiled module itself:
+
+  T_compute    = HLO_FLOPs / (chips * 197e12)          [bf16 MXU peak]
+  T_memory     = HLO_bytes / (chips * 819e9)           [HBM]
+  T_collective = sum(bytes moved per collective) / (chips * link_bw)
+                 ICI 50 GB/s; pod-axis (DCN) hops at 25 GB/s
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed from the post-SPMD optimized HLO (``compiled.as_text()``) by summing
+result-shape bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, with ring-algorithm byte multipliers and a DCN heuristic
+(group reaching across the 256-device pod boundary).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+DCN_BW = 25e9                # bytes/s cross-pod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^}]*\}|\[[0-9,]+\]<=\[[0-9,]+\][T0-9,()]*)")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op: str
+    bytes_result: int
+    group_size: int
+    crosses_pod: bool
+    count: int = 1
+
+    @property
+    def bytes_moved(self) -> float:
+        """Ring-algorithm bytes per participant."""
+        n = max(self.group_size, 1)
+        frac = (n - 1) / n
+        if self.op == "all-reduce":
+            return 2 * self.bytes_result * frac
+        if self.op in ("all-gather", "reduce-scatter", "all-to-all"):
+            return self.bytes_result * frac
+        return self.bytes_result        # collective-permute
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _parse_groups(line: str, pod_size: int = 256) -> tuple[int, bool]:
+    """(group_size, crosses_pod)."""
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 1, False
+    g = m.group(1)
+    if g.startswith("{{"):
+        first = g[2:].split("}")[0]
+        ids = [int(v) for v in first.split(",") if v.strip()]
+        size = len(ids)
+        crosses = (max(ids) // pod_size) != (min(ids) // pod_size) if ids else False
+        return size, crosses
+    # iota format: [d0,d1,...]<=[N](T(perm))?
+    dims = [int(v) for v in g[1:g.index("]")].split(",")]
+    n_total = int(re.search(r"<=\[([0-9,]+)\]", g).group(1).split(",")[0])
+    size = dims[-1] if len(dims) > 1 else dims[0]
+    transposed = "T(" in g
+    if transposed:
+        # permuted groups stride across the device space; if the stride
+        # reaches past a pod, it is a DCN collective
+        stride = n_total // size if size else 1
+        crosses = stride >= pod_size and n_total > pod_size
+    else:
+        crosses = size > pod_size
+    return size, crosses
+
+
+def parse_collectives(hlo_text: str, pod_size: int = 256
+                      ) -> list[CollectiveStats]:
+    out: dict[tuple, CollectiveStats] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = _shape_bytes(m.group("shape"))
+        size, crosses = _parse_groups(line, pod_size)
+        key = (op, nbytes, size, crosses)
+        if key in out:
+            out[key].count += 1
+        else:
+            out[key] = CollectiveStats(op, nbytes, size, crosses)
+    return list(out.values())
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    bytes_hbm: float
+    bytes_ici: float
+    bytes_dcn: float
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float
+    useful_ratio: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful model FLOPs / (chips * peak * max-term) — the score."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * PEAK_FLOPS * t)
+
+
+def analyze_terms(flops: float, bytes_hbm: float,
+                  colls: list[tuple[CollectiveStats, int]], chips: int,
+                  model_flops: float) -> RooflineTerms:
+    """flops/bytes are per-device; colls carry a repetition multiplier
+    (scan trip count) per stat."""
+    bytes_ici = sum(c.bytes_moved * c.count * mult
+                    for c, mult in colls if not c.crosses_pod)
+    bytes_dcn = sum(c.bytes_moved * c.count * mult
+                    for c, mult in colls if c.crosses_pod)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_hbm / HBM_BW
+    t_collective = bytes_ici / ICI_BW + bytes_dcn / DCN_BW
+    useful = model_flops / max(flops * chips, 1.0)
+    return RooflineTerms(flops, bytes_hbm, bytes_ici, bytes_dcn, chips,
+                         t_compute, t_memory, t_collective, model_flops,
+                         useful)
+
+
+def analyze(cost: dict, hlo_text: str, chips: int, model_flops: float
+            ) -> RooflineTerms:
+    """Single-compile variant (no trip-count correction) — used for
+    components that are not inside a scan."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_hbm = float(cost.get("bytes accessed", 0.0))
+    colls = [(c, 1) for c in parse_collectives(hlo_text)]
+    return analyze_terms(flops, bytes_hbm, colls, chips, model_flops)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS: 6*N*D (train) / 2*N*D (inference), N = *active* params
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg: ModelConfig, total_params: int, mode: str = "decode"
+                 ) -> tuple[int, int]:
+    """(total, effective) parameter counts.  ``total_params`` comes from the
+    eval_shape struct (exact); inactive mass is the conditional FFN width the
+    pass never touches: MoE non-selected experts, FFF non-selected leaves.
+
+    Mode matters for FFF: faithful FORWARD_T training evaluates *all* leaves
+    (they all receive gradient — that compute is useful by the paper's
+    semantics), while ST-trained sites and every inference pass touch only
+    the routed leaf/forest."""
+    inactive = 0
+    n_periods = cfg.n_layers // len(cfg.period)
+    for spec in cfg.period:
+        f = spec.ffn
+        kk = 3 if f.activation == "swiglu" else 2
+        if f.kind == "moe" or (f.kind == "fff"
+                               and (mode != "train" or f.fff_st)):
+            inactive += (f.training_width - f.active_width) * kk \
+                * cfg.d_model * n_periods
+    return total_params, total_params - inactive
+
+
+def attention_model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Quadratic attention term of useful model FLOPs (PaLM MFU convention).
+
+    Without it, useful-compute ratios are meaningless for small-param models
+    at long context (olmoe@4k measured 250:1 attention:FFN — §Perf iter 1)."""
+    n_attn = sum(1 for b in cfg.period if b.mixer == "attn") \
+        * (cfg.n_layers // len(cfg.period))
+    if cfg.encoder is not None and shape.mode != "decode":
+        pass  # encoder attention added below
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    window = min((b.sliding_window or shape.seq_len)
+                 for b in cfg.period if b.mixer == "attn") \
+        if n_attn else 0
+    if shape.mode == "decode":
+        ctx = min(shape.seq_len, window or shape.seq_len)
+        per_token = 2 * 2 * ctx * H * hd              # qk + pv vs full cache
+        tokens = shape.global_batch
+        factor = 1.0
+    else:
+        s_eff = min(shape.seq_len, window or shape.seq_len)
+        # causal lower-triangle average context = s_eff/2
+        per_token = 2 * 2 * (s_eff / 2) * H * hd
+        tokens = shape.global_batch * shape.seq_len
+        factor = 3.0 if shape.mode == "train" else 1.0
+    total = factor * n_attn * per_token * tokens
+    if cfg.encoder is not None and shape.mode != "decode":
+        enc_tokens = shape.global_batch * cfg.encoder.seq_len
+        total += factor * cfg.encoder.n_layers * 2 * 2 * cfg.encoder.seq_len \
+            * H * hd * enc_tokens / 2
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec, total_params: int,
+                embed_params: int = 0) -> float:
+    """6*N*D (train) / 2*N*D (inference) over *effective* params, plus the
+    quadratic attention term (PaLM MFU convention)."""
+    _, eff = param_counts(cfg, total_params, shape.mode)
+    n = eff - embed_params
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode"
+                                   else 1)
+    factor = 6.0 if shape.mode == "train" else 2.0
+    return factor * n * tokens + attention_model_flops(cfg, shape)

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every model input of every (arch x shape)
+cell — weak-type-correct, shardable, no device allocation.
+
+``input_specs(cfg, shape)`` returns the batch pytree the corresponding entry
+point consumes:
+  train:   {tokens|embeds [, enc_embeds], labels}
+  prefill: {tokens|embeds [, enc_embeds]}
+  decode:  (token, caches, pos_offset) — caches at seq_len capacity
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import lm
+
+Struct = jax.ShapeDtypeStruct
+
+
+def _token_batch(cfg: ModelConfig, B: int, S: int, with_labels: bool) -> dict:
+    batch: dict[str, Any] = {}
+    if cfg.encoder is not None:
+        batch["tokens"] = Struct((B, S), jnp.int32)
+        batch["enc_embeds"] = Struct((B, cfg.encoder.seq_len, cfg.d_model),
+                                     cfg.param_dtype)
+    elif cfg.frontend != "none":
+        # stub frontend: precomputed frame/patch embeddings (assignment)
+        batch["embeds"] = Struct((B, S, cfg.d_model), cfg.param_dtype)
+    else:
+        batch["tokens"] = Struct((B, S), jnp.int32)
+    if with_labels:
+        batch["labels"] = Struct((B, S), jnp.int32)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Batch structs for train/prefill modes."""
+    if shape.mode == "train":
+        return _token_batch(cfg, shape.global_batch, shape.seq_len, True)
+    if shape.mode == "prefill":
+        return _token_batch(cfg, shape.global_batch, shape.seq_len, False)
+    raise ValueError(f"decode shapes use decode_specs: {shape.name}")
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeSpec) -> tuple:
+    """(token, caches, pos_offset) structs for one serve_step with a KV/state
+    cache of ``shape.seq_len`` already filled."""
+    B = shape.global_batch
+    token = Struct((B, 1), jnp.int32)
+    caches = jax.eval_shape(
+        lambda: lm.init_caches(cfg, B, shape.seq_len, dtype=cfg.param_dtype))
+    pos = Struct((), jnp.int32)
+    return token, caches, pos

@@ -1,0 +1,109 @@
+"""Training driver: data pipeline -> pjit train step -> checkpoint manager ->
+fault supervisor.  Runs real steps on whatever devices exist (CPU here; the
+same code path pjit-partitions on a pod — launch with the production mesh via
+--mesh prod).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b --ffn fff \
+      --steps 20 --batch 8 --seq 128 --reduced
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim, utils
+from repro.checkpoint import CheckpointManager
+from repro.configs import registry
+from repro.data import tokens as tokens_lib
+from repro.distributed import act, fault, sharding, straggler
+from repro.launch import mesh as mesh_lib
+from repro.models import lm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe-1b-7b",
+                    choices=list(registry.ARCH_IDS))
+    ap.add_argument("--ffn", default="fff", choices=["fff", "native", "dense"])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--mesh", default="host", choices=["host", "prod"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = registry.get_config(args.arch, ffn=args.ffn)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = (mesh_lib.make_production_mesh() if args.mesh == "prod"
+            else mesh_lib.make_host_mesh())
+    rules = sharding.activation_rules(mesh)
+
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.init(key, cfg)
+    print(f"{cfg.arch_id}: {utils.tree_size(params)/1e6:.1f}M params, "
+          f"mesh={dict(mesh.shape)}")
+    params = sharding.shard_params(params, mesh, fsdp=cfg.zero_stage >= 3)
+
+    opt = optim.chain_clip(
+        optim.adamw(optim.cosine_warmup(args.lr, args.steps // 10 + 1,
+                                        args.steps)), 1.0)
+    opt_state = opt.init(params)
+    source = tokens_lib.MarkovTokenSource(cfg.vocab_size, seed=args.seed)
+
+    def train_step(params, opt_state, batch, rng):
+        def loss(p):
+            return lm.loss_fn(p, cfg, batch, rng)
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), opt_state, metrics
+
+    with act.use_mesh(mesh, rules):
+        step_jit = jax.jit(train_step, donate_argnums=(0, 1))
+
+        manager = CheckpointManager(args.ckpt_dir, keep=2)
+        tracker = straggler.StepTimeTracker(1)
+
+        state = {"params": params, "opt": opt_state}
+
+        def do_step(state, i):
+            batch = source.batch(args.batch, args.seq, seed=args.seed + i)
+            if cfg.frontend != "none" and cfg.encoder is None:
+                emb = np.random.default_rng(i).normal(
+                    0, 1, (args.batch, args.seq, cfg.d_model)).astype(np.float32)
+                batch = {"embeds": emb, "labels": batch["labels"]}
+            if cfg.encoder is not None:
+                enc = np.random.default_rng(i).normal(
+                    0, 1, (args.batch, cfg.encoder.seq_len,
+                           cfg.d_model)).astype(np.float32)
+                batch["enc_embeds"] = enc
+            t0 = time.time()
+            p2, o2, metrics = step_jit(state["params"], state["opt"], batch,
+                                       jax.random.fold_in(key, i))
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            tracker.record([dt])
+            print(f"step {i:4d} loss {loss:8.4f} ce {float(metrics['ce']):8.4f} "
+                  f"harden {float(metrics['hardening']):6.3f} {dt*1e3:7.1f}ms",
+                  flush=True)
+            return {"params": p2, "opt": o2}
+
+        sup = fault.TrainSupervisor(
+            manager, fault.SupervisorConfig(ckpt_every=args.ckpt_every))
+        result = sup.run(state, do_step, args.steps)
+        print(f"done at step {result.step} (restarts={result.restarts})")
+
+
+if __name__ == "__main__":
+    main()

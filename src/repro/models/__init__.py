@@ -1,0 +1,2 @@
+"""Model-level wrappers: causal LM (incl. enc-dec, stub frontends), ViT."""
+from repro.models import lm

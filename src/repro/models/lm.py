@@ -1,0 +1,176 @@
+"""Causal LM wrapper: init / train loss / prefill / decode for every assigned
+architecture, including encoder-decoder (whisper) and stub-frontend (vlm,
+audio) variants.
+
+The three entry points lowered by the dry-run:
+  * ``train_step``  — loss + grads + optimizer update (shape: train_4k)
+  * ``prefill``     — build KV/state caches over a prefix (prefill_32k)
+  * ``decode_step`` — one new token against the caches (decode_32k, long_500k)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import act
+from repro.nn import embeddings, norms, rope as rope_lib, transformer
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(key: jax.Array, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "embed": embeddings.embed_init(ks[0], cfg.vocab_size, cfg.d_model,
+                                       tie=cfg.tie_embeddings,
+                                       param_dtype=cfg.param_dtype),
+        "stack": transformer.stack_init(ks[1], cfg, causal=True),
+        "final_norm": norms.norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+    }
+    if cfg.pos_emb == "learned":
+        p["pos"] = embeddings.learned_pos_init(ks[2], cfg.max_seq_len,
+                                               cfg.d_model, cfg.param_dtype)
+    if cfg.frontend != "none" and cfg.encoder is None:
+        p["frontend"] = embeddings.frontend_init(ks[3], cfg.frontend,
+                                                 cfg.d_model, cfg.param_dtype)
+    if cfg.encoder is not None:
+        p["enc_frontend"] = embeddings.frontend_init(ks[3], cfg.frontend,
+                                                     cfg.d_model, cfg.param_dtype)
+        p["enc_stack"] = transformer.stack_init(
+            ks[4], cfg, causal=False, period=cfg.encoder.period,
+            n_layers=cfg.encoder.n_layers)
+        p["enc_norm"] = norms.norm_init(cfg.norm, cfg.d_model, cfg.param_dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# pieces
+# ---------------------------------------------------------------------------
+
+def encode(params: Params, cfg: ModelConfig, enc_embeds: jax.Array
+           ) -> jax.Array:
+    """Encoder over precomputed frame/patch embeddings (B, S_enc, D)."""
+    x = embeddings.frontend(params["enc_frontend"], enc_embeds, cfg.accum_dtype)
+    x = x + rope_lib.sinusoidal_embedding(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = act.shard(x, act.ACT_BSD)
+    x, _, _ = transformer.stack_forward(
+        params["enc_stack"], cfg, x, mode="train", causal=False,
+        period=cfg.encoder.period)
+    return norms.norm_apply(cfg.norm, params["enc_norm"], x)
+
+
+def _embed_inputs(params: Params, cfg: ModelConfig, batch: dict,
+                  pos_offset: int | jax.Array = 0) -> jax.Array:
+    if cfg.frontend != "none" and cfg.encoder is None and "embeds" in batch:
+        x = embeddings.frontend(params["frontend"], batch["embeds"],
+                                cfg.accum_dtype)
+    else:
+        x = embeddings.embed(params["embed"], batch["tokens"], cfg.accum_dtype)
+    if cfg.pos_emb == "learned":
+        x = embeddings.learned_pos(params["pos"], x, pos_offset)
+    elif cfg.pos_emb == "sinusoidal":
+        x = x + rope_lib.sinusoidal_embedding(
+            x.shape[1] + 0, cfg.d_model).astype(x.dtype)
+    return act.shard(x, act.ACT_BSD)
+
+
+def _head(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = norms.norm_apply(cfg.norm, params["final_norm"], x)
+    lg = embeddings.logits(params["embed"], x)
+    return act.shard(lg, act.LOGITS_BSV)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_index: int = -1) -> tuple[jax.Array, jax.Array]:
+    """Mean CE over valid positions; returns (loss, accuracy)."""
+    valid = labels != ignore_index
+    safe = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(valid.sum(), 1)
+    loss = -(ll * valid).sum() / denom
+    acc = ((logits.argmax(-1) == labels) & valid).sum() / denom
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict,
+            rng: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
+    """Training loss: CE + hardening (FFF) + balancing (MoE) aux terms."""
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = encode(params, cfg, batch["enc_embeds"])
+    x = _embed_inputs(params, cfg, batch)
+    x, _, aux = transformer.stack_forward(params["stack"], cfg, x,
+                                          mode="train", rng=rng,
+                                          enc_out=enc_out)
+    logits = _head(params, cfg, x)
+    ce, acc = cross_entropy(logits, batch["labels"])
+    loss = ce + aux["hardening"] + aux["moe_aux"]
+    metrics = {"loss": loss, "ce": ce, "accuracy": acc,
+               "hardening": aux["hardening"], "moe_aux": aux["moe_aux"]}
+    return loss, metrics
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=None) -> list[dict]:
+    enc_len = cfg.encoder.seq_len if cfg.encoder is not None else 0
+    return transformer.init_caches(cfg, batch, max_len, enc_len=enc_len,
+                                   dtype=dtype)
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: dict,
+            caches: list[dict]) -> tuple[jax.Array, list[dict]]:
+    """Run the prefix, fill caches, return last-position logits (B, V)."""
+    enc_out = None
+    if cfg.encoder is not None:
+        enc_out = encode(params, cfg, batch["enc_embeds"])
+    x = _embed_inputs(params, cfg, batch)
+    x, caches, _ = transformer.stack_forward(params["stack"], cfg, x,
+                                             mode="prefill", caches=caches,
+                                             enc_out=enc_out)
+    logits = _head(params, cfg, x[:, -1:, :])
+    return logits[:, 0], caches
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
+                caches: list[dict], pos_offset: jax.Array | int = 0
+                ) -> tuple[jax.Array, list[dict]]:
+    """One serve step: token (B, 1) int32 -> logits (B, V), updated caches."""
+    x = _embed_inputs(params, cfg, {"tokens": token}, pos_offset=pos_offset)
+    x, caches, _ = transformer.stack_forward(params["stack"], cfg, x,
+                                             mode="decode", caches=caches)
+    logits = _head(params, cfg, x)
+    return logits[:, 0], caches
+
+
+def generate(params: Params, cfg: ModelConfig, prompt: jax.Array,
+             steps: int, max_len: int, rng: Optional[jax.Array] = None,
+             temperature: float = 0.0) -> jax.Array:
+    """Greedy/temperature sampling loop (host-driven example path)."""
+    B = prompt.shape[0]
+    caches = init_caches(cfg, B, max_len)
+    logits, caches = prefill(params, cfg, {"tokens": prompt}, caches)
+    out = [prompt]
+    tok = logits.argmax(-1)[:, None].astype(jnp.int32)
+    for i in range(steps):
+        out.append(tok)
+        logits, caches = decode_step(params, cfg, tok, caches,
+                                     pos_offset=prompt.shape[1] + i)
+        if temperature > 0.0 and rng is not None:
+            rng, sub = jax.random.split(rng)
+            tok = jax.random.categorical(sub, logits / temperature)[:, None]
+            tok = tok.astype(jnp.int32)
+        else:
+            tok = logits.argmax(-1)[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,2 @@
+"""Neural substrate: attention, recurrent mixers, norms, FFN sites, stacks."""
+from repro.nn import attention, embeddings, mamba, mlp, norms, rope, transformer, xlstm

@@ -1,0 +1,362 @@
+"""Attention: GQA with RoPE, flash-style chunked softmax, KV-cache decode.
+
+Design notes (DESIGN.md §5):
+
+* ``flash_attention`` is pure JAX: an online-softmax scan over a *static*
+  list of (q-chunk, kv-chunk) pairs.  Causal masking is done by enumerating
+  only the lower-triangle chunk pairs at trace time — no wasted upper-triangle
+  FLOPs in the lowered HLO (this is what the roofline counts).  Sliding-window
+  attention additionally drops chunk pairs outside the band, statically.
+* GQA never materializes repeated KV heads: q is shaped (B, S, K, G, hd) and
+  contractions carry the group axis.
+* ``decode_attend`` attends one new token against a (possibly
+  sequence-sharded) KV cache; softmax over a sharded S axis lowers to
+  all-reduce(max)/all-reduce(sum) under SPMD — the long-context decode path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+from repro.nn import rope as rope_lib
+
+Params = dict
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    bias: bool = False
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    causal: bool = True
+    sliding_window: int = 0          # 0 = full
+    chunk: int = 1024                # flash chunk size
+    param_dtype: Any = jnp.float32
+    accum_dtype: Any = jnp.float32
+
+    @property
+    def groups(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+def init(key: jax.Array, cfg: AttnConfig) -> Params:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    pd = cfg.param_dtype
+    std = 1.0 / math.sqrt(D)
+    p: Params = {
+        "wq": utils.truncated_init(ks[0], (D, H, hd), std, pd),
+        "wk": utils.truncated_init(ks[1], (D, K, hd), std, pd),
+        "wv": utils.truncated_init(ks[2], (D, K, hd), std, pd),
+        "wo": utils.truncated_init(ks[3], (H, hd, D), 1.0 / math.sqrt(H * hd), pd),
+    }
+    if cfg.bias:
+        p["bq"] = jnp.zeros((H, hd), pd)
+        p["bk"] = jnp.zeros((K, hd), pd)
+        p["bv"] = jnp.zeros((K, hd), pd)
+        p["bo"] = jnp.zeros((D,), pd)
+    return p
+
+
+def qkv(params: Params, cfg: AttnConfig, x: jax.Array,
+        positions: Optional[jax.Array]) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """x (B, S, D) -> q (B, S, H, hd), k/v (B, S, K, hd), RoPE applied."""
+    ad = cfg.accum_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"], preferred_element_type=ad)
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"], preferred_element_type=ad)
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"], preferred_element_type=ad)
+    if cfg.bias:
+        q = q + params["bq"].astype(ad)
+        k = k + params["bk"].astype(ad)
+        v = v + params["bv"].astype(ad)
+    if cfg.use_rope and positions is not None:
+        q = rope_lib.apply_rope(q, positions, cfg.rope_theta)
+        k = rope_lib.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def out_proj(params: Params, cfg: AttnConfig, o: jax.Array) -> jax.Array:
+    y = jnp.einsum("bshk,hkd->bsd", o, params["wo"],
+                   preferred_element_type=cfg.accum_dtype)
+    if cfg.bias:
+        y = y + params["bo"].astype(cfg.accum_dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# flash attention over static chunk pairs
+# ---------------------------------------------------------------------------
+
+def _chunk_pairs(n_q: int, n_k: int, causal: bool, window_chunks: int
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Static (qi, kj, needs_mask) schedule.
+
+    causal: only kj <= qi (equal-length q/k assumed); diagonal chunk masked.
+    window_chunks w > 0: additionally require qi - kj <= w (band)."""
+    qs, ks, masked = [], [], []
+    for qi in range(n_q):
+        for kj in range(n_k):
+            if causal and kj > qi:
+                continue
+            if window_chunks > 0 and qi - kj > window_chunks:
+                continue
+            qs.append(qi)
+            ks.append(kj)
+            masked.append(causal and kj == qi or window_chunks > 0
+                          and qi - kj == window_chunks)
+    return (jnp.asarray(qs, jnp.int32), jnp.asarray(ks, jnp.int32),
+            jnp.asarray(masked, jnp.bool_))
+
+
+def _expand_kv(kv: jax.Array, groups: int) -> jax.Array:
+    """(B, S, K, hd) -> (B, S, K*G, hd): materialize KV per q-head.
+
+    Sharding rationale (DESIGN.md §5): GQA KV-head counts (4-16) do not divide
+    the 16-way model axis, and the (K, G) head-grouping reshape forces the
+    SPMD partitioner into involuntary rematerialization.  Expanding KV keeps
+    every attention tensor sharded on the full H axis; the duplicated KV bytes
+    are per-layer transients and are the cheaper trade (measured: §Perf)."""
+    if groups == 1:
+        return kv
+    return jnp.repeat(kv, groups, axis=2)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, chunk: int = 1024,
+                    sliding_window: int = 0) -> jax.Array:
+    """Online-softmax attention.
+
+    q (B, S, H, hd); k, v (B, S, K, hd) with H = K * G.  Returns (B, S, H, hd).
+    The scan carries full-size (m, l, acc) accumulators and visits only the
+    statically scheduled chunk pairs, updating the q-chunk rows in place.
+    """
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = math.gcd(S, chunk) or S
+    n_chunks = S // chunk
+    scale = 1.0 / math.sqrt(hd)
+    window_chunks = 0
+    if sliding_window > 0:
+        window_chunks = max(1, utils.cdiv(sliding_window, chunk))
+    qi_l, kj_l, mk_l = _chunk_pairs(n_chunks, n_chunks, causal, window_chunks)
+
+    qf = q.astype(jnp.float32)
+    kf = _expand_kv(k, G).astype(jnp.float32)
+    vf = _expand_kv(v, G).astype(jnp.float32)
+
+    m0 = jnp.full((B, S, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, H), jnp.float32)
+    a0 = jnp.zeros((B, S, H, hd), jnp.float32)
+
+    col = jnp.arange(chunk)
+
+    def body(carry, step):
+        m, l, acc = carry
+        qi, kj, needs_mask = step
+        qs = qi * chunk
+        ks_ = kj * chunk
+        qc = jax.lax.dynamic_slice_in_dim(qf, qs, chunk, axis=1)      # (B,c,H,hd)
+        kc = jax.lax.dynamic_slice_in_dim(kf, ks_, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(vf, ks_, chunk, axis=1)
+        s = jnp.einsum("bqhd,bphd->bhqp", qc, kc) * scale             # (B,H,c,c)
+        if causal or sliding_window > 0:
+            qpos = qs + col[:, None]
+            kpos = ks_ + col[None, :]
+            ok = jnp.ones((chunk, chunk), bool)
+            if causal:
+                ok &= kpos <= qpos
+            if sliding_window > 0:
+                ok &= qpos - kpos < sliding_window
+            s = jnp.where(needs_mask, jnp.where(ok, s, NEG_INF), s)
+        m_chunk = jax.lax.dynamic_slice_in_dim(m, qs, chunk, axis=1)  # (B,c,H)
+        l_chunk = jax.lax.dynamic_slice_in_dim(l, qs, chunk, axis=1)
+        a_chunk = jax.lax.dynamic_slice_in_dim(acc, qs, chunk, axis=1)
+        m_cur = m_chunk.transpose(0, 2, 1)                            # (B,H,c)
+        m_new = jnp.maximum(m_cur, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_cur - m_new)
+        l_new = l_chunk.transpose(0, 2, 1) * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqp,bphd->bhqd", p, vc)
+        a_new = a_chunk.transpose(0, 2, 1, 3) * corr[..., None] + pv
+        m = jax.lax.dynamic_update_slice_in_dim(
+            m, m_new.transpose(0, 2, 1), qs, axis=1)
+        l = jax.lax.dynamic_update_slice_in_dim(
+            l, l_new.transpose(0, 2, 1), qs, axis=1)
+        acc = jax.lax.dynamic_update_slice_in_dim(
+            acc, a_new.transpose(0, 2, 1, 3), qs, axis=1)
+        return (m, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (qi_l, kj_l, mk_l))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, bias_mask: Optional[jax.Array] = None
+                   ) -> jax.Array:
+    """Plain materialized-scores attention — oracle and short-sequence path."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    Sk = k.shape[1]
+    kf = _expand_kv(k, G).astype(jnp.float32)
+    vf = _expand_kv(v, G).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bphd->bhqp", q.astype(jnp.float32), kf)
+    s = s / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, Sk), bool), k=Sk - S)
+        s = jnp.where(mask, s, NEG_INF)
+    if bias_mask is not None:
+        s = jnp.where(bias_mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqp,bphd->bqhd", p, vf)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, K, hd)
+    v: jax.Array          # (B, S_max, K, hd)
+    length: jax.Array     # (B,) int32 filled positions
+
+
+def init_cache(batch: int, max_len: int, cfg: AttnConfig,
+               dtype=None) -> KVCache:
+    dtype = dtype or cfg.param_dtype
+    shp = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shp, dtype), jnp.zeros(shp, dtype),
+                   jnp.zeros((batch,), jnp.int32))
+
+
+def prefill_into_cache(cache: KVCache, k: jax.Array, v: jax.Array) -> KVCache:
+    """Write a full prefix (B, S, K, hd) at position 0."""
+    S = k.shape[1]
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, axis=1)
+    return KVCache(new_k, new_v, jnp.full_like(cache.length, S))
+
+
+def append_to_cache(cache: KVCache, k1: jax.Array, v1: jax.Array) -> KVCache:
+    """Append one token (B, 1, K, hd) at each sequence's current length."""
+    B = k1.shape[0]
+    idx = cache.length                                            # (B,)
+    bidx = jnp.arange(B)
+    new_k = cache.k.at[bidx, idx].set(k1[:, 0].astype(cache.k.dtype))
+    new_v = cache.v.at[bidx, idx].set(v1[:, 0].astype(cache.v.dtype))
+    return KVCache(new_k, new_v, cache.length + 1)
+
+
+def decode_attend(q1: jax.Array, cache: KVCache, *, sliding_window: int = 0
+                  ) -> jax.Array:
+    """One-token attention against the cache.
+
+    q1 (B, 1, H, hd) -> (B, 1, H, hd).  Valid-length masking uses the cache's
+    per-sequence ``length``.  With a sequence-sharded cache the max/sum over S
+    lower to all-reduces under SPMD (long-context decode path).
+
+    The GQA contraction stays on the K axis here (no KV expansion): decode is
+    memory-bound on the cache read, and the score tensor is tiny."""
+    B, _, H, hd = q1.shape
+    K = cache.k.shape[2]
+    G = H // K
+    S = cache.k.shape[1]
+    qg = q1.reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bpkd->bkgp", qg, cache.k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    pos = jnp.arange(S)[None, :]                                  # (1, S)
+    valid = pos < cache.length[:, None]
+    if sliding_window > 0:
+        valid &= pos >= (cache.length[:, None] - sliding_window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgp,bpkd->bkgd", p, cache.v.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q1.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block-level entry points
+# ---------------------------------------------------------------------------
+
+def forward(params: Params, cfg: AttnConfig, x: jax.Array,
+            positions: Optional[jax.Array] = None,
+            use_flash_above: int = 2048) -> jax.Array:
+    """Self-attention over a full sequence (train / prefill without cache)."""
+    B, S, _ = x.shape
+    if positions is None and cfg.use_rope:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    q, k, v = qkv(params, cfg, x, positions)
+    if S > use_flash_above:
+        o = flash_attention(q, k, v, causal=cfg.causal, chunk=cfg.chunk,
+                            sliding_window=cfg.sliding_window)
+    else:
+        band = None
+        if cfg.sliding_window > 0 and S > cfg.sliding_window:
+            band = (jnp.arange(S)[:, None] - jnp.arange(S)[None, :]) \
+                < cfg.sliding_window
+        o = full_attention(q, k, v, causal=cfg.causal, bias_mask=band)
+    return out_proj(params, cfg, o)
+
+
+def forward_prefill(params: Params, cfg: AttnConfig, x: jax.Array,
+                    cache: KVCache, use_flash_above: int = 2048
+                    ) -> tuple[jax.Array, KVCache]:
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    q, k, v = qkv(params, cfg, x, positions if cfg.use_rope else None)
+    cache = prefill_into_cache(cache, k, v)
+    if S > use_flash_above:
+        o = flash_attention(q, k, v, causal=cfg.causal, chunk=cfg.chunk,
+                            sliding_window=cfg.sliding_window)
+    else:
+        o = full_attention(q, k, v, causal=cfg.causal)
+    return out_proj(params, cfg, o), cache
+
+
+def forward_decode(params: Params, cfg: AttnConfig, x1: jax.Array,
+                   cache: KVCache) -> tuple[jax.Array, KVCache]:
+    """One decode step: x1 (B, 1, D)."""
+    positions = cache.length[:, None] if cfg.use_rope else None   # (B, 1)
+    q, k, v = qkv(params, cfg, x1, positions)
+    cache = append_to_cache(cache, k, v)
+    o = decode_attend(q, cache, sliding_window=cfg.sliding_window)
+    return out_proj(params, cfg, o), cache
+
+
+def forward_cross(params: Params, cfg: AttnConfig, x: jax.Array,
+                  enc_k: jax.Array, enc_v: jax.Array) -> jax.Array:
+    """Cross-attention: queries from x (B, S, D), precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"],
+                   preferred_element_type=cfg.accum_dtype)
+    if cfg.bias:
+        q = q + params["bq"].astype(cfg.accum_dtype)
+    o = full_attention(q, enc_k, enc_v, causal=False)
+    return out_proj(params, cfg, o)
+
+
+def cross_kv(params: Params, cfg: AttnConfig, enc_out: jax.Array
+             ) -> tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"],
+                   preferred_element_type=cfg.accum_dtype)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"],
+                   preferred_element_type=cfg.accum_dtype)
+    if cfg.bias:
+        k = k + params["bk"].astype(cfg.accum_dtype)
+        v = v + params["bv"].astype(cfg.accum_dtype)
+    return k, v

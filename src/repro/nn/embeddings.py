@@ -1,0 +1,73 @@
+"""Token embeddings and the LM head (tied or separate), plus frontend stubs.
+
+``[audio]`` / ``[vlm]`` archs take *precomputed* frame/patch embeddings per
+the assignment: the frontend is a learned projection stub, not a full conv /
+ViT tower (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+
+Params = dict
+
+
+def embed_init(key: jax.Array, vocab: int, d_model: int, *, tie: bool,
+               param_dtype) -> Params:
+    ks = jax.random.split(key, 2)
+    p: Params = {"tok": utils.truncated_init(ks[0], (vocab, d_model),
+                                             1.0 / math.sqrt(d_model), param_dtype)}
+    if not tie:
+        p["head"] = utils.truncated_init(ks[1], (d_model, vocab),
+                                         1.0 / math.sqrt(d_model), param_dtype)
+    return p
+
+
+def embed(params: Params, tokens: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
+    return jnp.take(params["tok"], tokens, axis=0).astype(accum_dtype)
+
+
+def logits(params: Params, x: jax.Array, accum_dtype=jnp.float32) -> jax.Array:
+    """x (..., D) -> (..., V) in float32 for a stable softmax/loss."""
+    if "head" in params:
+        return jnp.einsum("...d,dv->...v", x, params["head"],
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("...d,vd->...v", x, params["tok"],
+                      preferred_element_type=jnp.float32)
+
+
+def learned_pos_init(key: jax.Array, max_len: int, d_model: int,
+                     param_dtype) -> Params:
+    return {"pos": utils.truncated_init(key, (max_len, d_model), 0.02, param_dtype)}
+
+
+def learned_pos(params: Params, x: jax.Array, offset: int = 0) -> jax.Array:
+    S = x.shape[1]
+    return x + jax.lax.dynamic_slice_in_dim(
+        params["pos"], offset, S, axis=0).astype(x.dtype)
+
+
+def frontend_init(key: jax.Array, kind: str, d_model: int, param_dtype) -> Params:
+    """Stub frontends: a learned projection over precomputed embeddings."""
+    if kind == "none":
+        return {}
+    ks = jax.random.split(key, 2)
+    return {
+        "proj": utils.truncated_init(ks[0], (d_model, d_model),
+                                     1.0 / math.sqrt(d_model), param_dtype),
+        "bias": jnp.zeros((d_model,), param_dtype),
+    }
+
+
+def frontend(params: Params, embeds: jax.Array, accum_dtype=jnp.float32
+             ) -> jax.Array:
+    """Precomputed frame/patch embeddings (B, S, D) -> (B, S, D)."""
+    if not params:
+        return embeds.astype(accum_dtype)
+    y = jnp.einsum("bsd,de->bse", embeds.astype(accum_dtype),
+                   params["proj"], preferred_element_type=accum_dtype)
+    return y + params["bias"].astype(accum_dtype)

@@ -1,0 +1,166 @@
+"""Mamba (selective SSM) block — the Jamba hybrid's sequence mixer.
+
+Chunked selective scan: sequential ``lax.scan`` over sequence chunks with a
+parallel ``associative_scan`` inside each chunk, so peak memory is
+O(chunk * d_inner * d_state) instead of O(S * d_inner * d_state).
+Constant-size state makes this the sub-quadratic path for ``long_500k``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0               # 0 -> ceil(d_model / 16)
+    chunk: int = 256
+    param_dtype: Any = jnp.float32
+    accum_dtype: Any = jnp.float32
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def resolved_dt_rank(self) -> int:
+        return self.dt_rank or utils.cdiv(self.d_model, 16)
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array    # (B, d_conv - 1, d_inner) ring of recent inputs
+    ssm: jax.Array     # (B, d_inner, d_state)
+
+
+def init(key: jax.Array, cfg: MambaConfig) -> Params:
+    D, DI, N, R = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.resolved_dt_rank
+    ks = jax.random.split(key, 6)
+    pd = cfg.param_dtype
+    # dt bias: softplus^-1 of dt ~ U[1e-3, 1e-1] (Mamba init)
+    dt = jnp.exp(jax.random.uniform(ks[0], (DI,))
+                 * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log1p(-jnp.exp(-dt))
+    return {
+        "in_proj": utils.truncated_init(ks[1], (D, 2 * DI), 1.0 / math.sqrt(D), pd),
+        "conv_w": utils.truncated_init(ks[2], (cfg.d_conv, DI), 1.0 / math.sqrt(cfg.d_conv), pd),
+        "conv_b": jnp.zeros((DI,), pd),
+        "x_proj": utils.truncated_init(ks[3], (DI, R + 2 * N), 1.0 / math.sqrt(DI), pd),
+        "dt_proj": utils.truncated_init(ks[4], (R, DI), 1.0 / math.sqrt(R), pd),
+        "dt_bias": dt_bias.astype(pd),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (DI, N))).astype(pd),
+        "D_skip": jnp.ones((DI,), pd),
+        "out_proj": utils.truncated_init(ks[5], (DI, D), 1.0 / math.sqrt(DI), pd),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 history: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv1d.  x (B, S, DI), w (k, DI).
+
+    history (B, k-1, DI) holds the trailing inputs of the previous segment
+    (zeros at sequence start)."""
+    k = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _selective_scan_chunk(h0: jax.Array, da: jax.Array, dbx: jax.Array
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Linear recurrence h_t = da_t * h_{t-1} + dbx_t within one chunk.
+
+    h0 (B, DI, N); da, dbx (B, C, DI, N).  Returns (h_all (B, C, DI, N), h_C).
+    """
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_all, b_all = jax.lax.associative_scan(combine, (da, dbx), axis=1)
+    h_all = a_all * h0[:, None] + b_all
+    return h_all, h_all[:, -1]
+
+
+def scan_sequence(params: Params, cfg: MambaConfig, xz: jax.Array,
+                  state: MambaState) -> tuple[jax.Array, MambaState]:
+    """Core SSM over (B, S, DI) pre-activation input; returns (B, S, DI)."""
+    ad = cfg.accum_dtype
+    B, S, DI = xz.shape
+    N, R = cfg.d_state, cfg.resolved_dt_rank
+    chunk = min(cfg.chunk, S)
+    if S % chunk:
+        chunk = math.gcd(S, chunk)
+    n_chunks = S // chunk
+    A = -jnp.exp(params["A_log"].astype(ad))                      # (DI, N)
+
+    xz_c = xz.reshape(B, n_chunks, chunk, DI).transpose(1, 0, 2, 3)
+    conv_hist0 = state.conv
+
+    def body(carry, x_chunk):                                     # (B, C, DI)
+        h, conv_hist = carry
+        xc = _causal_conv(x_chunk, params["conv_w"], params["conv_b"], conv_hist)
+        xc = jax.nn.silu(xc)
+        proj = jnp.einsum("bcd,dr->bcr", xc, params["x_proj"],
+                          preferred_element_type=ad)
+        dt_r, Bmat, Cmat = jnp.split(proj, [R, R + N], axis=-1)
+        dt = jax.nn.softplus(
+            jnp.einsum("bcr,rd->bcd", dt_r, params["dt_proj"],
+                       preferred_element_type=ad)
+            + params["dt_bias"].astype(ad))                       # (B, C, DI)
+        da = jnp.exp(dt[..., None] * A)                           # (B, C, DI, N)
+        dbx = dt[..., None] * Bmat[:, :, None, :] * xc[..., None]  # (B,C,DI,N)
+        h_all, h_new = _selective_scan_chunk(h, da, dbx)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, Cmat)
+        y = y + xc * params["D_skip"].astype(ad)
+        new_hist = jnp.concatenate([conv_hist, x_chunk],
+                                   axis=1)[:, -(cfg.d_conv - 1):]
+        return (h_new, new_hist), y
+
+    (h_fin, hist_fin), ys = jax.lax.scan(body, (state.ssm, conv_hist0), xz_c)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, DI)
+    return y, MambaState(hist_fin, h_fin)
+
+
+def init_state(batch: int, cfg: MambaConfig, dtype=None) -> MambaState:
+    dtype = dtype or cfg.accum_dtype
+    return MambaState(
+        jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        jnp.zeros((batch, cfg.d_inner, cfg.d_state), dtype))
+
+
+def forward(params: Params, cfg: MambaConfig, x: jax.Array,
+            state: MambaState | None = None
+            ) -> tuple[jax.Array, MambaState]:
+    """Full Mamba block: x (B, S, D) -> (B, S, D) + final state."""
+    ad = cfg.accum_dtype
+    B, S, _ = x.shape
+    if state is None:
+        state = init_state(B, cfg)
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"], preferred_element_type=ad)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    y, new_state = scan_sequence(params, cfg, xs, state)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"], preferred_element_type=ad)
+    return out, new_state
+
+
+def forward_step(params: Params, cfg: MambaConfig, x1: jax.Array,
+                 state: MambaState) -> tuple[jax.Array, MambaState]:
+    """Single-token decode: x1 (B, 1, D) -> (B, 1, D).  O(1) in context len."""
+    y, new_state = forward(params, cfg, x1, state)
+    return y, new_state

@@ -1,0 +1,96 @@
+"""FFN sites: the dispatch point for the paper's technique.
+
+``FFNSpec.kind`` selects dense (vanilla FF), fff (fast feedforward — the
+paper), or moe (noisy-top-k — the contender).  One init/forward interface so
+transformer blocks are agnostic to the choice; aux losses (hardening entropy,
+MoE balancing) flow out through the aux dict.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FFNSpec
+from repro.core import ff, fff, moe
+
+Params = dict
+
+
+def make_fff_config(spec: FFNSpec, d_model: int, *, param_dtype, accum_dtype
+                    ) -> fff.FFFConfig:
+    return fff.FFFConfig(
+        dim_in=d_model, dim_out=d_model, depth=spec.fff_depth,
+        leaf_width=spec.fff_leaf_width, node_width=spec.fff_node_width,
+        activation=spec.activation, trees=spec.fff_trees,
+        hardening_scale=spec.hardening_scale, leaf_bias=False,
+        st_training=spec.fff_st,
+        param_dtype=param_dtype, accum_dtype=accum_dtype)
+
+
+def make_moe_config(spec: FFNSpec, d_model: int, *, param_dtype, accum_dtype
+                    ) -> moe.MoEConfig:
+    return moe.MoEConfig(
+        dim_in=d_model, dim_out=d_model, num_experts=spec.moe_experts,
+        expert_width=spec.d_ff, top_k=spec.moe_top_k,
+        activation="gelu" if spec.activation == "swiglu" else spec.activation,
+        bias=False, param_dtype=param_dtype, accum_dtype=accum_dtype)
+
+
+def make_ff_config(spec: FFNSpec, d_model: int, *, param_dtype, accum_dtype
+                   ) -> ff.FFConfig:
+    return ff.FFConfig(
+        dim_in=d_model, dim_out=d_model, width=spec.d_ff,
+        activation=spec.activation, bias=False,
+        param_dtype=param_dtype, accum_dtype=accum_dtype)
+
+
+def init(key: jax.Array, spec: FFNSpec, d_model: int, *, param_dtype,
+         accum_dtype) -> Params:
+    kw = dict(param_dtype=param_dtype, accum_dtype=accum_dtype)
+    if spec.kind == "none":
+        return {}
+    if spec.kind == "dense":
+        return ff.init(key, make_ff_config(spec, d_model, **kw))
+    if spec.kind == "fff":
+        return fff.init(key, make_fff_config(spec, d_model, **kw))
+    if spec.kind == "moe":
+        return moe.init(key, make_moe_config(spec, d_model, **kw))
+    raise ValueError(f"unknown ffn kind {spec.kind!r}")
+
+
+def forward(params: Params, spec: FFNSpec, d_model: int, x: jax.Array, *,
+            param_dtype, accum_dtype, train: bool = True,
+            rng: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
+    """x (..., D) -> (..., D), aux {'hardening': scalar, 'moe_aux': scalar}."""
+    kw = dict(param_dtype=param_dtype, accum_dtype=accum_dtype)
+    zero = jnp.zeros((), jnp.float32)
+    if spec.kind == "none":
+        return x, {"hardening": zero, "moe_aux": zero}
+    if spec.kind == "dense":
+        return ff.forward(params, make_ff_config(spec, d_model, **kw), x), \
+            {"hardening": zero, "moe_aux": zero}
+    if spec.kind == "fff":
+        cfg = make_fff_config(spec, d_model, **kw)
+        if train:
+            y, aux = fff.forward_train(params, cfg, x, rng=rng)
+            harden = spec.hardening_scale * fff.hardening_loss(aux["node_probs"])
+        else:
+            # grouped dispatch for big bias-free sites (EP-shardable); exact
+            # per-token gather for small leaves
+            if cfg.num_leaves * cfg.leaf_width >= 4096:
+                y, _ = fff.forward_hard_grouped(params, cfg, x)
+            else:
+                y, _ = fff.forward_hard(params, cfg, x)
+        return y, {"hardening": harden.astype(jnp.float32) if train else zero,
+                   "moe_aux": zero}
+    if spec.kind == "moe":
+        cfg = make_moe_config(spec, d_model, **kw)
+        if train:
+            y, aux = moe.forward(params, cfg, x, rng=rng, train=True)
+            return y, {"hardening": zero,
+                       "moe_aux": aux["aux_loss"].astype(jnp.float32)}
+        y, _ = moe.forward_sparse(params, cfg, x)
+        return y, {"hardening": zero, "moe_aux": zero}
+    raise ValueError(f"unknown ffn kind {spec.kind!r}")

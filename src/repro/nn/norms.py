@@ -1,0 +1,45 @@
+"""Normalization layers (RMSNorm / LayerNorm).
+
+Numerics note (§Perf iter 3): reductions (mean/var) accumulate in float32,
+but the normalize multiply stays in the input dtype.  Materializing a full
+f32 copy of the residual stream made XLA hoist the upcast through the
+residual add into the tensor-parallel all-reduces, doubling the dominant
+collective bytes of every training step (f32 ARs of (tokens, D)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    y = (x - mean.astype(x.dtype)) * inv
+    return y * params["scale"].astype(x.dtype) + params["bias"].astype(x.dtype)
+
+
+def norm_init(kind: str, dim: int, dtype=jnp.float32) -> Params:
+    return rmsnorm_init(dim, dtype) if kind == "rmsnorm" else layernorm_init(dim, dtype)
+
+
+def norm_apply(kind: str, params: Params, x: jax.Array) -> jax.Array:
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)

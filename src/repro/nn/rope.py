@@ -1,0 +1,34 @@
+"""Rotary position embeddings (RoPE), plus sinusoidal absolute embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0
+               ) -> jax.Array:
+    """Rotate (..., S, H, head_dim) by per-position angles.
+
+    positions: (..., S) int32 absolute positions (supports KV-cache decode by
+    passing the cache offsets)."""
+    freqs = rope_frequencies(x.shape[-1], theta)                 # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                          # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(seq_len: int, dim: int, max_timescale: float = 10000.0
+                         ) -> jax.Array:
+    """Classic transformer sinusoidal table (S, D) — whisper encoder style."""
+    half = dim // 2
+    inv = 1.0 / (max_timescale ** (jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1)))
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(pos), jnp.cos(pos)], axis=-1)

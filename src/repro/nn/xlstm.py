@@ -1,0 +1,272 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM (scalar
+memory, strictly sequential) — Beck et al., 2024 (arXiv:2405.04517).
+
+mLSTM state per head is a (hd x hd) matrix updated with exponential gating:
+    C_t = f_t C_{t-1} + i_t v_t k_t^T,   n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t q_t / max(|n_t . q_t|, 1)
+We run it chunkwise (sequential over chunks, parallel inside) in log-space for
+stability; the sequential formulation is kept as the oracle (tests compare).
+Constant-size state => sub-quadratic: this is the long_500k-capable arch.
+
+Simplifications vs. the reference implementation are documented in DESIGN.md:
+block wiring follows the paper's pre-up-projection (mLSTM) and
+post-up-projection (sLSTM) shapes, with GroupNorm over heads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+
+Params = dict
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    expand: int = 2                # mLSTM up-projection factor
+    chunk: int = 256
+    param_dtype: Any = jnp.float32
+    accum_dtype: Any = jnp.float32
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, hd, hd)
+    n: jax.Array   # (B, H, hd)
+    m: jax.Array   # (B, H)  running log-scale
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array   # (B, d_model)
+    c: jax.Array   # (B, d_model)
+    n: jax.Array   # (B, d_model)
+    m: jax.Array   # (B, d_model)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key: jax.Array, cfg: XLSTMConfig) -> Params:
+    D, DI, H, hd = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 7)
+    pd = cfg.param_dtype
+    s = 1.0 / math.sqrt(D)
+    si = 1.0 / math.sqrt(DI)
+    return {
+        "up_proj": utils.truncated_init(ks[0], (D, 2 * DI), s, pd),
+        "wq": utils.truncated_init(ks[1], (DI, H, hd), si, pd),
+        "wk": utils.truncated_init(ks[2], (DI, H, hd), si, pd),
+        "wv": utils.truncated_init(ks[3], (DI, H, hd), si, pd),
+        "w_if": utils.truncated_init(ks[4], (DI, 2 * H), si, pd),
+        # forget-gate bias >> 0 so early training approximates cumulative sum
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(pd),
+        "gn_scale": jnp.ones((H, hd), pd),
+        "down_proj": utils.truncated_init(ks[5], (DI, D), si, pd),
+    }
+
+
+def _mlstm_gates(params: Params, cfg: XLSTMConfig, xi: jax.Array):
+    """q, k, v (B, S, H, hd); log-i, log-f (B, S, H)."""
+    ad = cfg.accum_dtype
+    q = jnp.einsum("bsd,dhk->bshk", xi, params["wq"], preferred_element_type=ad)
+    k = jnp.einsum("bsd,dhk->bshk", xi, params["wk"], preferred_element_type=ad) \
+        / math.sqrt(cfg.head_dim)
+    v = jnp.einsum("bsd,dhk->bshk", xi, params["wv"], preferred_element_type=ad)
+    g = jnp.einsum("bsd,dh->bsh", xi, params["w_if"], preferred_element_type=ad) \
+        + params["b_if"].astype(ad)
+    log_i, f_pre = jnp.split(g, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_pre)        # exp-gating via sigmoid-forget
+    return q, k, v, log_i, log_f
+
+
+def mlstm_sequential(q, k, v, log_i, log_f, state: MLSTMState
+                     ) -> tuple[jax.Array, MLSTMState]:
+    """Oracle: stabilized per-step recurrence. Shapes as in _mlstm_gates."""
+    def step(s, t):
+        C, n, m = s
+        qt, kt, vt, lit, lft = t
+        m_new = jnp.maximum(lft + m, lit)                       # (B, H)
+        i_p = jnp.exp(lit - m_new)
+        f_p = jnp.exp(lft + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] \
+            * (vt[..., :, None] * kt[..., None, :])             # (B,H,hd,hd)
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt))
+        h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, log_i, log_f))
+    (C, n, m), hs = jax.lax.scan(step, (state.C, state.n, state.m), xs)
+    return jnp.moveaxis(hs, 0, 1), MLSTMState(C, n, m)
+
+
+def mlstm_chunkwise(q, k, v, log_i, log_f, state: MLSTMState, chunk: int
+                    ) -> tuple[jax.Array, MLSTMState]:
+    """Chunkwise-parallel stabilized mLSTM (production path).
+
+    Sequential scan over S/chunk chunks; inside a chunk, intra-chunk causal
+    contributions and the inter-chunk carry are dense einsums (MXU-friendly).
+    """
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = math.gcd(S, chunk)
+    n_ch = S // chunk
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(B, n_ch, chunk, *t.shape[2:]), 1, 0)
+
+    qs, ks_, vs, lis, lfs = map(to_chunks, (q, k, v, log_i, log_f))
+
+    def body(carry, t):
+        C, n, m = carry                         # C/exp(m) convention: C,n are
+        qt, kt, vt, lit, lft = t                # already scaled by exp(-m)
+        F = jnp.cumsum(lft, axis=1)             # (B, C, H) cumulative log-f
+        # log weight of source step s seen at the chunk end: F_L - F_s + li_s
+        F_last = F[:, -1:, :]
+        src = F_last - F + lit                  # (B, C, H)
+        # stabilizer for this chunk
+        m_new = jnp.maximum(F_last[:, 0] + m, src.max(axis=1))   # (B, H)
+        # --- intra-chunk: score(t, s) = q_t.k_s * exp(F_t - F_s + li_s) ---
+        # stabilized per-row by b_t = max(F_t + m, max_s<=t (F_t - F_s + li_s))
+        dmat = F[:, :, None, :] - F[:, None, :, :] + lit[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)  # (B,Ct,Cs,H)
+        inter_log = F + m[:, None, :]                            # (B, C, H)
+        b = jnp.maximum(dmat.max(axis=2), inter_log)             # (B, C, H)
+        w_intra = jnp.exp(dmat - b[:, :, None, :])               # (B,Ct,Cs,H)
+        scores = jnp.einsum("bthk,bshk->btsh", qt, kt) * w_intra
+        num = jnp.einsum("btsh,bshv->bthv", scores, vt)
+        den = scores.sum(axis=2)                                 # (B, C, H)
+        # --- inter-chunk: carry C (already exp(-m)-scaled) ---
+        w_inter = jnp.exp(inter_log - b)                         # (B, C, H)
+        num = num + jnp.einsum("bthk,bhvk->bthv", qt, C) * w_inter[..., None]
+        den = den + jnp.einsum("bthk,bhk->bth", qt, n) * w_inter
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-b))[..., None]
+        # --- state update (rescale to the new stabilizer m_new) ---
+        w_src = jnp.exp(src - m_new[:, None, :])                 # (B, C, H)
+        w_old = jnp.exp(F_last[:, 0] + m - m_new)                # (B, H)
+        C_new = w_old[..., None, None] * C + jnp.einsum(
+            "bshv,bshk,bsh->bhvk", vt, kt, w_src)
+        n_new = w_old[..., None] * n + jnp.einsum("bshk,bsh->bhk", kt, w_src)
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(body, (state.C, state.n, state.m),
+                                 (qs, ks_, vs, lis, lfs))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, H, hd), MLSTMState(C, n, m)
+
+
+def _group_norm(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Per-head LayerNorm (GroupNorm with groups = heads): x (B, S, H, hd)."""
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = xf.var(axis=-1, keepdims=True)
+    return ((xf - mean) * jax.lax.rsqrt(var + 1e-6)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mlstm_block(params: Params, cfg: XLSTMConfig, x: jax.Array,
+                state: MLSTMState | None = None, *, sequential: bool = False
+                ) -> tuple[jax.Array, MLSTMState]:
+    """Full mLSTM block: (B, S, D) -> (B, S, D) + state."""
+    ad = cfg.accum_dtype
+    B, S, _ = x.shape
+    if state is None:
+        state = mlstm_init_state(B, cfg)
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"], preferred_element_type=ad)
+    xi, z = jnp.split(up, 2, axis=-1)
+    q, k, v, log_i, log_f = _mlstm_gates(params, cfg, xi)
+    if sequential:
+        h, new_state = mlstm_sequential(q, k, v, log_i, log_f, state)
+    else:
+        h, new_state = mlstm_chunkwise(q, k, v, log_i, log_f, state, cfg.chunk)
+    h = _group_norm(h, params["gn_scale"]).reshape(B, S, cfg.d_inner)
+    h = h * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", h, params["down_proj"],
+                      preferred_element_type=ad), new_state
+
+
+def mlstm_init_state(batch: int, cfg: XLSTMConfig, dtype=jnp.float32) -> MLSTMState:
+    H, hd = cfg.n_heads, cfg.head_dim
+    return MLSTMState(jnp.zeros((batch, H, hd, hd), dtype),
+                      jnp.zeros((batch, H, hd), dtype),
+                      jnp.full((batch, H), -1e30, dtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key: jax.Array, cfg: XLSTMConfig) -> Params:
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    ks = jax.random.split(key, 3)
+    pd = cfg.param_dtype
+    s = 1.0 / math.sqrt(D)
+    return {
+        # 4 gates (i, f, z, o) from input; recurrent weights block-diagonal
+        "w_x": utils.truncated_init(ks[0], (D, 4 * D), s, pd),
+        "w_h": utils.truncated_init(ks[1], (H, dh, 4 * dh), 1.0 / math.sqrt(dh), pd),
+        "b": jnp.concatenate([jnp.zeros((D,)), 3.0 * jnp.ones((D,)),
+                              jnp.zeros((2 * D,))]).astype(pd),
+        "gn_scale": jnp.ones((D,), pd),
+        "out_proj": utils.truncated_init(ks[2], (D, D), s, pd),
+    }
+
+
+def slstm_block(params: Params, cfg: XLSTMConfig, x: jax.Array,
+                state: SLSTMState | None = None
+                ) -> tuple[jax.Array, SLSTMState]:
+    """Strictly sequential sLSTM: (B, S, D) -> (B, S, D) + state."""
+    ad = cfg.accum_dtype
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    if state is None:
+        state = slstm_init_state(B, D, dtype=ad)
+    gx = jnp.einsum("bsd,de->bse", x, params["w_x"], preferred_element_type=ad) \
+        + params["b"].astype(ad)                                 # (B, S, 4D)
+
+    def step(s_, gx_t):
+        h, c, n, m = s_
+        hh = h.reshape(B, H, dh)
+        gr = jnp.einsum("bhk,hke->bhe", hh, params["w_h"].astype(ad))
+        g = gx_t + gr.reshape(B, 4 * D)
+        gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(jax.nn.log_sigmoid(gf) + m, gi)
+        i_p = jnp.exp(gi - m_new)
+        f_p = jnp.exp(jax.nn.log_sigmoid(gf) + m - m_new)
+        c_new = f_p * c + i_p * jnp.tanh(gz)
+        n_new = f_p * n + i_p
+        h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    (h, c, n, m), hs = jax.lax.scan(step, tuple(state), jnp.moveaxis(gx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)                                   # (B, S, D)
+    # per-head group norm
+    yh = y.reshape(B, S, H, dh)
+    yh = _group_norm(yh, params["gn_scale"].reshape(H, dh)).reshape(B, S, D)
+    out = jnp.einsum("bsd,de->bse", yh, params["out_proj"],
+                     preferred_element_type=ad)
+    return out, SLSTMState(h, c, n, m)
+
+
+def slstm_init_state(batch: int, d_model: int, dtype=jnp.float32) -> SLSTMState:
+    z = jnp.zeros((batch, d_model), dtype)
+    return SLSTMState(z, z, z, jnp.full((batch, d_model), -1e30, dtype))

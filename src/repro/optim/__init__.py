@@ -1,0 +1,8 @@
+"""Optimizers (no optax in this environment — own implementations)."""
+from repro.optim.adamw import adamw
+from repro.optim.sgd import sgd
+from repro.optim.schedules import (constant, cosine_warmup, plateau_halving,
+                                   Schedule)
+from repro.optim.common import (Optimizer, apply_updates, clip_by_global_norm,
+                                chain_clip)
+from repro.optim.accum import gradient_accumulation

@@ -1,0 +1,51 @@
+"""Gradient accumulation: microbatch the global batch through a lax.scan so
+arbitrarily large global batches fit device memory (shrinking-batch-problem
+mitigation from the paper, and the standard LLM trick)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def gradient_accumulation(loss_fn: Callable, num_micro: int) -> Callable:
+    """loss_fn(params, batch, rng) -> (loss, metrics).
+
+    Returns grad_fn(params, batch, rng) -> (grads, (loss, metrics)) where the
+    batch's leading dim is split into ``num_micro`` microbatches processed
+    sequentially with donated accumulators."""
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def grad_fn(params: PyTree, batch: PyTree, rng: Optional[jax.Array] = None):
+        if num_micro <= 1:
+            (loss, metrics), grads = vg(params, batch, rng)
+            return grads, (loss, metrics)
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(num_micro, b // num_micro, *x.shape[1:])
+
+        micro = jax.tree_util.tree_map(split, batch)
+        rngs = (jax.random.split(rng, num_micro) if rng is not None
+                else jnp.zeros((num_micro,), jnp.uint32))
+
+        def body(carry, xs):
+            g_acc, l_acc = carry
+            mb, r = xs
+            (loss, _), grads = vg(params, mb, r if rng is not None else None)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+            return (g_acc, l_acc + loss), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g_sum, l_sum), _ = jax.lax.scan(body, (g0, jnp.zeros(())), (micro, rngs))
+        scale = 1.0 / num_micro
+        grads = jax.tree_util.tree_map(lambda g: g * scale, g_sum)
+        loss = l_sum * scale
+        return grads, (loss, {"loss": loss})
+
+    return grad_fn

@@ -1,0 +1,61 @@
+"""AdamW with float32 moments (params may be bf16; moments are kept f32 so
+mixed-precision training is stable — the standard LLM recipe)."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.common import Optimizer
+
+PyTree = Any
+ScheduleOrFloat = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree     # first moment, f32
+    nu: PyTree     # second moment, f32
+
+
+def adamw(lr: ScheduleOrFloat, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    def lr_at(step):
+        return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+    def init(params: PyTree) -> AdamWState:
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree_util.tree_map(f32, params),
+                          jax.tree_util.tree_map(f32, params))
+
+    def update(grads: PyTree, state: AdamWState, params: Optional[PyTree] = None
+               ) -> tuple[PyTree, AdamWState]:
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        lr_t = lr_at(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            u = -lr_t * ((m / c1) / (jnp.sqrt(v / c2) + eps))
+            if weight_decay > 0.0 and p is not None and p.ndim >= 2:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u, m, v
+
+        ps = params if params is not None else jax.tree_util.tree_map(
+            lambda g: None, grads)
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, ps)
+        updates = jax.tree_util.tree_map(lambda t3: t3[0], flat,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t3: t3[1], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda t3: t3[2], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdamWState(step, mu, nu)
+
+    return Optimizer(init, update)

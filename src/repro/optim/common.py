@@ -1,0 +1,37 @@
+"""Optimizer interface (optax-style init/update pairs) and shared transforms."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., tuple[PyTree, PyTree]]   # (grads, state, params)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    """params + updates, preserving each param's dtype (bf16-safe)."""
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = utils.tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def chain_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Wrap an optimizer with global-norm gradient clipping."""
+    def update(grads, state, params=None, **kw):
+        grads, _ = clip_by_global_norm(grads, max_norm)
+        return opt.update(grads, state, params, **kw)
+    return Optimizer(opt.init, update)

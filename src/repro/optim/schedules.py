@@ -1,0 +1,80 @@
+"""Learning-rate schedules, including the paper's plateau-halving rule."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+Schedule = Callable
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") \
+            else jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+class PlateauHalver:
+    """Host-side plateau halving: the paper halves the lr on N-epoch training
+    accuracy plateaus (Table 2/3 experiments).  Stateful; feed it the metric
+    each epoch and read ``lr``."""
+
+    def __init__(self, lr: float, patience: int, mode: str = "max",
+                 min_lr: float = 1e-6):
+        self.lr = lr
+        self.patience = patience
+        self.mode = mode
+        self.min_lr = min_lr
+        self.best = -np.inf if mode == "max" else np.inf
+        self.bad = 0
+
+    def step(self, metric: float) -> float:
+        better = metric > self.best if self.mode == "max" else metric < self.best
+        if better:
+            self.best = metric
+            self.bad = 0
+        else:
+            self.bad += 1
+            if self.bad >= self.patience:
+                self.lr = max(self.lr * 0.5, self.min_lr)
+                self.bad = 0
+        return self.lr
+
+
+def plateau_halving(lr: float, patience: int, **kw) -> PlateauHalver:
+    return PlateauHalver(lr, patience, **kw)
+
+
+class EarlyStopper:
+    """Early stopping on a validation metric (paper: 350-epoch patience)."""
+
+    def __init__(self, patience: int, mode: str = "max"):
+        self.patience = patience
+        self.mode = mode
+        self.best = -np.inf if mode == "max" else np.inf
+        self.bad = 0
+        self.best_step = 0
+
+    def step(self, metric: float, step: int) -> bool:
+        """Returns True when training should stop."""
+        better = metric > self.best if self.mode == "max" else metric < self.best
+        if better:
+            self.best = metric
+            self.best_step = step
+            self.bad = 0
+            return False
+        self.bad += 1
+        return self.bad >= self.patience

@@ -1,0 +1,45 @@
+"""Plain SGD (+momentum) — the paper's explorative experiments use pure SGD
+with lr 0.2."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.common import Optimizer
+
+PyTree = Any
+ScheduleOrFloat = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: PyTree
+
+
+def sgd(lr: ScheduleOrFloat, momentum: float = 0.0) -> Optimizer:
+    def lr_at(step):
+        return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+    def init(params: PyTree) -> SGDState:
+        mom = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+            if momentum else jax.tree_util.tree_map(lambda p: jnp.zeros(()), params)
+        return SGDState(jnp.zeros((), jnp.int32), mom)
+
+    def update(grads: PyTree, state: SGDState, params: Optional[PyTree] = None
+               ) -> tuple[PyTree, SGDState]:
+        step = state.step + 1
+        lr_t = lr_at(step)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state.momentum, grads)
+            updates = jax.tree_util.tree_map(lambda m: -lr_t * m, mom)
+            return updates, SGDState(step, mom)
+        updates = jax.tree_util.tree_map(
+            lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return updates, SGDState(step, state.momentum)
+
+    return Optimizer(init, update)

@@ -1,0 +1,152 @@
+"""Small shared utilities used across the repro framework."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterable, Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def tree_size(tree: PyTree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), tree)
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_finite(tree: PyTree) -> jax.Array:
+    """True iff every leaf of the tree is finite everywhere."""
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.all(jnp.stack(leaves))
+
+
+def tree_global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+# ---------------------------------------------------------------------------
+# PRNG helpers
+# ---------------------------------------------------------------------------
+
+def split_like(key: jax.Array, tree: PyTree) -> PyTree:
+    """One fresh key per leaf of `tree`, arranged in the same structure."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(treedef, list(keys))
+
+
+# ---------------------------------------------------------------------------
+# shape / math helpers
+# ---------------------------------------------------------------------------
+
+def next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 2 ** math.ceil(math.log2(x))
+
+
+def is_pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def flatten_leading(x: jax.Array) -> tuple[jax.Array, tuple[int, ...]]:
+    """Collapse all leading dims of (..., D) into one batch dim."""
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def unflatten_leading(x: jax.Array, lead: tuple[int, ...]) -> jax.Array:
+    return x.reshape(*lead, x.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# initializers (no flax in this environment)
+# ---------------------------------------------------------------------------
+
+def lecun_normal(key, shape, dtype=jnp.float32, fan_in_axis: int = -2) -> jax.Array:
+    fan_in = shape[fan_in_axis]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def he_normal(key, shape, dtype=jnp.float32, fan_in_axis: int = -2) -> jax.Array:
+    fan_in = shape[fan_in_axis]
+    std = math.sqrt(2.0 / fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def truncated_init(key, shape, std, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * std).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# dataclass config plumbing
+# ---------------------------------------------------------------------------
+
+def replace(cfg, **kw):
+    return dataclasses.replace(cfg, **kw)
+
+
+def asdict_shallow(cfg) -> dict:
+    return {f.name: getattr(cfg, f.name) for f in dataclasses.fields(cfg)}
+
+
+ACTIVATIONS: Mapping[str, Callable[[jax.Array], jax.Array]] = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "tanh": jnp.tanh,
+    "identity": lambda x: x,
+}
+
+
+def get_activation(name: str) -> Callable[[jax.Array], jax.Array]:
+    if name not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {name!r}; have {sorted(ACTIVATIONS)}")
+    return ACTIVATIONS[name]
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"
+
+
+def human_flops(n: float) -> str:
+    for unit in ("F", "KF", "MF", "GF", "TF"):
+        if abs(n) < 1e3:
+            return f"{n:.2f}{unit}"
+        n /= 1e3
+    return f"{n:.2f}PF"

@@ -1,0 +1,10 @@
+"""Test fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benchmarks must see the real single CPU device; only launch/dryrun.py forces
+512 placeholder devices (and tests exercise it via a subprocess)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

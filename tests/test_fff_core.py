@@ -1,0 +1,179 @@
+"""Unit tests for the core FFF layer: paper Algorithm 1 semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ff, fff
+
+
+def make(depth=3, leaf=4, din=16, dout=10, act="relu", trees=1, seed=0, **kw):
+    cfg = fff.FFFConfig(dim_in=din, dim_out=dout, depth=depth, leaf_width=leaf,
+                        activation=act, trees=trees, **kw)
+    return cfg, fff.init(jax.random.PRNGKey(seed), cfg)
+
+
+def test_shapes_train_and_hard():
+    cfg, p = make()
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    y_t, aux = fff.forward_train(p, cfg, x)
+    y_i, aux_i = fff.forward_hard(p, cfg, x)
+    assert y_t.shape == (32, 10) and y_i.shape == (32, 10)
+    assert aux["node_probs"].shape == (32, 1, cfg.num_nodes)
+    assert aux["mixture"].shape == (32, 1, cfg.num_leaves)
+    assert aux_i["leaf_idx"].shape == (32, 1)
+    assert jnp.isfinite(y_t).all() and jnp.isfinite(y_i).all()
+
+
+def test_mixture_weights_form_distribution():
+    cfg, p = make(depth=5, leaf=2)
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, 16))
+    _, aux = fff.forward_train(p, cfg, x)
+    s = aux["mixture"].sum(-1)
+    np.testing.assert_allclose(np.asarray(s), 1.0, atol=1e-5)
+    assert (aux["mixture"] >= 0).all()
+
+
+def test_leading_dims_flattened():
+    cfg, p = make()
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 16))
+    y, _ = fff.forward_train(p, cfg, x)
+    assert y.shape == (4, 8, 10)
+    y2, _ = fff.forward_hard(p, cfg, x)
+    assert y2.shape == (4, 8, 10)
+
+
+def test_hard_equals_train_when_hardened():
+    """FORWARD_I == FORWARD_T in the hardened limit (paper §Hardening),
+    on tokens with a decision margin at every node."""
+    cfg, p = make(depth=3, leaf=4)
+    scale = 50000.0
+    p_hard = dict(p)
+    p_hard["node_w1"] = p["node_w1"] * scale
+    p_hard["node_b1"] = p["node_b1"] * scale
+    x = jax.random.normal(jax.random.PRNGKey(4), (128, 16))
+    # keep only tokens where every node decision has margin
+    logits = fff._node_logits_all(p, cfg, x.astype(jnp.float32))
+    margin = jnp.abs(logits).min(axis=(1, 2))
+    keep = np.asarray(margin) > 1e-3
+    x = x[keep]
+    y_t, _ = fff.forward_train(p_hard, cfg, x)
+    y_i, _ = fff.forward_hard(p_hard, cfg, x)
+    np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_i),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_zero_nodes_equals_scaled_dense_ff():
+    """Paper §Size and width: FFF with zeroed node nets == vanilla FF of the
+    training width, up to the uniform 2^-d output rescale."""
+    cfg, p = make(depth=2, leaf=4)
+    for k in ("node_w1", "node_b1", "node_w2", "node_b2"):
+        p[k] = jnp.zeros_like(p[k])
+    x = jax.random.normal(jax.random.PRNGKey(5), (16, 16))
+    y, _ = fff.forward_train(p, cfg, x)
+    dense = fff.as_dense_ff_params(p, cfg)
+    fcfg = ff.FFConfig(dim_in=16, dim_out=10, width=16, activation="relu")
+    y_ff = ff.forward(dense, fcfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ff), atol=1e-5)
+
+
+def test_route_hard_matches_per_level_gather():
+    cfg, p = make(depth=6, leaf=2, din=24)
+    x = jax.random.normal(jax.random.PRNGKey(6), (64, 24))
+    dense = fff.route_hard(p, cfg, x, dense_levels=8)
+    gather = fff.route_hard(p, cfg, x, dense_levels=0)
+    assert (dense == gather).all()
+
+
+def test_forest_sums_trees():
+    cfg, p = make(depth=2, leaf=4, trees=3)
+    x = jax.random.normal(jax.random.PRNGKey(7), (8, 16))
+    y, _ = fff.forward_hard(p, cfg, x)
+    # evaluate each tree separately and sum
+    total = jnp.zeros_like(y)
+    for t in range(3):
+        p_t = {k: v[t:t + 1] for k, v in p.items()}
+        cfg_t = fff.FFFConfig(dim_in=16, dim_out=10, depth=2, leaf_width=4,
+                              activation="relu", trees=1)
+        y_t, _ = fff.forward_hard(p_t, cfg_t, x)
+        total = total + y_t
+    np.testing.assert_allclose(np.asarray(y), np.asarray(total), atol=1e-5)
+
+
+def test_grouped_hard_matches_gather_hard():
+    cfg, p = make(depth=4, leaf=8, act="swiglu", leaf_bias=False)
+    x = jax.random.normal(jax.random.PRNGKey(8), (64, 16))
+    y1, a1 = fff.forward_hard(p, cfg, x)
+    y2, a2 = fff.forward_hard_grouped(p, cfg, x, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    assert (a1["leaf_idx"] == a2["leaf_idx"]).all()
+
+
+def test_hardening_loss_properties():
+    p_half = jnp.full((8, 1, 7), 0.5)
+    p_hard = jnp.concatenate([jnp.full((8, 1, 4), 1e-6),
+                              jnp.full((8, 1, 3), 1 - 1e-6)], axis=-1)
+    assert float(fff.hardening_loss(p_half)) == pytest.approx(np.log(2), rel=1e-3)
+    assert float(fff.hardening_loss(p_hard)) < 1e-4
+    assert float(fff.decisive_fraction(p_hard)) == 1.0
+    assert float(fff.decisive_fraction(p_half)) == 0.0
+
+
+def test_st_training_grads_flow_everywhere():
+    cfg, p = make(depth=3, leaf=4, act="swiglu", leaf_bias=False,
+                  st_training=True)
+    x = jax.random.normal(jax.random.PRNGKey(9), (64, 16))
+
+    def loss(p):
+        y, aux = fff.forward_train(p, cfg, x)
+        return (y ** 2).mean() + 0.1 * aux["entropy"]
+
+    g = jax.grad(loss)(p)
+    for k, v in g.items():
+        assert jnp.isfinite(v).all(), k
+        assert float(jnp.abs(v).sum()) > 0, f"zero grad for {k}"
+
+
+def test_dense_training_grads_flow_everywhere():
+    cfg, p = make(depth=3, leaf=4)
+    x = jax.random.normal(jax.random.PRNGKey(10), (32, 16))
+
+    def loss(p):
+        y, aux = fff.forward_train(p, cfg, x)
+        return (y ** 2).mean() + 0.1 * aux["entropy"]
+
+    g = jax.grad(loss)(p)
+    for k, v in g.items():
+        assert float(jnp.abs(v).sum()) > 0, f"zero grad for {k}"
+
+
+def test_child_transposition_changes_mixture():
+    cfg, p = make(depth=3, leaf=4, transposition_prob=0.5)
+    x = jax.random.normal(jax.random.PRNGKey(11), (32, 16))
+    _, a1 = fff.forward_train(p, cfg, x, rng=jax.random.PRNGKey(1))
+    _, a2 = fff.forward_train(p, cfg, x, rng=jax.random.PRNGKey(2))
+    assert not np.allclose(np.asarray(a1["mixture"]), np.asarray(a2["mixture"]))
+
+
+def test_freeze_tree_stops_node_grads():
+    cfg, p = make(depth=3, leaf=4, freeze_tree=True)
+    x = jax.random.normal(jax.random.PRNGKey(12), (32, 16))
+
+    def loss(p):
+        y, _ = fff.forward_train(p, cfg, x)
+        return (y ** 2).mean()
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["node_w1"]).sum()) == 0.0
+    assert float(jnp.abs(g["leaf_w1"]).sum()) > 0.0
+
+
+def test_size_width_accounting():
+    """Paper §Size and width formulas."""
+    cfg = fff.FFFConfig(dim_in=8, dim_out=8, depth=4, leaf_width=8,
+                        node_width=1)
+    assert cfg.training_width == 2 ** 4 * 8
+    assert cfg.inference_width == 8
+    assert cfg.training_size == (2 ** 4 - 1) * 1 + 2 ** 4 * 8
+    assert cfg.inference_size == 4 * 1 + 8

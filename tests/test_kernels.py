@@ -1,0 +1,191 @@
+"""Pallas kernel correctness: shape/dtype sweeps vs the pure-jnp oracles,
+all in interpret mode (CPU container; TPU is the lowering target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fff
+from repro.kernels.fused_fff import (fff_decode, gathered_matmul,
+                                     gathered_matmul_dual,
+                                     gathered_matmul_dual_ref,
+                                     gathered_matmul_ref)
+from repro.kernels.leaf_gemm import (fff_infer, grouped_matmul,
+                                     grouped_matmul_dual,
+                                     grouped_matmul_dual_ref,
+                                     grouped_matmul_ref)
+from repro.kernels.tree_router import route, tree_router_ref
+
+
+# ---------------------------------------------------------------------------
+# tree_router
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [1, 2, 4, 6, 8])
+@pytest.mark.parametrize("dim", [32, 96])
+def test_router_matches_ref(depth, dim):
+    B, N = 128, 2 ** depth - 1
+    x = jax.random.normal(jax.random.PRNGKey(depth), (B, dim))
+    nw = jax.random.normal(jax.random.PRNGKey(depth + 1), (N, dim)) / np.sqrt(dim)
+    nb = jax.random.normal(jax.random.PRNGKey(depth + 2), (N,)) * 0.1
+    got = route(x, nw, nb, depth=depth, interpret=True)
+    want = tree_router_ref(x, nw, nb, depth=depth)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_router_dtypes(dtype):
+    depth, dim, B = 5, 64, 64
+    N = 2 ** depth - 1
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, dim)).astype(dtype)
+    nw = (jax.random.normal(jax.random.PRNGKey(1), (N, dim)) / 8).astype(dtype)
+    nb = jnp.zeros((N,), dtype)
+    got = route(x, nw, nb, depth=depth, interpret=True)
+    want = tree_router_ref(x, nw, nb, depth=depth)
+    # bf16 logits can flip near-zero decisions; require 99% agreement
+    agree = float((got == want).mean())
+    assert agree > 0.99
+
+
+def test_router_deep_tree_split():
+    depth, dim, B = 11, 32, 64
+    N = 2 ** depth - 1
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, dim))
+    nw = jax.random.normal(jax.random.PRNGKey(4), (N, dim)) / np.sqrt(dim)
+    nb = jnp.zeros((N,))
+    got = route(x, nw, nb, depth=depth, dense_levels=6, interpret=True)
+    want = tree_router_ref(x, nw, nb, depth=depth)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_router_unpadded_batch():
+    depth, dim = 3, 32
+    N = 2 ** depth - 1
+    x = jax.random.normal(jax.random.PRNGKey(5), (37, dim))   # odd batch
+    nw = jax.random.normal(jax.random.PRNGKey(6), (N, dim))
+    nb = jnp.zeros((N,))
+    got = route(x, nw, nb, depth=depth, interpret=True)
+    want = tree_router_ref(x, nw, nb, depth=depth)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# leaf_gemm (grouped / ragged)
+# ---------------------------------------------------------------------------
+
+def _ragged_inputs(E, C, D, H, seed, dtype=jnp.float32):
+    k = jax.random.PRNGKey(seed)
+    gs = jax.random.randint(jax.random.fold_in(k, 0), (E,), 0, C + 1)
+    mask = (jnp.arange(C)[None, :] < gs[:, None])
+    x = jax.random.normal(jax.random.fold_in(k, 1), (E, C, D)) \
+        * mask[..., None]
+    w = jax.random.normal(jax.random.fold_in(k, 2), (E, D, H)) / np.sqrt(D)
+    return x.astype(dtype), w.astype(dtype), gs.astype(jnp.int32)
+
+
+@pytest.mark.parametrize("act", ["none", "gelu", "relu", "silu"])
+@pytest.mark.parametrize("shape", [(2, 16, 32, 24), (5, 24, 16, 16)])
+def test_grouped_matmul_sweep(act, shape):
+    E, C, D, H = shape
+    x, w, gs = _ragged_inputs(E, C, D, H, seed=hash((act, shape)) % 1000)
+    got = grouped_matmul(x, w, gs, act=act, block_c=8, block_h=8, block_k=8,
+                         interpret=True)
+    want = grouped_matmul_ref(x, w, gs, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_grouped_matmul_dtypes(dtype):
+    x, w, gs = _ragged_inputs(3, 16, 32, 16, seed=7, dtype=dtype)
+    got = grouped_matmul(x, w, gs, act="gelu", block_c=8, block_h=8,
+                         block_k=16, interpret=True)
+    want = grouped_matmul_ref(x, w, gs, act="gelu")
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_grouped_matmul_dual_swiglu():
+    E, C, D, H = 4, 16, 24, 16
+    x, wg, gs = _ragged_inputs(E, C, D, H, seed=11)
+    wu = jax.random.normal(jax.random.PRNGKey(99), (E, D, H)) / np.sqrt(D)
+    got = grouped_matmul_dual(x, wg, wu, gs, block_c=8, block_h=8, block_k=8,
+                              interpret=True)
+    want = grouped_matmul_dual_ref(x, wg, wu, gs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_empty_groups_produce_zeros():
+    E, C, D, H = 4, 8, 16, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (E, C, D))
+    w = jax.random.normal(jax.random.PRNGKey(1), (E, D, H))
+    gs = jnp.array([0, 8, 0, 4], jnp.int32)
+    mask = (jnp.arange(C)[None, :] < gs[:, None])
+    got = grouped_matmul(x * mask[..., None], w, gs, act="none",
+                         block_c=4, block_h=8, block_k=8, interpret=True)
+    assert float(jnp.abs(got[0]).max()) == 0.0
+    assert float(jnp.abs(got[2]).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# fused_fff (gathered, per-token)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("act", ["none", "gelu"])
+@pytest.mark.parametrize("E,B,D,H", [(4, 8, 32, 16), (16, 13, 16, 24)])
+def test_gathered_matmul_sweep(act, E, B, D, H):
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, D))
+    w = jax.random.normal(jax.random.PRNGKey(1), (E, D, H)) / np.sqrt(D)
+    idx = jax.random.randint(jax.random.PRNGKey(2), (B,), 0, E)
+    got = gathered_matmul(x, w, idx, act=act, block_h=8, block_k=8,
+                          interpret=True)
+    want = gathered_matmul_ref(x, w, idx, act=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gathered_dual():
+    E, B, D, H = 8, 16, 24, 16
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, D))
+    wg = jax.random.normal(jax.random.PRNGKey(4), (E, D, H)) / np.sqrt(D)
+    wu = jax.random.normal(jax.random.PRNGKey(5), (E, D, H)) / np.sqrt(D)
+    idx = jax.random.randint(jax.random.PRNGKey(6), (B,), 0, E)
+    got = gathered_matmul_dual(x, wg, wu, idx, block_h=8, block_k=8,
+                               interpret=True)
+    want = gathered_matmul_dual_ref(x, wg, wu, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end FFF inference paths vs the core oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("act,trees", [("gelu", 1), ("relu", 2),
+                                       ("swiglu", 1), ("swiglu", 2)])
+def test_fff_infer_matches_forward_hard(act, trees):
+    cfg = fff.FFFConfig(dim_in=32, dim_out=32, depth=3, leaf_width=8,
+                        activation=act, trees=trees, leaf_bias=False)
+    p = fff.init(jax.random.PRNGKey(7), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(8), (64, 32))
+    want, _ = fff.forward_hard(p, cfg, x)
+    got_grouped = fff_infer(x, p, cfg, capacity_factor=8.0, interpret=True)
+    got_decode = fff_decode(x, p, cfg, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_grouped), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got_decode), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_fff_infer_overflow_fallback_exact():
+    cfg = fff.FFFConfig(dim_in=32, dim_out=16, depth=2, leaf_width=8,
+                        activation="gelu", leaf_bias=False)
+    p = fff.init(jax.random.PRNGKey(9), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(10), (256, 32))
+    want, _ = fff.forward_hard(p, cfg, x)
+    got = fff_infer(x, p, cfg, capacity_factor=0.2, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,136 @@
+"""nn substrate: attention (flash vs full, cache), mamba, xlstm, norms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import attention as attn
+from repro.nn import mamba, norms, rope, xlstm
+
+
+def test_flash_matches_full_causal():
+    B, S, H, K, hd = 2, 128, 8, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    o1 = attn.full_attention(q, k, v, causal=True)
+    o2 = attn.flash_attention(q, k, v, causal=True, chunk=32)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_sliding_window():
+    B, S, H, K, hd = 1, 128, 4, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    band = (jnp.arange(S)[:, None] - jnp.arange(S)[None, :]) < 48
+    o1 = attn.full_attention(q, k, v, causal=True, bias_mask=band)
+    o2 = attn.flash_attention(q, k, v, causal=True, chunk=16, sliding_window=48)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunk_pairs_skip_upper_triangle():
+    qi, kj, mk = attn._chunk_pairs(4, 4, causal=True, window_chunks=0)
+    assert len(qi) == 10                     # 4*5/2 lower-triangle pairs
+    assert all(int(b) <= int(a) for a, b in zip(qi, kj))
+    qi2, kj2, _ = attn._chunk_pairs(8, 8, causal=True, window_chunks=2)
+    assert all(int(a) - int(b) <= 2 for a, b in zip(qi2, kj2))
+
+
+def test_decode_matches_full_attention():
+    cfg = attn.AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8)
+    p = attn.init(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 12, 32))
+    y_ref = attn.forward(p, cfg, x)
+    cache = attn.init_cache(2, 16, cfg)
+    y_pre, cache = attn.forward_prefill(p, cfg, x[:, :8], cache)
+    np.testing.assert_allclose(np.asarray(y_ref[:, :8]), np.asarray(y_pre),
+                               rtol=1e-5, atol=1e-5)
+    for t in range(8, 12):
+        y_t, cache = attn.forward_decode(p, cfg, x[:, t:t + 1], cache)
+        np.testing.assert_allclose(np.asarray(y_ref[:, t:t + 1]),
+                                   np.asarray(y_t), rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_chunk_invariance_and_decode():
+    cfg = mamba.MambaConfig(d_model=24, d_state=8, chunk=8)
+    p = mamba.init(jax.random.PRNGKey(4), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 32, 24))
+    y1, _ = mamba.forward(p, cfg, x)
+    cfg2 = mamba.MambaConfig(d_model=24, d_state=8, chunk=32)
+    y2, _ = mamba.forward(p, cfg2, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    # incremental decode
+    y_pre, st = mamba.forward(p, cfg, x[:, :24])
+    outs = []
+    for t in range(24, 32):
+        o, st = mamba.forward_step(p, cfg, x[:, t:t + 1], st)
+        outs.append(o)
+    y_inc = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y1[:, 24:]), np.asarray(y_inc),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_chunkwise_matches_sequential():
+    cfg = xlstm.XLSTMConfig(d_model=16, n_heads=2, chunk=8)
+    p = xlstm.mlstm_init(jax.random.PRNGKey(6), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 48, 16))
+    ys, _ = xlstm.mlstm_block(p, cfg, x, sequential=True)
+    yc, _ = xlstm.mlstm_block(p, cfg, x, sequential=False)
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(yc),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mlstm_state_carries_across_segments():
+    cfg = xlstm.XLSTMConfig(d_model=16, n_heads=2, chunk=8)
+    p = xlstm.mlstm_init(jax.random.PRNGKey(8), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(9), (1, 32, 16))
+    y_full, _ = xlstm.mlstm_block(p, cfg, x)
+    y_a, st = xlstm.mlstm_block(p, cfg, x[:, :16])
+    y_b, _ = xlstm.mlstm_block(p, cfg, x[:, 16:], st)
+    np.testing.assert_allclose(np.asarray(y_full),
+                               np.asarray(jnp.concatenate([y_a, y_b], 1)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_slstm_finite_and_stateful():
+    cfg = xlstm.XLSTMConfig(d_model=16, n_heads=4)
+    p = xlstm.slstm_init(jax.random.PRNGKey(10), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(11), (2, 24, 16))
+    y, st = xlstm.slstm_block(p, cfg, x)
+    assert jnp.isfinite(y).all()
+    y2, _ = xlstm.slstm_block(p, cfg, x, st)
+    assert not np.allclose(np.asarray(y), np.asarray(y2))
+
+
+def test_norms():
+    x = jax.random.normal(jax.random.PRNGKey(12), (4, 8, 16)) * 5 + 2
+    pr = norms.rmsnorm_init(16)
+    y = norms.rmsnorm(pr, x)
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+    pl = norms.layernorm_init(16)
+    y2 = norms.layernorm(pl, x)
+    np.testing.assert_allclose(np.asarray(y2).mean(-1), 0.0, atol=1e-4)
+
+
+def test_rope_rotation_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(13), (1, 8, 2, 16))
+    pos = jnp.arange(8)[None, :]
+    y = rope.apply_rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+    # relative property: <R(p)q, R(p+k)v> depends only on k
+    q = jax.random.normal(jax.random.PRNGKey(14), (1, 1, 1, 16))
+    v = jax.random.normal(jax.random.PRNGKey(15), (1, 1, 1, 16))
+    def dot_at(p):
+        rq = rope.apply_rope(q, jnp.array([[p]]))
+        rv = rope.apply_rope(v, jnp.array([[p + 3]]))
+        return float(jnp.sum(rq * rv))
+    assert dot_at(0) == pytest.approx(dot_at(7), rel=1e-4)

@@ -1,0 +1,114 @@
+"""Hypothesis property tests on the FFF system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fff, regions, routing
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def fff_case(draw, max_depth=5):
+    depth = draw(st.integers(0, max_depth))
+    leaf = draw(st.sampled_from([1, 2, 4, 8]))
+    din = draw(st.sampled_from([3, 8, 17]))
+    dout = draw(st.sampled_from([1, 5]))
+    seed = draw(st.integers(0, 2 ** 16))
+    batch = draw(st.integers(1, 33))
+    cfg = fff.FFFConfig(dim_in=din, dim_out=dout, depth=depth,
+                        leaf_width=leaf, activation="relu")
+    params = fff.init(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, din))
+    return cfg, params, x
+
+
+@given(fff_case())
+@settings(**SETTINGS)
+def test_mixture_is_distribution(case):
+    cfg, params, x = case
+    _, aux = fff.forward_train(params, cfg, x)
+    mix = np.asarray(aux["mixture"])
+    assert (mix >= -1e-6).all()
+    np.testing.assert_allclose(mix.sum(-1), 1.0, atol=1e-4)
+
+
+@given(fff_case())
+@settings(**SETTINGS)
+def test_routed_leaf_in_range_and_locally_greedy(case):
+    """FORWARD_I takes the >=1/2 branch at every node along its own path."""
+    cfg, params, x = case
+    leaf_idx = np.asarray(fff.route_hard(params, cfg, x))[:, 0]
+    assert (leaf_idx >= 0).all() and (leaf_idx < cfg.num_leaves).all()
+    probs = np.asarray(jax.nn.sigmoid(
+        fff._node_logits_all(params, cfg, x.astype(jnp.float32))))[:, 0]
+    for b in range(min(x.shape[0], 8)):
+        idx = 0
+        for m in range(cfg.depth):
+            g = 2 ** m - 1 + idx
+            bit = (leaf_idx[b] >> (cfg.depth - 1 - m)) & 1
+            p = probs[b, g]
+            assert (p >= 0.5) == bool(bit), (b, m, p, bit)
+            idx = 2 * idx + bit
+        assert idx == leaf_idx[b]
+
+
+@given(fff_case(max_depth=4))
+@settings(**SETTINGS)
+def test_regions_partition_input_space(case):
+    """Every sample lies in exactly one leaf region, and it is the routed
+    leaf's region (paper §Regions of responsibility)."""
+    cfg, params, x = case
+    assert regions.is_partition(params, cfg, x)
+
+
+@given(fff_case())
+@settings(**SETTINGS)
+def test_entropy_nonneg_and_bounded(case):
+    cfg, params, x = case
+    _, aux = fff.forward_train(params, cfg, x)
+    ent = float(aux["entropy"])
+    assert -1e-6 <= ent <= np.log(2) + 1e-6
+
+
+@given(fff_case(max_depth=4), st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_sorted_dispatch_roundtrip(case, seed):
+    cfg, params, x = case
+    leaf_idx = fff.route_hard(params, cfg, x)[:, 0]
+    plan = routing.make_sorted_dispatch(leaf_idx, cfg.num_leaves)
+    xs = routing.apply_sorted(x, plan)
+    xr = routing.unapply_sorted(xs, plan)
+    np.testing.assert_array_equal(np.asarray(xr), np.asarray(x))
+    # sorted leaf ids are monotone
+    ls = np.asarray(plan.leaf_ids_sorted)
+    assert (np.diff(ls) >= 0).all()
+    assert int(plan.group_sizes.sum()) == x.shape[0]
+
+
+@given(st.integers(1, 64), st.integers(1, 6), st.integers(0, 2 ** 16),
+       st.floats(1.0, 4.0))
+@settings(**SETTINGS)
+def test_capacity_dispatch_conservation(batch, depth_pow, seed, cap):
+    E = 2 ** (depth_pow - 1)
+    rng = np.random.default_rng(seed)
+    leaf_idx = jnp.asarray(rng.integers(0, E, batch))
+    plan = routing.make_capacity_dispatch(leaf_idx, E, capacity_factor=cap)
+    d = np.asarray(plan.dispatch)
+    # each kept token occupies exactly one slot; dropped tokens none
+    occ = d.sum(axis=(1, 2))
+    kept = np.asarray(plan.kept)
+    np.testing.assert_array_equal(occ, kept.astype(np.float32))
+    # no slot is double-occupied
+    assert (d.sum(axis=0) <= 1.0 + 1e-6).all()
+
+
+@given(fff_case(max_depth=4))
+@settings(**SETTINGS)
+def test_train_forward_jit_consistent(case):
+    cfg, params, x = case
+    y1, _ = fff.forward_train(params, cfg, x)
+    y2, _ = jax.jit(lambda p, x: fff.forward_train(p, cfg, x))(params, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-5, atol=2e-5)

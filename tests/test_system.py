@@ -1,0 +1,104 @@
+"""End-to-end behaviour: FFF networks learn, harden, and serve — the paper's
+workflow on synthetic data, at CPU-test scale."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.core import ff, fff
+from repro.data import synthetic
+from repro.models import lm
+from repro.configs import registry
+
+
+def _train_fff_classifier(ds, depth=3, leaf=16, steps=400, h=0.5, lr=0.3,
+                          batch=256, seed=0):
+    cfg = fff.FFFConfig(dim_in=ds.dim, dim_out=ds.num_classes, depth=depth,
+                        leaf_width=leaf, activation="relu",
+                        hardening_scale=h)
+    params = fff.init(jax.random.PRNGKey(seed), cfg)
+    opt = optim.sgd(lr)
+    state = opt.init(params)
+
+    def loss_fn(p, x, y):
+        logits, aux = fff.forward_train(p, cfg, x)
+        ce = -jnp.mean(jnp.take_along_axis(
+            jax.nn.log_softmax(logits), y[:, None], 1))
+        return ce + h * fff.hardening_loss(aux["node_probs"]), aux["entropy"]
+
+    @jax.jit
+    def step(p, s, x, y):
+        (l, ent), g = jax.value_and_grad(loss_fn, has_aux=True)(p, x, y)
+        u, s = opt.update(g, s, p)
+        return optim.apply_updates(p, u), s, l, ent
+
+    rng = np.random.default_rng(seed)
+    ents = []
+    for i in range(steps):
+        sel = rng.integers(0, len(ds.x_train), batch)
+        params, state, l, ent = step(params, state,
+                                     jnp.asarray(ds.x_train[sel]),
+                                     jnp.asarray(ds.y_train[sel]))
+        ents.append(float(ent))
+    return cfg, params, ents
+
+
+def _hard_accuracy(cfg, params, x, y):
+    logits, _ = fff.forward_hard(params, cfg, jnp.asarray(x))
+    return float((np.asarray(logits.argmax(-1)) == y).mean())
+
+
+def test_fff_learns_and_hardens_on_synthetic_images():
+    ds = synthetic.make("usps_like")
+    cfg, params, ents = _train_fff_classifier(ds)
+    acc_train = _hard_accuracy(cfg, params, ds.x_train[:1024], ds.y_train[:1024])
+    acc_test = _hard_accuracy(cfg, params, ds.x_test, ds.y_test)
+    assert acc_train > 0.8, acc_train       # learns (10 classes, chance=0.1)
+    assert acc_test > 0.7, acc_test         # generalizes
+    assert ents[-1] < 0.5 * ents[0], "hardening entropy must decrease"
+
+
+def test_hard_inference_close_to_soft_after_hardening():
+    ds = synthetic.make("usps_like")
+    cfg, params, _ = _train_fff_classifier(ds, h=2.0)
+    x = jnp.asarray(ds.x_test[:512])
+    y_soft, _ = fff.forward_train(params, cfg, x)
+    y_hard, _ = fff.forward_hard(params, cfg, x)
+    agree = float((y_soft.argmax(-1) == y_hard.argmax(-1)).mean())
+    assert agree > 0.9, agree               # paper: hardened -> lossless rounding
+
+
+def test_lm_training_decreases_loss():
+    import dataclasses
+    from repro.data import tokens as tokens_lib
+    cfg = registry.get_config("internlm2-20b", ffn="fff").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=2)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    opt = optim.adamw(3e-3)
+    state = opt.init(params)
+    src = tokens_lib.MarkovTokenSource(cfg.vocab_size, seed=0)
+
+    @jax.jit
+    def step(p, s, batch):
+        (l, m), g = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, cfg, batch), has_aux=True)(p)
+        u, s = opt.update(g, s, p)
+        return optim.apply_updates(p, u), s, m["ce"]
+
+    ces = []
+    for i in range(30):
+        batch = src.batch(8, 64, seed=i)
+        params, state, ce = step(params, state, batch)
+        ces.append(float(ce))
+    assert np.mean(ces[-5:]) < np.mean(ces[:5]) - 0.2, ces
+
+
+def test_generation_is_deterministic_greedy():
+    cfg = registry.get_config("olmoe-1b-7b", ffn="fff").reduced()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    out1 = lm.generate(params, cfg, prompt, steps=6, max_len=16)
+    out2 = lm.generate(params, cfg, prompt, steps=6, max_len=16)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (1, 4 + 6)
