@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
-from repro.core import ff, fff, moe
+from repro.core import api, ff, fff, moe
 
 
 def time_fn(fn, *args, iters: int = 30, warmup: int = 3) -> tuple[float, float]:
@@ -32,13 +32,13 @@ def time_fn(fn, *args, iters: int = 30, warmup: int = 3) -> tuple[float, float]:
     return float(np.mean(ts)), float(np.std(ts))
 
 
-def train_classifier(forward_train: Callable, params, ds, *, steps: int,
+def train_classifier(train_fwd: Callable, params, ds, *, steps: int,
                      batch: int = 256, lr: float = 0.2, seed: int = 0,
                      opt=None, eval_every: int = 0,
                      eval_fn: Optional[Callable] = None):
     """Generic classifier training loop (paper protocol: pure SGD, lr=0.2).
 
-    forward_train(params, x, rng) -> (logits, aux_loss_scalar).
+    train_fwd(params, x, rng) -> (logits, aux_loss_scalar).
     Returns (params, history) where history records (step, eval_fn(params)).
     """
     opt = opt or optim.sgd(lr)
@@ -46,7 +46,7 @@ def train_classifier(forward_train: Callable, params, ds, *, steps: int,
     base_key = jax.random.PRNGKey(seed + 12345)
 
     def loss_fn(p, x, y, r):
-        logits, aux = forward_train(p, x, r)
+        logits, aux = train_fwd(p, x, r)
         ce = -jnp.mean(jnp.take_along_axis(
             jax.nn.log_softmax(logits), y[:, None], 1))
         return ce + aux
@@ -86,11 +86,12 @@ def build_fff(dim, classes, depth, leaf, h=3.0, seed=0, act="relu"):
     params = fff.init(jax.random.PRNGKey(seed), cfg)
 
     def fwd_train(p, x, rng=None):
-        logits, aux = fff.forward_train(p, cfg, x)
-        return logits, h * fff.hardening_loss(aux["node_probs"])
+        logits, out = api.apply(p, cfg, x,
+                                api.ExecutionSpec(mode="train", rng=rng))
+        return logits, h * fff.hardening_loss(out.node_probs)
 
     def fwd_hard(p, x):
-        return fff.forward_hard(p, cfg, x)[0]
+        return api.apply(p, cfg, x, api.ExecutionSpec(mode="infer"))[0]
 
     return cfg, params, fwd_train, fwd_hard
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
-from repro.core import fff, moe
+from repro.core import api, fff, moe
 
 DIM = 768
 WIDTH = 32
@@ -42,8 +42,14 @@ def run(max_exp: int = 10, quick: bool = False) -> list[dict]:
                              leaf_width=WIDTH, activation="relu",
                              leaf_bias=False)
         fp = fff.init(jax.random.PRNGKey(e + 100), fcfg)
-        f_fff = jax.jit(lambda p, x: fff.forward_hard(p, fcfg, x)[0])
-        t_fff, s_fff = common.time_fn(f_fff, fp, x, iters=10 if quick else 20)
+        f_fff = jax.jit(lambda p, x: api.apply(
+            p, fcfg, x, api.ExecutionSpec(mode="infer"))[0])
+        # pin one mechanism across the whole sweep (the exact gather the
+        # paper times); otherwise auto switches algorithms at wide depths
+        # and the scaling curve gains a backend-selection kink
+        with api.use_backend("reference"):
+            t_fff, s_fff = common.time_fn(f_fff, fp, x,
+                                          iters=10 if quick else 20)
         fff_desc_flops = BATCH * DIM * e                 # the O(d) descent
         rows.append(dict(model="fff", blocks=n_blocks, us=t_fff, std=s_fff,
                          mech_flops=fff_desc_flops))

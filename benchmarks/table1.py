@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.core import api
 from repro.data import synthetic
 
 WIDTHS = (16, 32, 64, 128)
@@ -49,7 +50,10 @@ def run(steps: int = 200, quick: bool = False) -> list[dict]:
                 ma = common.accuracy(fw, p, ds.x_train[:2048],
                                      ds.y_train[:2048])
                 ga = common.accuracy(fw, p, ds.x_test, ds.y_test)
-                t, _ = common.time_fn(jax.jit(fw), p, xb)
+                # pin the exact gather so the speedup column times the
+                # paper's FORWARD_I mechanism on every platform (cf. fig34)
+                with api.use_backend("reference"):
+                    t, _ = common.time_fn(jax.jit(fw), p, xb)
                 rows.append(dict(dataset=ds_name, model="fff", width=w,
                                  leaf=leaf, ma=ma, ga=ga, us=t,
                                  speedup=t_ff / t))

@@ -4,6 +4,15 @@ Trains a small fast-feedforward network on a synthetic image task, watches
 the hardening process, then serves it with hard (FORWARD_I) routing — the
 whole paper in ~60 lines of user code.
 
+Everything goes through the one entry point::
+
+    y, out = api.apply(params, cfg, x, api.ExecutionSpec(mode=..., backend=...))
+
+``mode`` picks the paper's semantics (FORWARD_T soft mixture for training,
+FORWARD_I single-leaf descent for inference); ``backend`` picks the
+implementation from a registry — ``"auto"`` (default) resolves per platform
+and shape, and step 5 below registers a custom backend to show the seam.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
@@ -11,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
-from repro.core import fff
+from repro.core import api, fff
 from repro.data import synthetic
 
 # --- 1. data ---------------------------------------------------------------
@@ -25,19 +34,21 @@ cfg = fff.FFFConfig(dim_in=ds.dim, dim_out=ds.num_classes, depth=4,
                     leaf_width=8, activation="relu", hardening_scale=3.0)
 params = fff.init(jax.random.PRNGKey(0), cfg)
 print(f"FFF: training width {cfg.training_width}, inference width "
-      f"{cfg.inference_width}, {cfg.num_leaves} leaves")
+      f"{cfg.inference_width}, {cfg.num_leaves} leaves; execution backends "
+      f"registered for inference: {api.list_backends('infer')}")
 
 # --- 3. train with the hardening loss (paper: L_total = L_pred + h*L_harden)
 opt = optim.sgd(0.2)
 state = opt.init(params)
+TRAIN = api.ExecutionSpec(mode="train")                    # FORWARD_T
 
 
 def loss_fn(p, x, y):
-    logits, aux = fff.forward_train(p, cfg, x)                 # FORWARD_T
+    logits, out = api.apply(p, cfg, x, TRAIN)
     ce = -jnp.mean(jnp.take_along_axis(jax.nn.log_softmax(logits),
                                        y[:, None], 1))
-    return ce + cfg.hardening_scale * fff.hardening_loss(aux["node_probs"]), \
-        aux["entropy"]
+    return ce + cfg.hardening_scale * fff.hardening_loss(out.node_probs), \
+        out.entropy
 
 
 @jax.jit
@@ -57,14 +68,30 @@ for i in range(300):
               f"mean node entropy {float(ent):.3f}  (hardening toward 0)")
 
 # --- 4. serve with hard routing (FORWARD_I): one leaf per input -------------
-logits_hard, aux = fff.forward_hard(params, cfg, jnp.asarray(ds.x_test))
+INFER = api.ExecutionSpec(mode="infer")                    # backend="auto"
+logits_hard, out = api.apply(params, cfg, jnp.asarray(ds.x_test), INFER)
 acc = float((np.asarray(logits_hard.argmax(-1)) == ds.y_test).mean())
-logits_soft, _ = fff.forward_train(params, cfg, jnp.asarray(ds.x_test))
+logits_soft, _ = api.apply(params, cfg, jnp.asarray(ds.x_test), TRAIN)
 agree = float((logits_soft.argmax(-1) == logits_hard.argmax(-1)).mean())
 print(f"\nhard-inference accuracy: {acc:.3f}  "
       f"(soft/hard agreement {agree:.3f} — hardening carried over)")
 
-# --- 5. the learned partition of the input space (paper §Regionalization) ---
-hist = np.bincount(np.asarray(aux["leaf_idx"][:, 0]),
+# --- 5. the registry seam: plug in a custom execution backend ---------------
+# A backend is any fn(params, cfg, x, spec) -> (y, FFFOutput).  This toy one
+# wraps the reference path and rounds outputs to bf16 — a stand-in for
+# quantized serving, remote execution, new kernels, ...
+def bf16_backend(p, c, x, spec):
+    y, out = api.get_backend("infer", "reference")(p, c, x, spec)
+    return y.astype(jnp.bfloat16).astype(jnp.float32), out
+
+
+api.register_backend("infer", "bf16-demo", bf16_backend)
+logits_q, _ = api.apply(params, cfg, jnp.asarray(ds.x_test),
+                        api.ExecutionSpec(mode="infer", backend="bf16-demo"))
+agree_q = float((logits_q.argmax(-1) == logits_hard.argmax(-1)).mean())
+print(f"custom 'bf16-demo' backend agreement with exact serving: {agree_q:.3f}")
+
+# --- 6. the learned partition of the input space (paper §Regionalization) ---
+hist = np.bincount(np.asarray(out.leaf_idx[:, 0]),
                    minlength=cfg.num_leaves)
 print(f"leaf load histogram over test set: {hist.tolist()}")

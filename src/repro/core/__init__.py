@@ -1,14 +1,27 @@
 """The paper's primary contribution: fast feedforward networks, with their
 baselines (vanilla FF, noisy-top-k MoE), routing/dispatch machinery and
-region-partition utilities."""
-from repro.core import ff, fff, moe, regions, routing
+region-partition utilities.
+
+The FFF execution surface is ``api``: one ``apply(params, cfg, x, spec)``
+entry point dispatching over a registry of execution backends (reference /
+grouped / pallas / user-registered) — see ``core/api.py`` and DESIGN.md §2.
+"""
+from repro.core import api, ff, fff, moe, regions, routing
+from repro.core.api import (ExecutionSpec, FFFOutput, apply, get_backend,
+                            list_backends, register_backend, use_backend)
 from repro.core.fff import (FFFConfig, bernoulli_entropy, decisive_fraction,
                             forward_hard, forward_train, hardening_loss,
                             mixture_weights, route_hard)
 
 __all__ = [
-    "ff", "fff", "moe", "regions", "routing",
-    "FFFConfig", "forward_train", "forward_hard", "route_hard",
+    "api", "ff", "fff", "moe", "regions", "routing",
+    # the FFF execution API
+    "apply", "ExecutionSpec", "FFFOutput",
+    "register_backend", "get_backend", "list_backends", "use_backend",
+    # layer config + math
+    "FFFConfig", "route_hard",
     "mixture_weights", "hardening_loss", "bernoulli_entropy",
     "decisive_fraction",
+    # deprecated shims (kept importable for one release)
+    "forward_train", "forward_hard",
 ]

@@ -1,0 +1,338 @@
+"""The single FFF entry point: ``apply()`` + a pluggable execution-backend
+registry (DESIGN.md §2).
+
+The paper's layer has one contract and many execution strategies: FORWARD_T's
+soft mixture for training, FORWARD_I's log-time hard descent for inference,
+and — per strategy — a pure-gather reference, a capacity-bounded grouped
+dispatch (SPMD/EP-shardable) and the Pallas TPU kernels.  Every consumer goes
+through::
+
+    y, out = api.apply(params, cfg, x, api.ExecutionSpec(mode="infer"))
+
+``ExecutionSpec.backend`` names the implementation; ``"auto"`` (the default)
+picks one from the platform, token count, tree depth and config.  All
+backends return the same ``(y, FFFOutput)`` pair, so swapping execution
+strategies (new kernels, sharded backends, batching policies) never touches
+call sites.
+
+Adding a backend::
+
+    def my_backend(params, cfg, x, spec):
+        ...
+        return y, api.FFFOutput(leaf_idx=idx)
+
+    api.register_backend("infer", "mine", my_backend)
+    y, out = api.apply(params, cfg, x,
+                       api.ExecutionSpec(mode="infer", backend="mine"))
+
+The launch layer can steer ``backend="auto"`` call sites wholesale with
+``with api.use_backend("grouped"): ...`` (same thread-local pattern as
+``repro.distributed.act.use_mesh`` — read at trace time).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+from repro.core import fff as fff_lib
+from repro.distributed import act as dist_act
+
+MODES = ("train", "infer")
+
+#: pre-registry capacity defaults, preserved per backend (ExecutionSpec's
+#: capacity_factor=None means "use the backend's own default")
+DEFAULT_CAPACITY_TRAIN_ST = 1.5
+DEFAULT_CAPACITY_INFER = 2.0
+
+#: token count at or below which the pallas backend prefers the per-token
+#: gathered decode kernel over the sorted-dispatch grouped GEMM (DESIGN.md §3)
+PALLAS_DECODE_MAX_TOKENS = 32
+
+#: per-tree training width at which "auto" inference switches from the exact
+#: per-token gather to capacity-bounded grouped dispatch (DESIGN.md §3)
+AUTO_GROUPED_MIN_WIDTH = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionSpec:
+    """How to execute one FFF layer application.
+
+    mode:            "train" (FORWARD_T semantics) | "infer" (FORWARD_I)
+    backend:         registered backend name, or "auto" to resolve from the
+                     platform, token count, depth and config
+    capacity_factor: per-leaf capacity multiplier for capacity-bounded
+                     backends (grouped dispatch, pallas leaf GEMM); None =
+                     each backend's own default (1.5 for ST training, 2.0
+                     for serving — the pre-registry values)
+    dense_levels:    tree levels routed by one dense logit matmul before
+                     falling back to per-token gathers (DESIGN.md §3)
+    rng:             PRNG key for stochastic training features (child
+                     transposition); unused by inference backends
+    interpret:       Pallas interpret-mode override (None = autodetect:
+                     interpret everywhere but TPU)
+    """
+    mode: str = "infer"
+    backend: str = "auto"
+    capacity_factor: Optional[float] = None
+    dense_levels: int = 8
+    rng: Optional[jax.Array] = None
+    interpret: Optional[bool] = None
+
+    def validate(self) -> "ExecutionSpec":
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class FFFOutput:
+    """Structured aux returned by every backend.  Fields a backend cannot
+    produce are None — e.g. hard inference has no node probabilities, and
+    exact (capacity-unbounded) paths report no overflow.
+
+    leaf_idx:          (..., trees) int32 — routed leaf per (token, tree)
+    node_probs:        (B, trees, num_nodes) — sigmoid node outputs
+    mixture:           (B, trees, num_leaves) — FORWARD_T leaf weights
+    entropy:           scalar — mean Bernoulli entropy of node decisions
+    overflow_fraction: scalar — fraction of (token, tree) slots dropped by a
+                       capacity bound (0 for exact paths)
+    """
+    leaf_idx: Optional[jax.Array] = None
+    node_probs: Optional[jax.Array] = None
+    mixture: Optional[jax.Array] = None
+    entropy: Optional[jax.Array] = None
+    overflow_fraction: Optional[jax.Array] = None
+
+    def as_dict(self) -> dict:
+        """Legacy aux-dict view (the pre-registry forward_* return type).
+        References the field arrays, no copies (asdict would deep-copy)."""
+        return {f.name: getattr(self, f.name) for f in dataclasses.fields(self)
+                if getattr(self, f.name) is not None}
+
+
+jax.tree_util.register_dataclass(
+    FFFOutput,
+    data_fields=["leaf_idx", "node_probs", "mixture", "entropy",
+                 "overflow_fraction"],
+    meta_fields=[])
+
+BackendFn = Callable[[dict, "fff_lib.FFFConfig", jax.Array, ExecutionSpec],
+                     tuple[jax.Array, FFFOutput]]
+SupportsFn = Callable[[dict, "fff_lib.FFFConfig"], bool]
+
+_REGISTRY: dict[tuple[str, str], BackendFn] = {}
+_SUPPORTS: dict[tuple[str, str], SupportsFn] = {}
+_thread_state = threading.local()
+
+
+def register_backend(mode: str, name: str, fn: BackendFn,
+                     supports: Optional[SupportsFn] = None) -> None:
+    """Register ``fn`` as execution backend ``name`` for ``mode``.
+
+    ``fn(params, cfg, x, spec) -> (y, FFFOutput)`` with ``x`` (..., dim_in)
+    and ``y`` (..., dim_out).  ``supports(params, cfg) -> bool`` (optional)
+    is the eligibility predicate the *auto* resolver honours — both when
+    picking the backend itself and when a ``use_backend`` override names it;
+    ineligible configs fall through to the heuristics instead of crashing
+    inside the backend.  Explicit ``ExecutionSpec(backend=name)`` bypasses
+    it: explicit means explicit, and the backend's own errors apply.
+    Re-registering a name overwrites it (so tests and downstream packages
+    can shadow the built-ins)."""
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if name == "auto":
+        raise ValueError('"auto" is the resolver, not a registrable backend')
+    _REGISTRY[(mode, name)] = fn
+    if supports is not None:
+        _SUPPORTS[(mode, name)] = supports
+    else:
+        _SUPPORTS.pop((mode, name), None)
+
+
+def _backend_supported(mode: str, name: str, params: dict,
+                       cfg: fff_lib.FFFConfig) -> bool:
+    pred = _SUPPORTS.get((mode, name))
+    return pred is None or pred(params, cfg)
+
+
+def get_backend(mode: str, name: str) -> BackendFn:
+    try:
+        return _REGISTRY[(mode, name)]
+    except KeyError:
+        raise KeyError(
+            f"no backend {name!r} registered for mode {mode!r}; available: "
+            f"{list_backends(mode)}") from None
+
+
+def list_backends(mode: Optional[str] = None) -> list[str]:
+    """Registered backend names, optionally restricted to one mode."""
+    if mode is None:
+        return sorted({n for _, n in _REGISTRY})
+    return sorted(n for m, n in _REGISTRY if m == mode)
+
+
+@contextlib.contextmanager
+def use_backend(name: str, mode: Optional[str] = None):
+    """Steer every ``backend="auto"`` apply() in this thread to ``name``.
+
+    Installed for the dynamic extent of a trace (launch-layer batching
+    policy); explicit non-auto specs are unaffected.  ``mode`` restricts the
+    override to one mode — pass ``mode="infer"`` when a name exists for both
+    modes with different math (``"grouped"`` is exact dispatch for inference
+    but the ST top-1 *estimator* for training; an unrestricted override
+    would silently change training semantics).  Backends missing for an
+    applicable mode — or failing their registered ``supports`` predicate for
+    a given (params, cfg) — fall through to the normal auto heuristics, so
+    e.g. ``use_backend("pallas")`` serves kernel-eligible inference sites
+    with the kernels while biased-leaf sites and training keep their normal
+    paths.  A name registered for no mode at all raises up front — otherwise
+    a typo would silently run auto."""
+    if mode is not None and mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if not any(n == name for _, n in _REGISTRY):
+        raise KeyError(f"no backend {name!r} registered for any mode; "
+                       f"available: {list_backends()}")
+    prev = getattr(_thread_state, "override", None)
+    _thread_state.override = (name, mode)
+    try:
+        yield
+    finally:
+        _thread_state.override = prev
+
+
+def _pallas_supported(params: dict, cfg: fff_lib.FFFConfig) -> bool:
+    """The kernel path collapses the node net to one hyperplane and needs the
+    zero-row padding invariant of bias-free leaves (kernels/leaf_gemm)."""
+    return (cfg.node_width == 1 and "leaf_b1" not in params
+            and "leaf_b2" not in params)
+
+
+def _resolve_auto(params: dict, cfg: fff_lib.FFFConfig, mode: str) -> str:
+    """Backend choice for ``backend="auto"`` (DESIGN.md §3 regime map):
+
+    train: the ST-grouped estimator when the config asks for it (MoE-scale
+           sites) and there is a tree to descend; otherwise faithful
+           FORWARD_T.
+    infer: Pallas kernels when on TPU, kernel-eligible, and NOT tracing
+           under an SPMD mesh (the kernels are single-device; sharded
+           serving wants the partitionable grouped dispatch, §5); grouped
+           dispatch for wide sites — always, regardless of token count,
+           because wide sites are the EP-sharded ones and the per-token
+           gather would allgather their sharded leaf weights; the exact
+           gather reference otherwise (small sites, depth 0)."""
+    override = getattr(_thread_state, "override", None)
+    if override is not None:
+        o_name, o_mode = override
+        if ((o_mode in (None, mode)) and (mode, o_name) in _REGISTRY
+                and _backend_supported(mode, o_name, params, cfg)):
+            return o_name
+    if mode == "train":
+        return "grouped" if (cfg.st_training and cfg.depth > 0) else "reference"
+    if cfg.depth == 0:
+        return "reference"
+    if (jax.default_backend() == "tpu"
+            and _backend_supported("infer", "pallas", params, cfg)):
+        return "pallas"
+    if cfg.num_leaves * cfg.leaf_width >= AUTO_GROUPED_MIN_WIDTH:
+        return "grouped"
+    return "reference"
+
+
+def apply(params: dict, cfg: fff_lib.FFFConfig, x: jax.Array,
+          spec: ExecutionSpec = ExecutionSpec()
+          ) -> tuple[jax.Array, FFFOutput]:
+    """Apply one FFF layer: x (..., dim_in) -> (..., dim_out), FFFOutput.
+
+    The only supported invocation of the layer outside ``repro.core``; the
+    backend registry does the rest (module docstring has the map)."""
+    spec.validate()
+    name = spec.backend
+    if name == "auto":
+        name = _resolve_auto(params, cfg, spec.mode)
+    return get_backend(spec.mode, name)(params, cfg, x, spec)
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+
+def _train_reference(params, cfg, x, spec):
+    """FORWARD_T: dense soft mixture over all leaves (paper Algorithm 1)."""
+    y, aux = fff_lib._forward_soft_mixture(params, cfg, x, rng=spec.rng)
+    return y, FFFOutput(node_probs=aux["node_probs"], mixture=aux["mixture"],
+                        entropy=aux["entropy"])
+
+
+def _train_grouped(params, cfg, x, spec):
+    """Straight-through top-1 training via capacity-bounded grouped dispatch
+    (O(l) leaf cost per token; DESIGN.md §8)."""
+    cf = (spec.capacity_factor if spec.capacity_factor is not None
+          else DEFAULT_CAPACITY_TRAIN_ST)
+    y, aux = fff_lib._forward_st_grouped(
+        params, cfg, x, rng=spec.rng, capacity_factor=cf)
+    return y, FFFOutput(leaf_idx=aux["leaf_idx"],
+                        node_probs=aux["node_probs"], mixture=aux["mixture"],
+                        entropy=aux["entropy"],
+                        overflow_fraction=aux["overflow_fraction"])
+
+
+def _infer_reference(params, cfg, x, spec):
+    """FORWARD_I: hard descent + exact per-token leaf gather."""
+    y, aux = fff_lib._forward_hard_gather(params, cfg, x,
+                                          dense_levels=spec.dense_levels)
+    return y, FFFOutput(leaf_idx=aux["leaf_idx"],
+                        overflow_fraction=jnp.zeros((), jnp.float32))
+
+
+def _infer_grouped(params, cfg, x, spec):
+    """FORWARD_I via capacity-bounded grouped dispatch (EP-shardable)."""
+    cf = (spec.capacity_factor if spec.capacity_factor is not None
+          else DEFAULT_CAPACITY_INFER)
+    y, aux = fff_lib._forward_hard_grouped(
+        params, cfg, x, capacity_factor=cf, dense_levels=spec.dense_levels)
+    return y, FFFOutput(leaf_idx=aux["leaf_idx"],
+                        overflow_fraction=aux["overflow_fraction"])
+
+
+def _infer_pallas(params, cfg, x, spec):
+    """FORWARD_I on the Pallas TPU kernels: fused tree-router descent, then
+    sorted-dispatch grouped GEMMs (batch) or per-token gathered matmuls
+    (decode-sized batches).  Exact: grouped overflow falls back to the dense
+    gather (DESIGN.md §8), so overflow_fraction is 0 by construction."""
+    # imported here, not at module scope: repro.kernels sits above repro.core
+    # in the layering and itself imports this package
+    from repro.kernels.fused_fff import ops as fused_ops
+    from repro.kernels.leaf_gemm import ops as gemm_ops
+    xf, lead = utils.flatten_leading(x)
+    if xf.shape[0] <= PALLAS_DECODE_MAX_TOKENS:
+        y, leaf_idx = fused_ops.fff_decode(
+            xf, params, cfg, interpret=spec.interpret,
+            dense_levels=spec.dense_levels, return_leaf_idx=True)
+    else:
+        cf = (spec.capacity_factor if spec.capacity_factor is not None
+              else DEFAULT_CAPACITY_INFER)
+        y, leaf_idx = gemm_ops.fff_infer(
+            xf, params, cfg, capacity_factor=cf,
+            interpret=spec.interpret, dense_levels=spec.dense_levels,
+            return_leaf_idx=True)
+    return (utils.unflatten_leading(y, lead),
+            FFFOutput(leaf_idx=utils.unflatten_leading(leaf_idx, lead),
+                      overflow_fraction=jnp.zeros((), jnp.float32)))
+
+
+register_backend("train", "reference", _train_reference)
+register_backend("train", "grouped", _train_grouped)
+register_backend("infer", "reference", _infer_reference)
+register_backend("infer", "grouped", _infer_grouped)
+register_backend(
+    "infer", "pallas", _infer_pallas,
+    # single-device kernels: ineligible under an SPMD mesh (sharded serving
+    # wants the partitionable grouped dispatch, DESIGN.md §5)
+    supports=lambda params, cfg: (_pallas_supported(params, cfg)
+                                  and not dist_act.mesh_installed()))

@@ -4,13 +4,29 @@ A differentiable balanced binary tree of depth ``d`` with ``2^d - 1`` node
 networks (``<dim_in, n, 1>`` feedforward nets with a sigmoid head) and ``2^d``
 leaf networks (``<dim_in, l, dim_out>`` feedforward nets).
 
-Two forward semantics, exactly as in the paper's Algorithm 1:
+Two execution semantics, exactly as in the paper's Algorithm 1:
 
-* ``forward_train``  (FORWARD_T): every node emits a Bernoulli probability;
+* FORWARD_T (``mode="train"``): every node emits a Bernoulli probability;
   each leaf's mixture weight is the product of branch probabilities along its
   root-to-leaf path; *all* leaves are evaluated and mixed.
-* ``forward_hard``   (FORWARD_I): each node decision is rounded; a single
+* FORWARD_I (``mode="infer"``): each node decision is rounded; a single
   root-to-leaf path is followed and exactly one leaf is evaluated.
+
+The single entry point for both is :func:`repro.core.api.apply`::
+
+    from repro.core import api, fff
+
+    cfg = fff.FFFConfig(dim_in=64, dim_out=64, depth=4, leaf_width=8)
+    params = fff.init(key, cfg)
+    y, out = api.apply(params, cfg, x, api.ExecutionSpec(mode="infer"))
+
+``ExecutionSpec.backend`` selects the implementation through a registry
+(``reference`` | ``grouped`` | ``pallas`` | ``auto``); see ``core/api.py``
+for the registry contract and DESIGN.md §2 for the layering.  This module
+holds the layer math itself — config, init, node/leaf forward primitives —
+plus the pure-jnp reference/grouped implementations the registry wraps.
+``forward_train`` / ``forward_hard`` / ``forward_hard_grouped`` remain as
+deprecated shims over ``apply()``.
 
 Node/leaf numbering follows the paper: the children of node ``N[m, k]`` are
 ``N[m+1, 2k]`` (left, taken with weight ``1 - c``) and ``N[m+1, 2k+1]``
@@ -22,13 +38,14 @@ Beyond-paper extensions (all default-off; the defaults reproduce the paper):
 * ``trees > 1``      — a *forest* of independent trees whose outputs are
   summed; matches MoE top-k active width while keeping O(k*d) routing.
 * ``st_training``    — straight-through top-1 training (O(l) instead of
-  O(2^d * l) per token).
+  O(2^d * l) per token); DESIGN.md §8.
 * SwiGLU leaves      — LLM-style gated leaves for transformer FFN sites.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
 from typing import Any, Optional
 
@@ -36,6 +53,8 @@ import jax
 import jax.numpy as jnp
 
 from repro import utils
+from repro.core import routing as routing_lib
+from repro.distributed import act as dist_act
 
 Params = dict
 
@@ -168,8 +187,7 @@ def _node_logits_all(params: Params, cfg: FFFConfig, x: jax.Array) -> jax.Array:
     # pin to data-parallel: node weights are replicated and tiny, but left
     # unconstrained XLA "helpfully" model-partitions this einsum, adding an
     # unneeded (tokens, D) psum in its transpose (§Perf iter 3)
-    from repro.distributed import act as _act
-    return _act.shard(logit, _act.NODE_BTN)
+    return dist_act.shard(logit, dist_act.NODE_BTN)
 
 
 def _node_logit_at(params: Params, cfg: FFFConfig, x: jax.Array,
@@ -271,25 +289,20 @@ def _leaf_forward_gather(params: Params, cfg: FFFConfig, x: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# forward passes (paper Algorithm 1)
+# execution implementations (paper Algorithm 1); the public entry point is
+# repro.core.api.apply() — these are the "reference" and "grouped" backends
 # ---------------------------------------------------------------------------
 
-def forward_train(params: Params, cfg: FFFConfig, x: jax.Array,
-                  rng: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
-    """FORWARD_T: soft mixture over all leaves.
-
-    x: (..., dim_in) -> (..., dim_out), plus aux dict with
-    ``node_probs`` (B, T, N), ``mixture`` (B, T, L), ``entropy`` scalar.
-    """
-    xf, lead = utils.flatten_leading(x)
-    xf = xf.astype(cfg.accum_dtype)
+def _soft_stats(params: Params, cfg: FFFConfig, xf: jax.Array,
+                rng: Optional[jax.Array]) -> tuple[jax.Array, jax.Array,
+                                                   jax.Array]:
+    """Per-token soft routing statistics on flattened tokens ``xf`` (B, D):
+    node probabilities (B, T, N), leaf mixture (B, T, L), mean entropy."""
+    B = xf.shape[0]
     if cfg.depth == 0:
-        y = _leaf_forward_all(params, cfg, xf)[:, :, 0, :].sum(axis=1)
-        aux = {"node_probs": jnp.zeros((xf.shape[0], cfg.trees, 0), cfg.accum_dtype),
-               "mixture": jnp.ones((xf.shape[0], cfg.trees, 1), cfg.accum_dtype),
-               "entropy": jnp.zeros((), cfg.accum_dtype)}
-        return utils.unflatten_leading(y, lead), aux
-
+        return (jnp.zeros((B, cfg.trees, 0), cfg.accum_dtype),
+                jnp.ones((B, cfg.trees, 1), cfg.accum_dtype),
+                jnp.zeros((), cfg.accum_dtype))
     logits = _node_logits_all(params, cfg, xf)            # (B, T, N)
     if cfg.freeze_tree:                                    # paper's h = inf
         logits = jax.lax.stop_gradient(logits)
@@ -299,32 +312,35 @@ def forward_train(params: Params, cfg: FFFConfig, x: jax.Array,
         # probability, exposing children to neighbouring regions' data.
         flip = jax.random.bernoulli(rng, cfg.transposition_prob, probs.shape)
         probs = jnp.where(flip, 1.0 - probs, probs)
-
     mix = mixture_weights(probs, cfg.depth)               # (B, T, L)
     ent = bernoulli_entropy(probs).mean()
+    return probs, mix, ent
 
-    if cfg.st_training:
-        y = _forward_straight_through(params, cfg, xf, probs)
-    else:
-        leaf_out = _leaf_forward_all(params, cfg, xf)     # (B, T, L, O)
-        y = jnp.einsum("btl,btlo->bo", mix, leaf_out)
+
+def _forward_soft_mixture(params: Params, cfg: FFFConfig, x: jax.Array,
+                          rng: Optional[jax.Array] = None
+                          ) -> tuple[jax.Array, dict]:
+    """FORWARD_T: soft mixture over all leaves (the training reference).
+
+    x: (..., dim_in) -> (..., dim_out), plus aux dict with
+    ``node_probs`` (B, T, N), ``mixture`` (B, T, L), ``entropy`` scalar.
+    """
+    xf, lead = utils.flatten_leading(x)
+    xf = xf.astype(cfg.accum_dtype)
+    probs, mix, ent = _soft_stats(params, cfg, xf, rng)
+    leaf_out = _leaf_forward_all(params, cfg, xf)         # (B, T, L, O)
+    y = jnp.einsum("btl,btlo->bo", mix, leaf_out)
     aux = {"node_probs": probs, "mixture": mix, "entropy": ent}
     return utils.unflatten_leading(y, lead), aux
 
 
-def _forward_straight_through(params: Params, cfg: FFFConfig, xf: jax.Array,
-                              probs: jax.Array,
-                              capacity_factor: float = 1.5) -> jax.Array:
-    """Beyond-paper: top-1 training at O(l) leaf cost with an ST estimator.
+def _st_descend(cfg: FFFConfig, probs: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """Hard top-1 descent with a straight-through path-probability scale.
 
-    The hard path is followed (stop-gradient); the selected leaf output is
-    scaled by ``path_prob + sg(1 - path_prob)`` so the forward value equals
-    the leaf output while gradients flow into the path probabilities.  Leaf
-    execution is the differentiable capacity-bounded grouped dispatch
-    (core/routing.py) — O(B * l * D) compute and memory, EP-shardable; this
-    is what makes trillion-scale FFF-for-MoE training feasible (DESIGN.md §8).
-    """
-    from repro.core import routing as routing_lib
+    probs (B, T, N) -> (leaf_idx (B, T) int32, scale (B, T)) where the scale's
+    forward value is exactly 1 while its gradient flows into the path
+    probabilities (DESIGN.md §8)."""
     B, T = probs.shape[0], probs.shape[1]
     idx = jnp.zeros((B, T), jnp.int32)
     path_prob = jnp.ones((B, T), cfg.accum_dtype)
@@ -337,41 +353,73 @@ def _forward_straight_through(params: Params, cfg: FFFConfig, xf: jax.Array,
         idx = 2 * idx + bit
         off += 2 ** m
     scale = path_prob + jax.lax.stop_gradient(1.0 - path_prob)        # (B, T)
+    return idx, scale
+
+
+def _forward_st_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
+                        rng: Optional[jax.Array] = None,
+                        capacity_factor: float = 1.5
+                        ) -> tuple[jax.Array, dict]:
+    """Beyond-paper: top-1 training at O(l) leaf cost with an ST estimator.
+
+    The hard path is followed (stop-gradient); the selected leaf output is
+    scaled by ``path_prob + sg(1 - path_prob)`` so the forward value equals
+    the leaf output while gradients flow into the path probabilities.  Leaf
+    execution is the differentiable capacity-bounded grouped dispatch
+    (core/routing.py) — O(B * l * D) compute and memory, EP-shardable; this
+    is what makes trillion-scale FFF-for-MoE training feasible (DESIGN.md §8).
+    """
+    xf, lead = utils.flatten_leading(x)
+    xf = xf.astype(cfg.accum_dtype)
+    probs, mix, ent = _soft_stats(params, cfg, xf, rng)
+    idx, scale = _st_descend(cfg, probs)
     out = None
+    kept_all = []
     for t in range(cfg.trees):
         tree_leaves = {k: v[t] for k, v in params.items()
                        if k.startswith("leaf_")}
-        y = routing_lib.grouped_leaf_apply(
+        y, kept = routing_lib.grouped_leaf_apply(
             xf, idx[:, t], tree_leaves, cfg.activation,
-            capacity_factor=capacity_factor, accum_dtype=cfg.accum_dtype)
+            capacity_factor=capacity_factor, accum_dtype=cfg.accum_dtype,
+            return_kept=True)
         y = y * scale[:, t:t + 1]
         out = y if out is None else out + y
-    return out
+        kept_all.append(kept)
+    overflow = 1.0 - jnp.stack(kept_all).astype(cfg.accum_dtype).mean()
+    aux = {"node_probs": probs, "mixture": mix, "entropy": ent,
+           "leaf_idx": idx.reshape(*lead, cfg.trees),
+           "overflow_fraction": overflow}
+    return utils.unflatten_leading(out, lead), aux
 
 
-def forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
-                         capacity_factor: float = 2.0
-                         ) -> tuple[jax.Array, dict]:
+def _forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
+                          capacity_factor: float = 2.0,
+                          dense_levels: int = 8) -> tuple[jax.Array, dict]:
     """FORWARD_I via capacity-bounded grouped dispatch (pure jnp, EP-shardable).
 
     The lowering-friendly twin of kernels/leaf_gemm.fff_infer: same dispatch
     structure, expressed in einsums so pjit/SPMD can partition it.  Used by
-    the serving path for MoE-scale FFF sites."""
+    the serving path for MoE-scale FFF sites (DESIGN.md §3)."""
     xf, lead = utils.flatten_leading(x)
     xf = xf.astype(cfg.accum_dtype)
-    from repro.core import routing as routing_lib
-    leaf_idx = route_hard(params, cfg, xf).reshape(xf.shape[0], cfg.trees)
+    leaf_idx = route_hard(params, cfg, xf,
+                          dense_levels=dense_levels).reshape(xf.shape[0],
+                                                             cfg.trees)
     out = None
+    kept_all = []
     for t in range(cfg.trees):
         tree_leaves = {k: v[t] for k, v in params.items()
                        if k.startswith("leaf_")}
-        y = routing_lib.grouped_leaf_apply(
+        y, kept = routing_lib.grouped_leaf_apply(
             xf, leaf_idx[:, t], tree_leaves, cfg.activation,
             capacity_factor=capacity_factor, accum_dtype=cfg.accum_dtype,
-            serving=True)
+            serving=True, return_kept=True)
         out = y if out is None else out + y
-    return utils.unflatten_leading(out, lead), \
-        {"leaf_idx": leaf_idx.reshape(*lead, cfg.trees)}
+        kept_all.append(kept)
+    overflow = 1.0 - jnp.stack(kept_all).astype(cfg.accum_dtype).mean()
+    aux = {"leaf_idx": leaf_idx.reshape(*lead, cfg.trees),
+           "overflow_fraction": overflow}
+    return utils.unflatten_leading(out, lead), aux
 
 
 def route_hard(params: Params, cfg: FFFConfig, x: jax.Array,
@@ -407,14 +455,63 @@ def route_hard(params: Params, cfg: FFFConfig, x: jax.Array,
     return idx.reshape(*lead, cfg.trees)
 
 
-def forward_hard(params: Params, cfg: FFFConfig, x: jax.Array) -> tuple[jax.Array, dict]:
-    """FORWARD_I: hard descent + single-leaf evaluation per tree."""
+def _forward_hard_gather(params: Params, cfg: FFFConfig, x: jax.Array,
+                         dense_levels: int = 8) -> tuple[jax.Array, dict]:
+    """FORWARD_I: hard descent + single-leaf evaluation per tree (the exact
+    inference reference — no capacity bound, per-token weight gathers)."""
     xf, lead = utils.flatten_leading(x)
     xf = xf.astype(cfg.accum_dtype)
-    leaf_idx = route_hard(params, cfg, xf).reshape(xf.shape[0], cfg.trees)
+    leaf_idx = route_hard(params, cfg, xf,
+                          dense_levels=dense_levels).reshape(xf.shape[0],
+                                                             cfg.trees)
     y = _leaf_forward_gather(params, cfg, xf, leaf_idx).sum(axis=1)
     return utils.unflatten_leading(y, lead), {"leaf_idx":
                                               leaf_idx.reshape(*lead, cfg.trees)}
+
+
+# ---------------------------------------------------------------------------
+# deprecated entry points — thin shims over repro.core.api.apply()
+# ---------------------------------------------------------------------------
+
+def _warn_deprecated(old: str, spec: str) -> None:
+    warnings.warn(
+        f"fff.{old}() is deprecated; call repro.core.api.apply(params, cfg, x,"
+        f" ExecutionSpec({spec})) instead", DeprecationWarning, stacklevel=3)
+
+
+def forward_train(params: Params, cfg: FFFConfig, x: jax.Array,
+                  rng: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
+    """Deprecated: use ``api.apply(..., ExecutionSpec(mode="train"))``."""
+    from repro.core import api  # shim-only: api is the layer above this one
+    _warn_deprecated("forward_train", 'mode="train"')
+    y, out = api.apply(params, cfg, x,
+                       api.ExecutionSpec(mode="train", rng=rng))
+    return y, out.as_dict()
+
+
+def forward_hard(params: Params, cfg: FFFConfig, x: jax.Array
+                 ) -> tuple[jax.Array, dict]:
+    """Deprecated: use ``api.apply(..., ExecutionSpec(mode="infer",
+    backend="reference"))``."""
+    from repro.core import api  # shim-only: api is the layer above this one
+    _warn_deprecated("forward_hard", 'mode="infer", backend="reference"')
+    y, out = api.apply(params, cfg, x,
+                       api.ExecutionSpec(mode="infer", backend="reference"))
+    return y, out.as_dict()
+
+
+def forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
+                         capacity_factor: float = 2.0
+                         ) -> tuple[jax.Array, dict]:
+    """Deprecated: use ``api.apply(..., ExecutionSpec(mode="infer",
+    backend="grouped"))``."""
+    from repro.core import api  # shim-only: api is the layer above this one
+    _warn_deprecated("forward_hard_grouped",
+                     'mode="infer", backend="grouped"')
+    y, out = api.apply(params, cfg, x,
+                       api.ExecutionSpec(mode="infer", backend="grouped",
+                                         capacity_factor=capacity_factor))
+    return y, out.as_dict()
 
 
 # ---------------------------------------------------------------------------

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import utils
+from repro.distributed import act as dist_act
 
 
 class SortedDispatch(NamedTuple):
@@ -134,8 +135,8 @@ def group_slots(leaf_idx: jax.Array, num_groups: int) -> jax.Array:
 
 def grouped_leaf_apply(x: jax.Array, leaf_idx: jax.Array, params: dict,
                        activation: str, capacity_factor: float = 1.5,
-                       accum_dtype=jnp.float32, serving: bool = False
-                       ) -> jax.Array:
+                       accum_dtype=jnp.float32, serving: bool = False,
+                       return_kept: bool = False):
     """Differentiable capacity-bounded grouped leaf execution (pure jnp).
 
     The scale path for both ST training and batched serving of MoE-sized FFF
@@ -150,18 +151,18 @@ def grouped_leaf_apply(x: jax.Array, leaf_idx: jax.Array, params: dict,
     fallback).
 
     x (B, D); params: single-tree leaf weights {leaf_w1/leaf_w2} or
-    {leaf_wg/leaf_wu/leaf_wd}; returns (B, dim_out).
+    {leaf_wg/leaf_wu/leaf_wd}; returns (B, dim_out), or with
+    ``return_kept=True`` a ``(y, kept)`` pair where ``kept`` (B,) bool marks
+    tokens that fit under capacity (False = dropped to zeros).
     """
-    from repro import utils as _u
-    from repro.distributed import act as _act
     B, D = x.shape
     swiglu = "leaf_wg" in params
     E = (params["leaf_wg"] if swiglu else params["leaf_w1"]).shape[0]
-    G = _act.data_shard_count()
+    G = dist_act.data_shard_count()
     if B % G:
         G = 1
     Bg = B // G
-    capacity = max(8, _u.round_up(int(capacity_factor * _u.cdiv(Bg, E)), 8))
+    capacity = max(8, utils.round_up(int(capacity_factor * utils.cdiv(Bg, E)), 8))
 
     xg_ = x.reshape(G, Bg, D)
     idx_g = leaf_idx.reshape(G, Bg)
@@ -170,17 +171,19 @@ def grouped_leaf_apply(x: jax.Array, leaf_idx: jax.Array, params: dict,
     # (measured 260x FLOP inflation at 64 experts — §Perf iter 1).
     slot = jax.vmap(lambda i: group_slots(i, E))(idx_g)           # (G, Bg)
     kept = slot < capacity
-    slot_c = jnp.where(kept, slot, capacity - 1)
-    flat_idx = idx_g * capacity + slot_c                          # (G, Bg)
+    # dropped tokens scatter OUT OF BOUNDS (mode="drop"): clamping them onto
+    # slot capacity-1 would collide with the kept token legitimately there,
+    # and duplicate-index scatter-set resolution is nondeterministic
+    flat_idx = jnp.where(kept, idx_g * capacity + slot, E * capacity)
 
-    def scatter_one(xg, fi, kp):
+    def scatter_one(xg, fi):
         buf = jnp.zeros((E * capacity, D), x.dtype)
-        return buf.at[fi].set(jnp.where(kp[:, None], xg, 0.0))
+        return buf.at[fi].set(xg, mode="drop")
 
-    xbuf = jax.vmap(scatter_one)(xg_, flat_idx, kept)             # (G, E*C, D)
+    xbuf = jax.vmap(scatter_one)(xg_, flat_idx)                   # (G, E*C, D)
     xbuf = xbuf.reshape(G, E, capacity, D)
-    dispatch_kind = _act.DISPATCH_SERVE if serving else _act.DISPATCH_ECD
-    xbuf = _act.shard(xbuf, dispatch_kind)
+    dispatch_kind = dist_act.DISPATCH_SERVE if serving else dist_act.DISPATCH_ECD
+    xbuf = dist_act.shard(xbuf, dispatch_kind)
     ad = accum_dtype
     if swiglu:
         g = jnp.einsum("gecd,edh->gech", xbuf, params["leaf_wg"],
@@ -194,12 +197,12 @@ def grouped_leaf_apply(x: jax.Array, leaf_idx: jax.Array, params: dict,
                        preferred_element_type=ad)
         if "leaf_b1" in params:
             h = h + params["leaf_b1"][None, :, None].astype(ad)
-        h = _u.get_activation(activation)(h)
+        h = utils.get_activation(activation)(h)
         yg = jnp.einsum("gech,eho->geco", h, params["leaf_w2"],
                         preferred_element_type=ad)
         if "leaf_b2" in params:
             yg = yg + params["leaf_b2"][None, :, None].astype(ad)
-    yg = _act.shard(yg, dispatch_kind)
+    yg = dist_act.shard(yg, dispatch_kind)
     O = yg.shape[-1]
 
     def gather_one(yb, fi, kp):
@@ -207,6 +210,8 @@ def grouped_leaf_apply(x: jax.Array, leaf_idx: jax.Array, params: dict,
         return jnp.where(kp[:, None], out, 0.0)
 
     y = jax.vmap(gather_one)(yg, flat_idx, kept)                  # (G, Bg, O)
+    if return_kept:
+        return y.reshape(B, O), kept.reshape(B)
     return y.reshape(B, O)
 
 

@@ -32,6 +32,11 @@ def use_mesh(mesh: Mesh, rules: dict[str, P]):
         _state.ctx = prev
 
 
+def mesh_installed() -> bool:
+    """Whether a (mesh, rules) context is active for the current trace."""
+    return _ctx() is not None
+
+
 def data_shard_count() -> int:
     """Number of data-parallel shards in the installed mesh context (1 when
     tracing unsharded).  Model code uses this to block token axes so that

@@ -7,5 +7,12 @@
 
 Each kernel ships ops.py (jit wrapper) and ref.py (pure-jnp oracle); tests
 sweep shapes x dtypes in interpret mode against the oracle.
+
+Consumers do not call these directly: the package is wired into the
+execution-backend registry as the ``"pallas"`` backend of
+``repro.core.api.apply()`` (selected automatically on TPU for kernel-eligible
+configs, or explicitly via ``ExecutionSpec(backend="pallas")``).  The raw
+``fff_infer`` / ``fff_decode`` wrappers remain exported for kernel-level
+tests and benchmarking.
 """
 from repro.kernels import fused_fff, leaf_gemm, tree_router

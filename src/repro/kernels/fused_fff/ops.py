@@ -40,18 +40,23 @@ def gathered_leaf_mlp(x: jax.Array, leaf_idx: jax.Array, params: dict, *,
 
 
 def fff_decode(x: jax.Array, params: dict, cfg: fff_lib.FFFConfig, *,
-               interpret: Optional[bool] = None) -> jax.Array:
+               interpret: Optional[bool] = None,
+               dense_levels: Optional[int] = None,
+               return_leaf_idx: bool = False):
     """Exact FORWARD_I via router kernel + gathered leaf kernels.
 
-    x (B, D) -> (B, dim_out); sums over forest trees."""
+    x (B, D) -> (B, dim_out); sums over forest trees.  With
+    ``return_leaf_idx=True`` returns ``(y, leaf_idx (B, trees))``."""
     if cfg.node_width != 1:
         raise ValueError("kernel path supports node_width == 1 (paper default)")
     out = None
+    idxs = []
     for t in range(cfg.trees):
         nw = params["node_w1"][t, :, :, 0] * params["node_w2"][t, :, 0:1]
         nb = params["node_b1"][t, :, 0] * params["node_w2"][t, :, 0] \
             + params["node_b2"][t]
         leaf_idx = router_ops.route(x, nw, nb, depth=cfg.depth,
+                                    dense_levels=dense_levels,
                                     interpret=interpret)
         tree_leaves = {k: v[t] for k, v in params.items()
                        if k.startswith("leaf_")}
@@ -60,4 +65,7 @@ def fff_decode(x: jax.Array, params: dict, cfg: fff_lib.FFFConfig, *,
             activation=cfg.activation if cfg.activation != "swiglu" else "swiglu",
             interpret=interpret)
         out = y if out is None else out + y
+        idxs.append(leaf_idx)
+    if return_leaf_idx:
+        return out, jnp.stack(idxs, axis=1)
     return out

@@ -25,7 +25,9 @@ from repro.kernels.tree_router import ops as router_ops
 class GroupedLayout(NamedTuple):
     x_grouped: jax.Array      # (E, C, D) capacity-padded sorted tokens
     leaf_idx: jax.Array       # (B,) routed leaf per original token
-    slot: jax.Array           # (B,) slot within the leaf's buffer
+    slot: jax.Array           # (B,) slot within the leaf's buffer;
+                              # == capacity marks a dropped token — always
+                              # mask reads with `kept`, never index raw
     kept: jax.Array           # (B,) bool: token fit under capacity
     group_sizes: jax.Array    # (E,) clipped to capacity
 
@@ -37,11 +39,15 @@ def scatter_to_groups(x: jax.Array, leaf_idx: jax.Array, num_leaves: int,
     B, D = x.shape
     slot = routing_lib.group_slots(leaf_idx, num_leaves)
     kept = slot < capacity
-    slot_c = jnp.where(kept, slot, capacity - 1)
-    flat_idx = leaf_idx * capacity + slot_c
+    # dropped tokens get the uniform out-of-bounds flat index E*C so
+    # mode="drop" discards their write — a per-leaf sentinel like
+    # leaf*C + capacity would land in the NEXT leaf's slot 0, and clamping
+    # to capacity-1 would nondeterministically clobber the kept token there
+    slot_c = jnp.where(kept, slot, capacity)
+    flat_idx = jnp.where(kept, leaf_idx * capacity + slot,
+                         num_leaves * capacity)
     xg = jnp.zeros((num_leaves * capacity, D), x.dtype)
-    xg = xg.at[flat_idx].set(jnp.where(kept[:, None], x, 0.0),
-                             mode="drop")
+    xg = xg.at[flat_idx].set(x, mode="drop")
     sizes = jnp.minimum(jnp.bincount(leaf_idx, length=num_leaves), capacity)
     return GroupedLayout(xg.reshape(num_leaves, capacity, D), leaf_idx,
                          slot_c, kept, sizes.astype(jnp.int32))
@@ -52,7 +58,10 @@ def gather_from_groups(y_grouped: jax.Array, layout: GroupedLayout
     """(E, C, O) -> per-token outputs (B, O); overflowed tokens get zeros."""
     E, C, O = y_grouped.shape
     flat = y_grouped.reshape(E * C, O)
-    idx = layout.leaf_idx * C + layout.slot
+    # same uniform out-of-bounds sentinel as the scatter: dropped tokens read
+    # the clipped last row, then the kept mask zeroes them — never a
+    # neighbouring leaf's slot
+    idx = jnp.where(layout.kept, layout.leaf_idx * C + layout.slot, E * C)
     y = jnp.take(flat, idx, axis=0)
     return jnp.where(layout.kept[:, None], y, 0.0)
 
@@ -127,19 +136,23 @@ def _exact_gather_leaf(x, leaf_idx, params, swiglu, activation):
 
 def fff_infer(x: jax.Array, params: dict, cfg: fff_lib.FFFConfig, *,
               capacity_factor: float = 2.0,
-              interpret: Optional[bool] = None) -> jax.Array:
+              interpret: Optional[bool] = None,
+              dense_levels: Optional[int] = None,
+              return_leaf_idx: bool = False):
     """Full TPU-native FORWARD_I for a (possibly multi-tree) FFF layer:
-    kernel-routed descent + grouped leaf GEMMs.  x (B, D) -> (B, dim_out)."""
+    kernel-routed descent + grouped leaf GEMMs.  x (B, D) -> (B, dim_out),
+    or ``(y, leaf_idx (B, trees))`` with ``return_leaf_idx=True``."""
     if cfg.node_width != 1:
         raise ValueError("kernel path supports node_width == 1 (paper default)")
-    B = x.shape[0]
     out = None
+    idxs = []
     for t in range(cfg.trees):
         # collapse the <D, 1, 1> node net to a hyperplane (w2 * w1, w2*b1+b2)
         nw = params["node_w1"][t, :, :, 0] * params["node_w2"][t, :, 0:1]
         nb = params["node_b1"][t, :, 0] * params["node_w2"][t, :, 0] \
             + params["node_b2"][t]
         leaf_idx = router_ops.route(x, nw, nb, depth=cfg.depth,
+                                    dense_levels=dense_levels,
                                     interpret=interpret)
         tree_leaves = {k: v[t] for k, v in params.items()
                        if k.startswith("leaf_")}
@@ -148,4 +161,7 @@ def fff_infer(x: jax.Array, params: dict, cfg: fff_lib.FFFConfig, *,
                          else "swiglu",
                          capacity_factor=capacity_factor, interpret=interpret)
         out = y if out is None else out + y
+        idxs.append(leaf_idx)
+    if return_leaf_idx:
+        return out, jnp.stack(idxs, axis=1)
     return out

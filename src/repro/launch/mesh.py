@@ -12,25 +12,33 @@ change only.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:  # jax >= 0.5 makes axis types explicit; older jax is Auto-only anyway
+    from jax.sharding import AxisType
+
+    def _axis_types(n: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n}
+except ImportError:  # pragma: no cover - depends on installed jax
+    def _axis_types(n: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types(len(axes)))
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
     """Arbitrary mesh (tests / elastic re-mesh)."""
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types(len(axes)))
 
 
 def make_host_mesh() -> Mesh:
     """Whatever devices exist, as a 1-D data mesh (CPU tests, examples)."""
     n = jax.device_count()
-    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))
+    return jax.make_mesh((n,), ("data",), **_axis_types(1))
 
 
 def data_axes(mesh: Mesh) -> tuple[str, ...]:

@@ -187,10 +187,12 @@ def param_counts(cfg: ModelConfig, total_params: int, mode: str = "decode"
     eval_shape struct (exact); inactive mass is the conditional FFN width the
     pass never touches: MoE non-selected experts, FFF non-selected leaves.
 
-    Mode matters for FFF: faithful FORWARD_T training evaluates *all* leaves
-    (they all receive gradient — that compute is useful by the paper's
-    semantics), while ST-trained sites and every inference pass touch only
-    the routed leaf/forest."""
+    Mode matters for FFF and mirrors the ``core.api.ExecutionSpec`` backend
+    split: faithful FORWARD_T training (the ``train``/``reference`` backend)
+    evaluates *all* leaves — they all receive gradient, so that compute is
+    useful by the paper's semantics — while ST-trained sites
+    (``train``/``grouped``) and every ``infer`` backend touch only the routed
+    leaf/forest (DESIGN.md §6)."""
     inactive = 0
     n_periods = cfg.n_layers // len(cfg.period)
     for spec in cfg.period:

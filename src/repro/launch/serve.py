@@ -5,13 +5,19 @@ grouped leaf execution, per-step latency stats.  Runs reduced configs on CPU;
 the same step functions pjit onto the pod meshes (see dryrun.py for the
 compile proof at the production shapes).
 
+Model code invokes every FFF site through ``api.apply(..., backend="auto")``;
+this driver steers the whole stack's execution strategy with
+``--fff-backend`` via ``api.use_backend`` — the launch-layer end of the
+backend-registry seam (core/api.py, DESIGN.md §2).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-20b --reduced \
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 [--fff-backend grouped]
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -20,6 +26,7 @@ import numpy as np
 
 from repro import utils
 from repro.configs import registry
+from repro.core import api
 from repro.data import tokens as tokens_lib
 from repro.models import lm
 
@@ -29,6 +36,10 @@ def main() -> None:
     ap.add_argument("--arch", default="internlm2-20b",
                     choices=list(registry.ARCH_IDS))
     ap.add_argument("--ffn", default="fff", choices=["fff", "native", "dense"])
+    ap.add_argument("--fff-backend", default="auto",
+                    choices=["auto"] + api.list_backends("infer"),
+                    help="execution backend for every FFF site (auto = "
+                         "per-site resolution; see core/api.py)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -60,21 +71,33 @@ def main() -> None:
     prefill_jit = jax.jit(lambda p, b, c: lm.prefill(p, cfg, b, c))
     decode_jit = jax.jit(lambda p, t, c, off: lm.decode_step(p, cfg, t, c, off))
 
+    # the backend override is read at trace time; wrap every call since any
+    # shape change retraces
+    def backend_ctx():
+        # mode="infer": never let a serving override redirect train-mode math
+        return (api.use_backend(args.fff_backend, mode="infer")
+                if args.fff_backend != "auto" else contextlib.nullcontext())
+
     caches = lm.init_caches(cfg, args.batch, max_len)
     t0 = time.time()
-    logits, caches = prefill_jit(params, batch, caches)
+    with backend_ctx():
+        logits, caches = prefill_jit(params, batch, caches)
     logits.block_until_ready()
     t_prefill = time.time() - t0
+    # "requested": ineligible sites fall through to auto heuristics
+    # (core/api.py supports predicates), so the label is the override, not
+    # a per-site guarantee
     print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f}ms "
-          f"(incl. compile)")
+          f"(incl. compile, fff backend={args.fff_backend} requested)")
 
     tok = logits.argmax(-1)[:, None].astype(jnp.int32)
     out = [tok]
     lat = []
     for i in range(args.gen):
         t0 = time.time()
-        logits, caches = decode_jit(params, tok, caches,
-                                    jnp.int32(args.prompt_len + i))
+        with backend_ctx():
+            logits, caches = decode_jit(params, tok, caches,
+                                        jnp.int32(args.prompt_len + i))
         logits.block_until_ready()
         lat.append(time.time() - t0)
         tok = logits.argmax(-1)[:, None].astype(jnp.int32)

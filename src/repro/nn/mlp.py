@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FFNSpec
-from repro.core import ff, fff, moe
+from repro.core import api, ff, fff, moe
 
 Params = dict
 
@@ -73,16 +73,13 @@ def forward(params: Params, spec: FFNSpec, d_model: int, x: jax.Array, *,
             {"hardening": zero, "moe_aux": zero}
     if spec.kind == "fff":
         cfg = make_fff_config(spec, d_model, **kw)
+        # one entry point; backend="auto" picks the execution strategy per
+        # platform/site (and the launch layer can steer it via
+        # api.use_backend) — see core/api.py
+        y, out = api.apply(params, cfg, x, api.ExecutionSpec(
+            mode="train" if train else "infer", rng=rng))
         if train:
-            y, aux = fff.forward_train(params, cfg, x, rng=rng)
-            harden = spec.hardening_scale * fff.hardening_loss(aux["node_probs"])
-        else:
-            # grouped dispatch for big bias-free sites (EP-shardable); exact
-            # per-token gather for small leaves
-            if cfg.num_leaves * cfg.leaf_width >= 4096:
-                y, _ = fff.forward_hard_grouped(params, cfg, x)
-            else:
-                y, _ = fff.forward_hard(params, cfg, x)
+            harden = spec.hardening_scale * fff.hardening_loss(out.node_probs)
         return y, {"hardening": harden.astype(jnp.float32) if train else zero,
                    "moe_aux": zero}
     if spec.kind == "moe":

@@ -1,0 +1,215 @@
+"""Backend-parity matrix for the ``api.apply()`` registry: every registered
+backend must agree with the reference path, across mode x backend x dtype x
+depth (incl. depth=0) x forest size, Pallas running in interpret mode.
+
+Parity across *all* modes is checked in the hardened limit (node logits
+scaled up, tokens filtered to a decision margin): there FORWARD_T's soft
+mixture collapses onto the single routed leaf, so train and infer backends
+must produce the same outputs — paper §Hardening, and exactly the regime the
+serving stack relies on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, fff
+
+CASES = [(mode, backend)
+         for mode in api.MODES
+         for backend in api.list_backends(mode)]
+
+
+def _hardened_case(depth, trees, dtype, din=16, dout=12, leaf=8, batch=64,
+                   pool=512, seed=0):
+    """Bias-free FFF params with decisively-hardened node boundaries, plus
+    tokens filtered to a decision margin at every node (so bf16 rounding
+    cannot flip a routing decision between backends; threshold probed
+    empirically — routing still agrees at 0.02 across all backends)."""
+    cfg = fff.FFFConfig(dim_in=din, dim_out=dout, depth=depth,
+                        leaf_width=leaf, activation="gelu", trees=trees,
+                        leaf_bias=False, param_dtype=dtype)
+    params = fff.init(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (pool, din))
+    if depth > 0:
+        logits = fff._node_logits_all(
+            {k: v.astype(jnp.float32) for k, v in params.items()},
+            cfg, x.astype(jnp.float32))
+        margin = np.asarray(jnp.abs(logits).min(axis=(1, 2)))
+        x = x[margin > 0.02][:batch]
+        assert x.shape[0] >= 8, "margin filter left too few tokens"
+        for k in ("node_w1", "node_b1"):
+            params[k] = (params[k].astype(jnp.float32) * 5e4).astype(dtype)
+    else:
+        x = x[:batch]
+    return cfg, params, x.astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("depth,trees", [(0, 1), (3, 1), (2, 3)])
+@pytest.mark.parametrize("mode,backend", CASES,
+                         ids=[f"{m}-{b}" for m, b in CASES])
+def test_backend_parity(mode, backend, depth, trees, dtype):
+    cfg, params, x = _hardened_case(depth, trees, dtype)
+    want, want_out = api.apply(params, cfg, x, api.ExecutionSpec(
+        mode="infer", backend="reference"))
+    spec = api.ExecutionSpec(mode=mode, backend=backend, capacity_factor=8.0,
+                             interpret=True)
+    got, out = api.apply(params, cfg, x, spec)
+    assert got.shape == want.shape
+    tol = 1e-1 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    if out.leaf_idx is not None:
+        np.testing.assert_array_equal(np.asarray(out.leaf_idx),
+                                      np.asarray(want_out.leaf_idx))
+    if out.overflow_fraction is not None:
+        assert float(out.overflow_fraction) == 0.0
+    if mode == "train":
+        assert out.node_probs is not None and out.entropy is not None
+
+
+def test_auto_resolves_to_registered_backends():
+    for depth, trees, st in [(0, 1, False), (3, 1, False), (3, 2, True)]:
+        cfg = fff.FFFConfig(dim_in=8, dim_out=8, depth=depth, leaf_width=4,
+                            activation="gelu", trees=trees, leaf_bias=False,
+                            st_training=st)
+        params = fff.init(jax.random.PRNGKey(0), cfg)
+        for mode in api.MODES:
+            name = api._resolve_auto(params, cfg, mode)
+            assert name in api.list_backends(mode), (mode, name)
+
+
+def test_auto_picks_st_grouped_training():
+    cfg = fff.FFFConfig(dim_in=8, dim_out=8, depth=3, leaf_width=4,
+                        activation="gelu", leaf_bias=False, st_training=True)
+    params = fff.init(jax.random.PRNGKey(0), cfg)
+    assert api._resolve_auto(params, cfg, "train") == "grouped"
+    # depth 0 has no tree to descend: faithful dense FORWARD_T
+    cfg0 = fff.FFFConfig(dim_in=8, dim_out=8, depth=0, leaf_width=4,
+                         activation="gelu", leaf_bias=False, st_training=True)
+    assert api._resolve_auto(params, cfg0, "train") == "reference"
+
+
+def test_register_and_use_custom_backend():
+    calls = []
+
+    def tagged(params, cfg, x, spec):
+        calls.append("_test_tagged")
+        return api.get_backend("infer", "reference")(params, cfg, x, spec)
+
+    api.register_backend("infer", "_test_tagged", tagged)
+    try:
+        cfg = fff.FFFConfig(dim_in=8, dim_out=4, depth=2, leaf_width=4,
+                            activation="relu")
+        params = fff.init(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+        y, out = api.apply(params, cfg, x, api.ExecutionSpec(
+            mode="infer", backend="_test_tagged"))
+        want, _ = api.apply(params, cfg, x, api.ExecutionSpec(
+            mode="infer", backend="reference"))
+        assert calls == ["_test_tagged"]
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+        assert "_test_tagged" in api.list_backends("infer")
+        # use_backend steers auto-resolution to the new backend...
+        with api.use_backend("_test_tagged"):
+            api.apply(params, cfg, x, api.ExecutionSpec(mode="infer"))
+        assert calls == ["_test_tagged", "_test_tagged"]
+        # ...but falls through for modes it is not registered for
+        with api.use_backend("_test_tagged"):
+            name = api._resolve_auto(params, cfg, "train")
+        assert name == "reference"
+        # a mode restriction keeps the override away from other modes even
+        # when the name IS registered there ("grouped" means exact dispatch
+        # for infer but the ST estimator for train)
+        with api.use_backend("grouped", mode="infer"):
+            assert api._resolve_auto(params, cfg, "infer") == "grouped"
+            assert api._resolve_auto(params, cfg, "train") == "reference"
+        with pytest.raises(ValueError, match="mode"):
+            with api.use_backend("grouped", mode="decode"):
+                pass
+    finally:
+        del api._REGISTRY[("infer", "_test_tagged")]
+
+
+def test_use_backend_rejects_names_registered_nowhere():
+    with pytest.raises(KeyError, match="any mode"):
+        with api.use_backend("palas"):  # typo must not silently run auto
+            pass
+
+
+def test_override_honours_supports_predicate():
+    """use_backend('pallas') must fall through for kernel-ineligible configs
+    (biased leaves) instead of crashing inside the kernels."""
+    cfg = fff.FFFConfig(dim_in=8, dim_out=4, depth=2, leaf_width=4,
+                        activation="gelu", leaf_bias=True)
+    params = fff.init(jax.random.PRNGKey(0), cfg)
+    with api.use_backend("pallas"):
+        assert api._resolve_auto(params, cfg, "infer") == "reference"
+    cfg_ok = fff.FFFConfig(dim_in=8, dim_out=4, depth=2, leaf_width=4,
+                           activation="gelu", leaf_bias=False)
+    params_ok = fff.init(jax.random.PRNGKey(0), cfg_ok)
+    with api.use_backend("pallas"):
+        assert api._resolve_auto(params_ok, cfg_ok, "infer") == "pallas"
+
+
+def test_capacity_factor_defaults_preserve_seed_values():
+    """spec.capacity_factor=None must hand each backend its pre-registry
+    default: 1.5 for ST training, 2.0 for capacity-bounded inference."""
+    seen = {}
+    orig_st = fff._forward_st_grouped
+    orig_hard = fff._forward_hard_grouped
+
+    def spy_st(*a, **kw):
+        seen["train"] = kw["capacity_factor"]
+        return orig_st(*a, **kw)
+
+    def spy_hard(*a, **kw):
+        seen["infer"] = kw["capacity_factor"]
+        return orig_hard(*a, **kw)
+
+    cfg = fff.FFFConfig(dim_in=8, dim_out=4, depth=2, leaf_width=4,
+                        activation="gelu", leaf_bias=False, st_training=True)
+    params = fff.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    fff._forward_st_grouped = spy_st
+    fff._forward_hard_grouped = spy_hard
+    try:
+        api.apply(params, cfg, x, api.ExecutionSpec(mode="train"))
+        api.apply(params, cfg, x, api.ExecutionSpec(mode="infer",
+                                                    backend="grouped"))
+    finally:
+        fff._forward_st_grouped = orig_st
+        fff._forward_hard_grouped = orig_hard
+    assert seen == {"train": 1.5, "infer": 2.0}
+
+
+def test_unknown_backend_raises_with_catalogue():
+    cfg = fff.FFFConfig(dim_in=8, dim_out=4, depth=1, leaf_width=4)
+    params = fff.init(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((4, 8))
+    with pytest.raises(KeyError, match="reference"):
+        api.apply(params, cfg, x, api.ExecutionSpec(mode="infer",
+                                                    backend="bogus"))
+    with pytest.raises(ValueError, match="mode"):
+        api.apply(params, cfg, x, api.ExecutionSpec(mode="decode"))
+    with pytest.raises(ValueError):
+        api.register_backend("infer", "auto", lambda *a: None)
+
+
+def test_apply_under_jit_returns_pytree_output():
+    cfg = fff.FFFConfig(dim_in=8, dim_out=4, depth=2, leaf_width=4,
+                        activation="relu")
+    params = fff.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    spec = api.ExecutionSpec(mode="train")
+    y, out = jax.jit(lambda p, x: api.apply(p, cfg, x, spec))(params, x)
+    y2, out2 = api.apply(params, cfg, x, spec)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                               rtol=2e-5, atol=2e-5)
+    assert isinstance(out, api.FFFOutput)
+    np.testing.assert_allclose(np.asarray(out.mixture),
+                               np.asarray(out2.mixture),
+                               rtol=2e-5, atol=2e-5)

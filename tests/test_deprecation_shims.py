@@ -1,0 +1,66 @@
+"""The legacy ``fff.forward_*`` entry points must (a) warn, (b) delegate to
+the exact equivalent ``api.apply()`` call — bit-identical results."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, fff
+
+
+def _make(st=False, act="relu", leaf_bias=True):
+    cfg = fff.FFFConfig(dim_in=16, dim_out=10, depth=3, leaf_width=4,
+                        activation=act, leaf_bias=leaf_bias, st_training=st)
+    params = fff.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    return cfg, params, x
+
+
+def test_forward_train_shim_warns_and_matches_apply():
+    cfg, p, x = _make()
+    with pytest.warns(DeprecationWarning, match="forward_train"):
+        y, aux = fff.forward_train(p, cfg, x)
+    want, out = api.apply(p, cfg, x, api.ExecutionSpec(mode="train"))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(aux["node_probs"]),
+                                  np.asarray(out.node_probs))
+    np.testing.assert_array_equal(np.asarray(aux["mixture"]),
+                                  np.asarray(out.mixture))
+    assert float(aux["entropy"]) == float(out.entropy)
+
+
+def test_forward_train_shim_honours_st_training():
+    cfg, p, x = _make(st=True, act="swiglu", leaf_bias=False)
+    with pytest.warns(DeprecationWarning):
+        y, aux = fff.forward_train(p, cfg, x)
+    # equivalent apply(): auto resolves st_training configs to grouped ST
+    want, out = api.apply(p, cfg, x, api.ExecutionSpec(mode="train"))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(aux["leaf_idx"]),
+                                  np.asarray(out.leaf_idx))
+
+
+def test_forward_hard_shim_warns_and_matches_apply():
+    cfg, p, x = _make()
+    with pytest.warns(DeprecationWarning, match="forward_hard"):
+        y, aux = fff.forward_hard(p, cfg, x)
+    want, out = api.apply(p, cfg, x, api.ExecutionSpec(mode="infer",
+                                                       backend="reference"))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(aux["leaf_idx"]),
+                                  np.asarray(out.leaf_idx))
+
+
+def test_forward_hard_grouped_shim_warns_and_matches_apply():
+    cfg, p, x = _make(act="swiglu", leaf_bias=False)
+    with pytest.warns(DeprecationWarning, match="forward_hard_grouped"):
+        y, aux = fff.forward_hard_grouped(p, cfg, x, capacity_factor=8.0)
+    want, out = api.apply(p, cfg, x, api.ExecutionSpec(
+        mode="infer", backend="grouped", capacity_factor=8.0))
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(aux["leaf_idx"]),
+                                  np.asarray(out.leaf_idx))
+
+
+def test_shims_still_importable_from_package_root():
+    from repro.core import forward_hard, forward_train  # noqa: F401

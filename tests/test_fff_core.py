@@ -1,10 +1,14 @@
-"""Unit tests for the core FFF layer: paper Algorithm 1 semantics."""
+"""Unit tests for the core FFF layer: paper Algorithm 1 semantics, exercised
+through the single ``api.apply()`` entry point."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import ff, fff
+from repro.core import api, ff, fff, routing
+
+TRAIN = api.ExecutionSpec(mode="train")
+INFER = api.ExecutionSpec(mode="infer", backend="reference")
 
 
 def make(depth=3, leaf=4, din=16, dout=10, act="relu", trees=1, seed=0, **kw):
@@ -16,31 +20,32 @@ def make(depth=3, leaf=4, din=16, dout=10, act="relu", trees=1, seed=0, **kw):
 def test_shapes_train_and_hard():
     cfg, p = make()
     x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
-    y_t, aux = fff.forward_train(p, cfg, x)
-    y_i, aux_i = fff.forward_hard(p, cfg, x)
+    y_t, out = api.apply(p, cfg, x, TRAIN)
+    y_i, out_i = api.apply(p, cfg, x, INFER)
     assert y_t.shape == (32, 10) and y_i.shape == (32, 10)
-    assert aux["node_probs"].shape == (32, 1, cfg.num_nodes)
-    assert aux["mixture"].shape == (32, 1, cfg.num_leaves)
-    assert aux_i["leaf_idx"].shape == (32, 1)
+    assert out.node_probs.shape == (32, 1, cfg.num_nodes)
+    assert out.mixture.shape == (32, 1, cfg.num_leaves)
+    assert out_i.leaf_idx.shape == (32, 1)
     assert jnp.isfinite(y_t).all() and jnp.isfinite(y_i).all()
 
 
 def test_mixture_weights_form_distribution():
     cfg, p = make(depth=5, leaf=2)
     x = jax.random.normal(jax.random.PRNGKey(2), (64, 16))
-    _, aux = fff.forward_train(p, cfg, x)
-    s = aux["mixture"].sum(-1)
+    _, out = api.apply(p, cfg, x, TRAIN)
+    s = out.mixture.sum(-1)
     np.testing.assert_allclose(np.asarray(s), 1.0, atol=1e-5)
-    assert (aux["mixture"] >= 0).all()
+    assert (out.mixture >= 0).all()
 
 
 def test_leading_dims_flattened():
     cfg, p = make()
     x = jax.random.normal(jax.random.PRNGKey(3), (4, 8, 16))
-    y, _ = fff.forward_train(p, cfg, x)
+    y, _ = api.apply(p, cfg, x, TRAIN)
     assert y.shape == (4, 8, 10)
-    y2, _ = fff.forward_hard(p, cfg, x)
+    y2, out2 = api.apply(p, cfg, x, INFER)
     assert y2.shape == (4, 8, 10)
+    assert out2.leaf_idx.shape == (4, 8, 1)
 
 
 def test_hard_equals_train_when_hardened():
@@ -57,8 +62,8 @@ def test_hard_equals_train_when_hardened():
     margin = jnp.abs(logits).min(axis=(1, 2))
     keep = np.asarray(margin) > 1e-3
     x = x[keep]
-    y_t, _ = fff.forward_train(p_hard, cfg, x)
-    y_i, _ = fff.forward_hard(p_hard, cfg, x)
+    y_t, _ = api.apply(p_hard, cfg, x, TRAIN)
+    y_i, _ = api.apply(p_hard, cfg, x, INFER)
     np.testing.assert_allclose(np.asarray(y_t), np.asarray(y_i),
                                rtol=1e-4, atol=1e-4)
 
@@ -70,7 +75,7 @@ def test_zero_nodes_equals_scaled_dense_ff():
     for k in ("node_w1", "node_b1", "node_w2", "node_b2"):
         p[k] = jnp.zeros_like(p[k])
     x = jax.random.normal(jax.random.PRNGKey(5), (16, 16))
-    y, _ = fff.forward_train(p, cfg, x)
+    y, _ = api.apply(p, cfg, x, TRAIN)
     dense = fff.as_dense_ff_params(p, cfg)
     fcfg = ff.FFConfig(dim_in=16, dim_out=10, width=16, activation="relu")
     y_ff = ff.forward(dense, fcfg, x)
@@ -88,14 +93,14 @@ def test_route_hard_matches_per_level_gather():
 def test_forest_sums_trees():
     cfg, p = make(depth=2, leaf=4, trees=3)
     x = jax.random.normal(jax.random.PRNGKey(7), (8, 16))
-    y, _ = fff.forward_hard(p, cfg, x)
+    y, _ = api.apply(p, cfg, x, INFER)
     # evaluate each tree separately and sum
     total = jnp.zeros_like(y)
     for t in range(3):
         p_t = {k: v[t:t + 1] for k, v in p.items()}
         cfg_t = fff.FFFConfig(dim_in=16, dim_out=10, depth=2, leaf_width=4,
                               activation="relu", trees=1)
-        y_t, _ = fff.forward_hard(p_t, cfg_t, x)
+        y_t, _ = api.apply(p_t, cfg_t, x, INFER)
         total = total + y_t
     np.testing.assert_allclose(np.asarray(y), np.asarray(total), atol=1e-5)
 
@@ -103,11 +108,39 @@ def test_forest_sums_trees():
 def test_grouped_hard_matches_gather_hard():
     cfg, p = make(depth=4, leaf=8, act="swiglu", leaf_bias=False)
     x = jax.random.normal(jax.random.PRNGKey(8), (64, 16))
-    y1, a1 = fff.forward_hard(p, cfg, x)
-    y2, a2 = fff.forward_hard_grouped(p, cfg, x, capacity_factor=8.0)
+    y1, o1 = api.apply(p, cfg, x, INFER)
+    y2, o2 = api.apply(p, cfg, x, api.ExecutionSpec(
+        mode="infer", backend="grouped", capacity_factor=8.0))
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
                                rtol=1e-4, atol=1e-4)
-    assert (a1["leaf_idx"] == a2["leaf_idx"]).all()
+    assert (o1.leaf_idx == o2.leaf_idx).all()
+    assert float(o2.overflow_fraction) == 0.0
+
+
+def test_grouped_overflow_never_corrupts_kept_tokens():
+    """Over-capacity tokens must be dropped cleanly: kept tokens' outputs
+    match the exact gather bit-for-bit (a clamped scatter used to collide a
+    dropped token's zero row with the last kept slot nondeterministically)."""
+    E, B, D, H = 4, 64, 8, 4
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (B, D))
+    params = {"leaf_w1": jax.random.normal(jax.random.fold_in(key, 1),
+                                           (E, D, H)),
+              "leaf_w2": jax.random.normal(jax.random.fold_in(key, 2),
+                                           (E, H, D))}
+    leaf_idx = jnp.zeros((B,), jnp.int32)          # everyone routes to leaf 0
+    y, kept = routing.grouped_leaf_apply(x, leaf_idx, params, "gelu",
+                                         capacity_factor=0.25,
+                                         return_kept=True)
+    assert 0 < int(kept.sum()) < B                 # the bound actually bites
+    h = jax.nn.gelu(jnp.einsum("bd,dh->bh", x, params["leaf_w1"][0],
+                               preferred_element_type=jnp.float32))
+    want = jnp.einsum("bh,ho->bo", h, params["leaf_w2"][0],
+                      preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y[np.asarray(kept)]),
+                               np.asarray(want[np.asarray(kept)]),
+                               rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(y[~np.asarray(kept)]).max()) == 0.0
 
 
 def test_hardening_loss_properties():
@@ -126,8 +159,9 @@ def test_st_training_grads_flow_everywhere():
     x = jax.random.normal(jax.random.PRNGKey(9), (64, 16))
 
     def loss(p):
-        y, aux = fff.forward_train(p, cfg, x)
-        return (y ** 2).mean() + 0.1 * aux["entropy"]
+        # backend="auto" resolves st_training configs to the grouped ST path
+        y, out = api.apply(p, cfg, x, TRAIN)
+        return (y ** 2).mean() + 0.1 * out.entropy
 
     g = jax.grad(loss)(p)
     for k, v in g.items():
@@ -140,8 +174,8 @@ def test_dense_training_grads_flow_everywhere():
     x = jax.random.normal(jax.random.PRNGKey(10), (32, 16))
 
     def loss(p):
-        y, aux = fff.forward_train(p, cfg, x)
-        return (y ** 2).mean() + 0.1 * aux["entropy"]
+        y, out = api.apply(p, cfg, x, TRAIN)
+        return (y ** 2).mean() + 0.1 * out.entropy
 
     g = jax.grad(loss)(p)
     for k, v in g.items():
@@ -151,9 +185,11 @@ def test_dense_training_grads_flow_everywhere():
 def test_child_transposition_changes_mixture():
     cfg, p = make(depth=3, leaf=4, transposition_prob=0.5)
     x = jax.random.normal(jax.random.PRNGKey(11), (32, 16))
-    _, a1 = fff.forward_train(p, cfg, x, rng=jax.random.PRNGKey(1))
-    _, a2 = fff.forward_train(p, cfg, x, rng=jax.random.PRNGKey(2))
-    assert not np.allclose(np.asarray(a1["mixture"]), np.asarray(a2["mixture"]))
+    _, o1 = api.apply(p, cfg, x, api.ExecutionSpec(
+        mode="train", rng=jax.random.PRNGKey(1)))
+    _, o2 = api.apply(p, cfg, x, api.ExecutionSpec(
+        mode="train", rng=jax.random.PRNGKey(2)))
+    assert not np.allclose(np.asarray(o1.mixture), np.asarray(o2.mixture))
 
 
 def test_freeze_tree_stops_node_grads():
@@ -161,7 +197,7 @@ def test_freeze_tree_stops_node_grads():
     x = jax.random.normal(jax.random.PRNGKey(12), (32, 16))
 
     def loss(p):
-        y, _ = fff.forward_train(p, cfg, x)
+        y, _ = api.apply(p, cfg, x, TRAIN)
         return (y ** 2).mean()
 
     g = jax.grad(loss)(p)

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import fff
+from repro.core import api, fff
 from repro.kernels.fused_fff import (fff_decode, gathered_matmul,
                                      gathered_matmul_dual,
                                      gathered_matmul_dual_ref,
@@ -171,7 +171,8 @@ def test_fff_infer_matches_forward_hard(act, trees):
                         activation=act, trees=trees, leaf_bias=False)
     p = fff.init(jax.random.PRNGKey(7), cfg)
     x = jax.random.normal(jax.random.PRNGKey(8), (64, 32))
-    want, _ = fff.forward_hard(p, cfg, x)
+    want, _ = api.apply(p, cfg, x,
+                        api.ExecutionSpec(mode="infer", backend="reference"))
     got_grouped = fff_infer(x, p, cfg, capacity_factor=8.0, interpret=True)
     got_decode = fff_decode(x, p, cfg, interpret=True)
     np.testing.assert_allclose(np.asarray(got_grouped), np.asarray(want),
@@ -185,7 +186,37 @@ def test_fff_infer_overflow_fallback_exact():
                         activation="gelu", leaf_bias=False)
     p = fff.init(jax.random.PRNGKey(9), cfg)
     x = jax.random.normal(jax.random.PRNGKey(10), (256, 32))
-    want, _ = fff.forward_hard(p, cfg, x)
+    want, _ = api.apply(p, cfg, x,
+                        api.ExecutionSpec(mode="infer", backend="reference"))
     got = fff_infer(x, p, cfg, capacity_factor=0.2, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-3, atol=1e-3)
+
+
+def test_fff_leaf_mlp_skewed_overflow_exact():
+    """Real token dropping (one leaf far past the block_c=128 capacity
+    floor): every token — kept AND overflowed-to-dense — must match the
+    exact gather; a bad dropped-token scatter sentinel corrupts a
+    neighbouring leaf's kept token."""
+    from repro.kernels.leaf_gemm import fff_leaf_mlp
+    E, B, D, H = 2, 160, 16, 8
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (B, D))
+    params = {
+        "leaf_w1": jax.random.normal(jax.random.fold_in(key, 1), (E, D, H))
+        / np.sqrt(D),
+        "leaf_w2": jax.random.normal(jax.random.fold_in(key, 2), (E, H, D))
+        / np.sqrt(H),
+    }
+    # token 0 -> leaf 1, everyone else -> leaf 0: leaf 0 overflows capacity
+    leaf_idx = jnp.zeros((B,), jnp.int32).at[0].set(1)
+    got = fff_leaf_mlp(x, leaf_idx, params, activation="gelu",
+                       capacity_factor=0.5, block_c=128, interpret=True)
+    w1 = jnp.take(params["leaf_w1"], leaf_idx, axis=0)
+    w2 = jnp.take(params["leaf_w2"], leaf_idx, axis=0)
+    h = jax.nn.gelu(jnp.einsum("bd,bdh->bh", x, w1,
+                               preferred_element_type=jnp.float32))
+    want = jnp.einsum("bh,bho->bo", h, w2,
+                      preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

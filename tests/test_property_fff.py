@@ -2,9 +2,12 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import fff, regions, routing
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import api, fff, regions, routing  # noqa: E402
 
 SETTINGS = dict(max_examples=25, deadline=None)
 
@@ -28,8 +31,8 @@ def fff_case(draw, max_depth=5):
 @settings(**SETTINGS)
 def test_mixture_is_distribution(case):
     cfg, params, x = case
-    _, aux = fff.forward_train(params, cfg, x)
-    mix = np.asarray(aux["mixture"])
+    _, out = api.apply(params, cfg, x, api.ExecutionSpec(mode="train"))
+    mix = np.asarray(out.mixture)
     assert (mix >= -1e-6).all()
     np.testing.assert_allclose(mix.sum(-1), 1.0, atol=1e-4)
 
@@ -67,8 +70,8 @@ def test_regions_partition_input_space(case):
 @settings(**SETTINGS)
 def test_entropy_nonneg_and_bounded(case):
     cfg, params, x = case
-    _, aux = fff.forward_train(params, cfg, x)
-    ent = float(aux["entropy"])
+    _, out = api.apply(params, cfg, x, api.ExecutionSpec(mode="train"))
+    ent = float(out.entropy)
     assert -1e-6 <= ent <= np.log(2) + 1e-6
 
 
@@ -108,7 +111,8 @@ def test_capacity_dispatch_conservation(batch, depth_pow, seed, cap):
 @settings(**SETTINGS)
 def test_train_forward_jit_consistent(case):
     cfg, params, x = case
-    y1, _ = fff.forward_train(params, cfg, x)
-    y2, _ = jax.jit(lambda p, x: fff.forward_train(p, cfg, x))(params, x)
+    spec = api.ExecutionSpec(mode="train")
+    y1, _ = api.apply(params, cfg, x, spec)
+    y2, _ = jax.jit(lambda p, x: api.apply(p, cfg, x, spec))(params, x)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
                                rtol=2e-5, atol=2e-5)

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro import optim
-from repro.core import ff, fff
+from repro.core import api, ff, fff
 from repro.data import synthetic
 from repro.models import lm
 from repro.configs import registry
@@ -22,10 +22,10 @@ def _train_fff_classifier(ds, depth=3, leaf=16, steps=400, h=0.5, lr=0.3,
     state = opt.init(params)
 
     def loss_fn(p, x, y):
-        logits, aux = fff.forward_train(p, cfg, x)
+        logits, out = api.apply(p, cfg, x, api.ExecutionSpec(mode="train"))
         ce = -jnp.mean(jnp.take_along_axis(
             jax.nn.log_softmax(logits), y[:, None], 1))
-        return ce + h * fff.hardening_loss(aux["node_probs"]), aux["entropy"]
+        return ce + h * fff.hardening_loss(out.node_probs), out.entropy
 
     @jax.jit
     def step(p, s, x, y):
@@ -45,7 +45,8 @@ def _train_fff_classifier(ds, depth=3, leaf=16, steps=400, h=0.5, lr=0.3,
 
 
 def _hard_accuracy(cfg, params, x, y):
-    logits, _ = fff.forward_hard(params, cfg, jnp.asarray(x))
+    logits, _ = api.apply(params, cfg, jnp.asarray(x),
+                          api.ExecutionSpec(mode="infer"))
     return float((np.asarray(logits.argmax(-1)) == y).mean())
 
 
@@ -63,8 +64,8 @@ def test_hard_inference_close_to_soft_after_hardening():
     ds = synthetic.make("usps_like")
     cfg, params, _ = _train_fff_classifier(ds, h=2.0)
     x = jnp.asarray(ds.x_test[:512])
-    y_soft, _ = fff.forward_train(params, cfg, x)
-    y_hard, _ = fff.forward_hard(params, cfg, x)
+    y_soft, _ = api.apply(params, cfg, x, api.ExecutionSpec(mode="train"))
+    y_hard, _ = api.apply(params, cfg, x, api.ExecutionSpec(mode="infer"))
     agree = float((y_soft.argmax(-1) == y_hard.argmax(-1)).mean())
     assert agree > 0.9, agree               # paper: hardened -> lossless rounding
 
