@@ -1,0 +1,95 @@
+"""Dispatch-locality curve for the expert-parallel ``grouped_ep`` serving
+backend (DESIGN.md §5): tokens/s and cross-shard bytes moved vs. model-axis
+shard count.
+
+Each shard count runs in a SUBPROCESS with 8 forced host devices (the main
+process keeps the real single CPU device, same constraint as
+tests/test_sharding.py); the mesh is (8/M data, M model) so the device count
+is constant across the sweep and only the dispatch locality changes.  M = 1
+is the shard-local ``grouped`` baseline (zero cross-shard dispatch bytes).
+
+Timing caveat as everywhere in benchmarks/: CPU wall-clock of the same XLA
+programs — the locality TREND (bytes moved growing with (M-1)/M, per-shard
+capacity shrinking with 1/M) is the product, not TPU latencies.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEVICES = 8
+BATCH, DIM, DEPTH, LEAF = 2048, 128, 5, 16       # E = 32 leaves
+CAPACITY_FACTOR = 1.25
+
+_WORKER = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from benchmarks import common
+    from repro.core import api, fff
+    from repro.distributed import act, sharding
+    from repro.launch import mesh as mesh_lib
+
+    M = {m}
+    cfg = fff.FFFConfig(dim_in={dim}, dim_out={dim}, depth={depth},
+                        leaf_width={leaf}, activation="gelu", leaf_bias=False)
+    params = fff.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), ({batch}, {dim}))
+    backend = "grouped_ep" if M > 1 else "grouped"
+    spec = api.ExecutionSpec(mode="infer", backend=backend,
+                             capacity_factor={cf})
+    mesh = mesh_lib.make_serving_mesh(M)
+    rules = sharding.activation_rules(mesh)
+    p_sh = sharding.shard_params(params, mesh, fsdp=False)
+    with act.use_mesh(mesh, rules):
+        f = jax.jit(lambda p, xx: api.apply(p, cfg, xx, spec)[0])
+        us, std = common.time_fn(f, p_sh, x, iters={iters}, warmup=2)
+    print(f"RESULT,{{us:.1f}},{{std:.1f}}")
+""")
+
+
+def run(ms: list[int], quick: bool = False) -> list[dict]:
+    from repro.distributed import dispatch as dispatch_lib
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={DEVICES}"
+    env["PYTHONPATH"] = REPO + os.pathsep + os.path.join(REPO, "src")
+    E = 2 ** DEPTH
+    rows = []
+    for m in ms:
+        code = _WORKER.format(m=m, dim=DIM, depth=DEPTH, leaf=LEAF,
+                              batch=BATCH, cf=CAPACITY_FACTOR,
+                              iters=5 if quick else 15)
+        out = subprocess.run([sys.executable, "-c", code], env=env, cwd=REPO,
+                             capture_output=True, text=True, timeout=560)
+        if out.returncode != 0:
+            raise RuntimeError(f"M={m} worker failed:\n{out.stderr[-2000:]}")
+        us = float(out.stdout.strip().rsplit("RESULT,", 1)[1].split(",")[0])
+        # per-(source shard, leaf) capacity and the a2a round-trip bytes that
+        # actually leave each shard — the locality cost the curve is about.
+        # G*M == DEVICES throughout, so tokens-per-shard is constant and the
+        # sweep isolates dispatch locality from arithmetic.
+        tokens_per_shard = BATCH // DEVICES
+        cap = dispatch_lib.ep_capacity(tokens_per_shard, E, CAPACITY_FACTOR)
+        moved = (dispatch_lib.ep_bytes_moved(E, m, DIM, DIM, cap)
+                 if m > 1 else 0)
+        rows.append(dict(m=m, us=us, tokens_per_s=BATCH / (us * 1e-6),
+                         capacity=cap, bytes_moved=moved))
+    return rows
+
+
+def main(quick: bool = True):
+    ms = [1, 2, 4] if quick else [1, 2, 4, 8]
+    rows = run(ms, quick=quick)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"ep_dispatch/model_shards_{r['m']},{r['us']:.1f},"
+              f"tokens_per_s={r['tokens_per_s']:.0f};"
+              f"per_shard_capacity={r['capacity']};"
+              f"bytes_moved_per_shard={r['bytes_moved']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick=True)

@@ -7,6 +7,8 @@
   fig34  -> paper Figures 3-4 (mechanism latency scaling, BERT dims)
   table3 -> paper Table 3 (ViT with FFF layers)
   roofline -> formats the dry-run roofline artifact (assignment)
+  ep_dispatch -> grouped_ep dispatch-locality curve: tokens/s, per-shard
+                 capacity and bytes moved vs model-shard count (DESIGN.md §5)
 
 ``python -m benchmarks.run`` runs the quick profile (CPU-sized, ~minutes);
 ``python -m benchmarks.run --full`` runs the paper-scale grids.
@@ -25,10 +27,11 @@ def main() -> None:
                     help="paper-scale grids (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,fig2,table2,fig34,"
-                         "table3,roofline")
+                         "table3,roofline,ep_dispatch")
     args = ap.parse_args()
 
-    from benchmarks import fig2, fig34, roofline_bench, table1, table2, table3
+    from benchmarks import (ep_dispatch, fig2, fig34, roofline_bench, table1,
+                            table2, table3)
     suites = {
         "table1": table1.main,
         "fig2": fig2.main,
@@ -36,6 +39,7 @@ def main() -> None:
         "fig34": fig34.main,
         "table3": table3.main,
         "roofline": roofline_bench.main,
+        "ep_dispatch": ep_dispatch.main,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     failures = []

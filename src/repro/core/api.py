@@ -4,8 +4,9 @@ registry (DESIGN.md §2).
 The paper's layer has one contract and many execution strategies: FORWARD_T's
 soft mixture for training, FORWARD_I's log-time hard descent for inference,
 and — per strategy — a pure-gather reference, a capacity-bounded grouped
-dispatch (SPMD/EP-shardable) and the Pallas TPU kernels.  Every consumer goes
-through::
+dispatch (SPMD-shardable), an expert-parallel shard_map/all_to_all path
+(``grouped_ep``, DESIGN.md §5) and the Pallas TPU kernels.  Every consumer
+goes through::
 
     y, out = api.apply(params, cfg, x, api.ExecutionSpec(mode="infer"))
 
@@ -49,6 +50,10 @@ MODES = ("train", "infer")
 #: capacity_factor=None means "use the backend's own default")
 DEFAULT_CAPACITY_TRAIN_ST = 1.5
 DEFAULT_CAPACITY_INFER = 2.0
+#: grouped_ep runs Switch-style tight capacity: every slot crosses the wire
+#: twice (all_to_all there and back), and exactness comes from the
+#: overflow-to-dense repair, not headroom (DESIGN.md §5/§8)
+DEFAULT_CAPACITY_EP = 1.25
 
 #: token count at or below which the pallas backend prefers the per-token
 #: gathered decode kernel over the sorted-dispatch grouped GEMM (DESIGN.md §3)
@@ -219,13 +224,15 @@ def _resolve_auto(params: dict, cfg: fff_lib.FFFConfig, mode: str) -> str:
     train: the ST-grouped estimator when the config asks for it (MoE-scale
            sites) and there is a tree to descend; otherwise faithful
            FORWARD_T.
-    infer: Pallas kernels when on TPU, kernel-eligible, and NOT tracing
-           under an SPMD mesh (the kernels are single-device; sharded
-           serving wants the partitionable grouped dispatch, §5); grouped
-           dispatch for wide sites — always, regardless of token count,
-           because wide sites are the EP-sharded ones and the per-token
-           gather would allgather their sharded leaf weights; the exact
-           gather reference otherwise (small sites, depth 0)."""
+    infer: expert-parallel a2a dispatch (grouped_ep) whenever a mesh with a
+           model axis >1 is installed and the leaf count divides over it —
+           sharded serving's whole point is that tokens travel to the leaf
+           shards (§5); else Pallas kernels when on TPU and kernel-eligible
+           (the kernels are single-device); grouped dispatch for wide sites
+           — always, regardless of token count, because wide sites are the
+           EP-sharded ones and the per-token gather would allgather their
+           sharded leaf weights; the exact gather reference otherwise
+           (small sites, depth 0)."""
     override = getattr(_thread_state, "override", None)
     if override is not None:
         o_name, o_mode = override
@@ -236,6 +243,9 @@ def _resolve_auto(params: dict, cfg: fff_lib.FFFConfig, mode: str) -> str:
         return "grouped" if (cfg.st_training and cfg.depth > 0) else "reference"
     if cfg.depth == 0:
         return "reference"
+    if (dist_act.model_shard_count() > 1
+            and _backend_supported("infer", "grouped_ep", params, cfg)):
+        return "grouped_ep"
     if (jax.default_backend() == "tpu"
             and _backend_supported("infer", "pallas", params, cfg)):
         return "pallas"
@@ -300,6 +310,22 @@ def _infer_grouped(params, cfg, x, spec):
                         overflow_fraction=aux["overflow_fraction"])
 
 
+def _infer_grouped_ep(params, cfg, x, spec):
+    """FORWARD_I via expert-parallel shard_map + all_to_all dispatch
+    (DESIGN.md §5).  Leaf weights stay sharded on the model axis; tokens
+    travel to their routed leaf's shard and back.  EXACT: over-capacity
+    tokens take the overflow-to-dense repair, and overflow_fraction reports
+    the true repair rate.  Degrades to local grouped dispatch + the same
+    repair when no mesh is installed (so the contract is testable
+    unsharded)."""
+    cf = (spec.capacity_factor if spec.capacity_factor is not None
+          else DEFAULT_CAPACITY_EP)
+    y, aux = fff_lib._forward_hard_ep(
+        params, cfg, x, capacity_factor=cf, dense_levels=spec.dense_levels)
+    return y, FFFOutput(leaf_idx=aux["leaf_idx"],
+                        overflow_fraction=aux["overflow_fraction"])
+
+
 def _infer_pallas(params, cfg, x, spec):
     """FORWARD_I on the Pallas TPU kernels: fused tree-router descent, then
     sorted-dispatch grouped GEMMs (batch) or per-token gathered matmuls
@@ -330,6 +356,14 @@ register_backend("train", "reference", _train_reference)
 register_backend("train", "grouped", _train_grouped)
 register_backend("infer", "reference", _infer_reference)
 register_backend("infer", "grouped", _infer_grouped)
+register_backend(
+    "infer", "grouped_ep", _infer_grouped_ep,
+    # auto/override eligibility: a model axis to exchange over and a leaf
+    # count that divides across it (explicit specs still run — the backend
+    # degrades gracefully unsharded)
+    supports=lambda params, cfg: (
+        cfg.depth > 0 and dist_act.model_shard_count() > 1
+        and cfg.num_leaves % dist_act.model_shard_count() == 0))
 register_backend(
     "infer", "pallas", _infer_pallas,
     # single-device kernels: ineligible under an SPMD mesh (sharded serving

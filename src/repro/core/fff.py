@@ -21,7 +21,8 @@ The single entry point for both is :func:`repro.core.api.apply`::
     y, out = api.apply(params, cfg, x, api.ExecutionSpec(mode="infer"))
 
 ``ExecutionSpec.backend`` selects the implementation through a registry
-(``reference`` | ``grouped`` | ``pallas`` | ``auto``); see ``core/api.py``
+(``reference`` | ``grouped`` | ``grouped_ep`` | ``pallas`` | ``auto``); see
+``core/api.py``
 for the registry contract and DESIGN.md §2 for the layering.  This module
 holds the layer math itself — config, init, node/leaf forward primitives —
 plus the pure-jnp reference/grouped implementations the registry wraps.
@@ -356,6 +357,40 @@ def _st_descend(cfg: FFFConfig, probs: jax.Array
     return idx, scale
 
 
+def _pad_for_dispatch(xf: jax.Array, multiple: int
+                      ) -> tuple[jax.Array, int]:
+    """Pad flat tokens up to ``multiple`` BEFORE routing so every sharded
+    intermediate (node logits under NODE_BTN, dispatch buffers) has a
+    shard-divisible token axis.  Constraining a non-divisible axis forces
+    XLA into padded-sharding lowerings of the downstream scatter — slower,
+    and observed to miscompile when the dispatch constraints compose
+    (DESIGN.md §5).  Returns (padded tokens, true token count); callers
+    route the pads to the capacity-neutral sentinel leaf and slice outputs
+    back to the true count.
+
+    The pad is a zeros-buffer update, NOT ``jnp.concatenate``: the SPMD
+    partitioner on this jax mis-lowers a token-axis concatenate feeding the
+    NODE_BTN + dispatch constraint chain (every output wrong on a (4,2)
+    mesh at B=37 while the same program is exact unsharded); the
+    dynamic-update-slice form partitions correctly."""
+    B = xf.shape[0]
+    Bp = utils.round_up(max(B, 1), multiple)
+    if Bp == B:
+        return xf, B
+    buf = jnp.zeros((Bp,) + xf.shape[1:], xf.dtype)
+    return buf.at[:B].set(xf), B
+
+
+def _sentinel_pads(leaf_idx: jax.Array, true_count: int, num_leaves: int
+                   ) -> jax.Array:
+    """Route the pad rows of a ``_pad_for_dispatch``-padded batch to the
+    capacity-neutral sentinel leaf E: leaf_idx (Bp, T) -> (Bp, T) with rows
+    >= true_count replaced by ``num_leaves`` (core/routing treats that id as
+    a virtual group that never occupies real capacity)."""
+    return jnp.where(jnp.arange(leaf_idx.shape[0])[:, None] < true_count,
+                     leaf_idx, num_leaves)
+
+
 def _forward_st_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
                         rng: Optional[jax.Array] = None,
                         capacity_factor: float = 1.5
@@ -371,8 +406,12 @@ def _forward_st_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
     """
     xf, lead = utils.flatten_leading(x)
     xf = xf.astype(cfg.accum_dtype)
+    xf, B = _pad_for_dispatch(xf, dist_act.data_shard_count())
     probs, mix, ent = _soft_stats(params, cfg, xf, rng)
+    if xf.shape[0] != B:  # keep the entropy monitor over real tokens only
+        ent = bernoulli_entropy(probs[:B]).mean()
     idx, scale = _st_descend(cfg, probs)
+    idx = _sentinel_pads(idx, B, cfg.num_leaves)
     out = None
     kept_all = []
     for t in range(cfg.trees):
@@ -384,12 +423,12 @@ def _forward_st_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
             return_kept=True)
         y = y * scale[:, t:t + 1]
         out = y if out is None else out + y
-        kept_all.append(kept)
+        kept_all.append(kept[:B])
     overflow = 1.0 - jnp.stack(kept_all).astype(cfg.accum_dtype).mean()
-    aux = {"node_probs": probs, "mixture": mix, "entropy": ent,
-           "leaf_idx": idx.reshape(*lead, cfg.trees),
+    aux = {"node_probs": probs[:B], "mixture": mix[:B], "entropy": ent,
+           "leaf_idx": idx[:B].reshape(*lead, cfg.trees),
            "overflow_fraction": overflow}
-    return utils.unflatten_leading(out, lead), aux
+    return utils.unflatten_leading(out[:B], lead), aux
 
 
 def _forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
@@ -402,9 +441,11 @@ def _forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
     the serving path for MoE-scale FFF sites (DESIGN.md §3)."""
     xf, lead = utils.flatten_leading(x)
     xf = xf.astype(cfg.accum_dtype)
+    xf, B = _pad_for_dispatch(xf, dist_act.data_shard_count())
     leaf_idx = route_hard(params, cfg, xf,
                           dense_levels=dense_levels).reshape(xf.shape[0],
                                                              cfg.trees)
+    leaf_idx = _sentinel_pads(leaf_idx, B, cfg.num_leaves)
     out = None
     kept_all = []
     for t in range(cfg.trees):
@@ -415,11 +456,47 @@ def _forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
             capacity_factor=capacity_factor, accum_dtype=cfg.accum_dtype,
             serving=True, return_kept=True)
         out = y if out is None else out + y
-        kept_all.append(kept)
+        kept_all.append(kept[:B])
     overflow = 1.0 - jnp.stack(kept_all).astype(cfg.accum_dtype).mean()
-    aux = {"leaf_idx": leaf_idx.reshape(*lead, cfg.trees),
+    aux = {"leaf_idx": leaf_idx[:B].reshape(*lead, cfg.trees),
            "overflow_fraction": overflow}
-    return utils.unflatten_leading(out, lead), aux
+    return utils.unflatten_leading(out[:B], lead), aux
+
+
+def _forward_hard_ep(params: Params, cfg: FFFConfig, x: jax.Array,
+                     capacity_factor: float = 1.25,
+                     dense_levels: int = 8) -> tuple[jax.Array, dict]:
+    """FORWARD_I via expert-parallel all_to_all dispatch (EXACT).
+
+    Routing runs data-parallel (node nets are replicated); leaf execution
+    crosses shards deliberately: tokens travel over the model axis to the
+    shard owning their routed leaf (``routing.grouped_leaf_apply_ep``,
+    DESIGN.md §5).  Over-capacity tokens are repaired by the overflow-to-
+    dense round, so outputs match the reference backend exactly and
+    ``overflow_fraction`` reports the true repair rate."""
+    xf, lead = utils.flatten_leading(x)
+    xf = xf.astype(cfg.accum_dtype)
+    xf, B = _pad_for_dispatch(
+        xf, dist_act.data_shard_count() * dist_act.model_shard_count())
+    leaf_idx = route_hard(params, cfg, xf,
+                          dense_levels=dense_levels).reshape(xf.shape[0],
+                                                             cfg.trees)
+    leaf_idx = _sentinel_pads(leaf_idx, B, cfg.num_leaves)
+    out = None
+    kept_all = []
+    for t in range(cfg.trees):
+        tree_leaves = {k: v[t] for k, v in params.items()
+                       if k.startswith("leaf_")}
+        y, kept = routing_lib.grouped_leaf_apply_ep(
+            xf, leaf_idx[:, t], tree_leaves, cfg.activation,
+            capacity_factor=capacity_factor, accum_dtype=cfg.accum_dtype,
+            return_kept=True)
+        out = y if out is None else out + y
+        kept_all.append(kept[:B])
+    overflow = 1.0 - jnp.stack(kept_all).astype(cfg.accum_dtype).mean()
+    aux = {"leaf_idx": leaf_idx[:B].reshape(*lead, cfg.trees),
+           "overflow_fraction": overflow}
+    return utils.unflatten_leading(out[:B], lead), aux
 
 
 def route_hard(params: Params, cfg: FFFConfig, x: jax.Array,

@@ -16,9 +16,12 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro import utils
 from repro.distributed import act as dist_act
+from repro.distributed import dispatch as dispatch_lib
 
 
 class SortedDispatch(NamedTuple):
@@ -65,40 +68,54 @@ def unapply_sorted(y_sorted: jax.Array, plan: SortedDispatch) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 class CapacityDispatch(NamedTuple):
-    """Dense dispatch/combine plan bounded by per-leaf capacity C.
+    """Scatter/gather dispatch plan bounded by per-leaf capacity C.
 
-    dispatch: (B, E, C) one-hot: token b occupies slot (e, c)
+    Slots come from ``group_slots`` sort ranks and the plan stores flat
+    buffer positions, not a dense (B, E, C) one-hot: the seed implementation
+    built exactly the ``cumsum(one_hot)`` + dense-dispatch-tensor pattern
+    DESIGN.md §5 bans (O(B^2) reduce-window cumsum, O(B*E*C*D) dispatch
+    einsums — the FLOP regression guard in tests/test_fff_core.py pins the
+    fix).
+
+    flat_idx: (B,) int32 position ``leaf*C + slot`` in the flattened (E*C,)
+              buffer; dropped tokens carry the out-of-bounds sentinel E*C
     kept:     (B,) bool; False = token overflowed its leaf's capacity
     """
-    dispatch: jax.Array
+    flat_idx: jax.Array
     kept: jax.Array
     capacity: int
+    num_leaves: int
+
+
+def _as_ep_plan(plan: CapacityDispatch) -> dispatch_lib.EPPlan:
+    """A CapacityDispatch IS the single-shard special case of the EP
+    exchange plan; delegate the scatter/gather to one implementation."""
+    return dispatch_lib.EPPlan(plan.flat_idx, plan.kept, plan.capacity,
+                               plan.num_leaves, 1)
 
 
 def make_capacity_dispatch(leaf_idx: jax.Array, num_leaves: int,
                            capacity_factor: float = 1.25) -> CapacityDispatch:
     B = leaf_idx.shape[0]
     capacity = max(1, int(capacity_factor * utils.cdiv(B, num_leaves)))
-    onehot = jax.nn.one_hot(leaf_idx, num_leaves, dtype=jnp.int32)     # (B, E)
-    pos = jnp.cumsum(onehot, axis=0) * onehot - onehot                 # slot per token
-    slot = jnp.take_along_axis(pos, leaf_idx[:, None], axis=1)[:, 0]
-    kept = slot < capacity
-    slot = jnp.where(kept, slot, 0)
-    dispatch = (jax.nn.one_hot(leaf_idx, num_leaves, dtype=jnp.float32)
-                * kept[:, None])[..., None] * jax.nn.one_hot(
-                    slot, capacity, dtype=jnp.float32)[:, None, :]
-    return CapacityDispatch(dispatch, kept, capacity)
+    slot = group_slots(leaf_idx, num_leaves)
+    p = dispatch_lib.make_ep_plan(leaf_idx, slot,
+                                  jnp.ones((B,), bool), num_leaves,
+                                  num_shards=1, capacity=capacity)
+    return CapacityDispatch(p.flat_idx, p.kept, capacity, num_leaves)
 
 
 def capacity_gather(x: jax.Array, plan: CapacityDispatch) -> jax.Array:
-    """x (B, D) -> per-leaf buffers (E, C, D)."""
-    return jnp.einsum("bec,bd->ecd", plan.dispatch, x)
+    """x (B, D) -> per-leaf buffers (E, C, D); O(B) scatter, no dispatch
+    einsum."""
+    return dispatch_lib.ep_scatter(x, _as_ep_plan(plan))[0]
 
 
 def capacity_scatter(y: jax.Array, plan: CapacityDispatch) -> jax.Array:
     """(E, C, O) -> (B, O); dropped tokens receive zeros (caller may fall back
     to a dense path for them — overflow-to-dense, DESIGN.md §8)."""
-    return jnp.einsum("bec,eco->bo", plan.dispatch, y)
+    E, C, O = y.shape
+    return dispatch_lib.ep_gather(y.reshape(E * C, O), _as_ep_plan(plan))
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +150,52 @@ def group_slots(leaf_idx: jax.Array, num_groups: int) -> jax.Array:
     return rank - jnp.take(offsets, leaf_idx)
 
 
+def _leaf_mlp_on_buffers(xbuf: jax.Array, params: dict, activation: str,
+                         accum_dtype) -> jax.Array:
+    """Per-leaf MLP on capacity-padded buffers: (..., E, C, D) -> (..., E, C,
+    O).  Shared by the data-local and expert-parallel dispatchers; ``params``
+    holds single-tree leaf weights keyed on the SAME leading E axis as
+    ``xbuf`` (the EP caller passes the model-axis shard of both)."""
+    ad = accum_dtype
+    if "leaf_wg" in params:
+        g = jnp.einsum("...ecd,edh->...ech", xbuf, params["leaf_wg"],
+                       preferred_element_type=ad)
+        u = jnp.einsum("...ecd,edh->...ech", xbuf, params["leaf_wu"],
+                       preferred_element_type=ad)
+        return jnp.einsum("...ech,eho->...eco", jax.nn.silu(g) * u,
+                          params["leaf_wd"], preferred_element_type=ad)
+    h = jnp.einsum("...ecd,edh->...ech", xbuf, params["leaf_w1"],
+                   preferred_element_type=ad)
+    if "leaf_b1" in params:
+        h = h + params["leaf_b1"][:, None].astype(ad)
+    h = utils.get_activation(activation)(h)
+    y = jnp.einsum("...ech,eho->...eco", h, params["leaf_w2"],
+                   preferred_element_type=ad)
+    if "leaf_b2" in params:
+        y = y + params["leaf_b2"][:, None].astype(ad)
+    return y
+
+
+def _pad_tokens(x: jax.Array, leaf_idx: jax.Array, multiple: int,
+                num_leaves: int) -> tuple[jax.Array, jax.Array]:
+    """Pad the token axis up to ``multiple`` with capacity-neutral tokens.
+
+    Pad tokens carry the out-of-range leaf id E: they sort into a virtual
+    group past every real leaf (``group_slots(..., E + 1)``), so they never
+    occupy a real leaf's capacity slot, scatter out of bounds, and gather
+    zeros.  Callers slice results back to the true token count.  Padding is
+    a zeros/full-buffer update, not a concatenate — see
+    ``fff._pad_for_dispatch`` on the SPMD mis-lowering of token-axis
+    concatenates."""
+    B = x.shape[0]
+    Bp = utils.round_up(max(B, 1), multiple)
+    if Bp == B:
+        return x, leaf_idx
+    xb = jnp.zeros((Bp,) + x.shape[1:], x.dtype).at[:B].set(x)
+    ib = jnp.full((Bp,), num_leaves, leaf_idx.dtype).at[:B].set(leaf_idx)
+    return xb, ib
+
+
 def grouped_leaf_apply(x: jax.Array, leaf_idx: jax.Array, params: dict,
                        activation: str, capacity_factor: float = 1.5,
                        accum_dtype=jnp.float32, serving: bool = False,
@@ -143,12 +206,15 @@ def grouped_leaf_apply(x: jax.Array, leaf_idx: jax.Array, params: dict,
     layers.  LOCAL dispatch semantics (DESIGN.md §5, §Perf iter 1): the token
     axis is blocked by the data-shard count G so every scatter/gather stays
     shard-local under SPMD — capacity is per (shard, leaf), exactly like a
-    production MoE.  Per-leaf GEMMs are batched over (G-data, E-model); the
-    only cross-shard traffic is what the leaf-weight sharding itself implies.
+    production MoE.  When B is not a multiple of G the token axis is padded
+    with capacity-neutral tokens (the seed silently collapsed to G=1, i.e.
+    fully non-local dispatch, for every such batch).  Per-leaf GEMMs are
+    batched over (G-data, E-model); the only cross-shard traffic is what the
+    leaf-weight sharding itself implies.
 
     Tokens over their shard's capacity contribute zeros (standard MoE-style
-    drop; exactness, when needed, comes from the kernels' overflow-to-dense
-    fallback).
+    drop; exactness, when needed, comes from the overflow-to-dense fallback —
+    kernels/leaf_gemm for the Pallas path, grouped_leaf_apply_ep for EP).
 
     x (B, D); params: single-tree leaf weights {leaf_w1/leaf_w2} or
     {leaf_wg/leaf_wu/leaf_wd}; returns (B, dim_out), or with
@@ -159,18 +225,18 @@ def grouped_leaf_apply(x: jax.Array, leaf_idx: jax.Array, params: dict,
     swiglu = "leaf_wg" in params
     E = (params["leaf_wg"] if swiglu else params["leaf_w1"]).shape[0]
     G = dist_act.data_shard_count()
-    if B % G:
-        G = 1
-    Bg = B // G
+    x, leaf_idx = _pad_tokens(x, leaf_idx, G, E)
+    Bg = x.shape[0] // G
     capacity = max(8, utils.round_up(int(capacity_factor * utils.cdiv(Bg, E)), 8))
 
     xg_ = x.reshape(G, Bg, D)
     idx_g = leaf_idx.reshape(G, Bg)
     # slot-within-(shard, leaf) via sort ranks, NOT cumsum(one_hot): XLA
     # lowers a (B, E) token-axis cumsum to an O(B^2) reduce-window
-    # (measured 260x FLOP inflation at 64 experts — §Perf iter 1).
-    slot = jax.vmap(lambda i: group_slots(i, E))(idx_g)           # (G, Bg)
-    kept = slot < capacity
+    # (measured 260x FLOP inflation at 64 experts — §Perf iter 1).  E + 1
+    # groups: pad tokens (leaf id E) slot into a virtual group of their own.
+    slot = jax.vmap(lambda i: group_slots(i, E + 1))(idx_g)       # (G, Bg)
+    kept = (slot < capacity) & (idx_g < E)
     # dropped tokens scatter OUT OF BOUNDS (mode="drop"): clamping them onto
     # slot capacity-1 would collide with the kept token legitimately there,
     # and duplicate-index scatter-set resolution is nondeterministic
@@ -184,24 +250,7 @@ def grouped_leaf_apply(x: jax.Array, leaf_idx: jax.Array, params: dict,
     xbuf = xbuf.reshape(G, E, capacity, D)
     dispatch_kind = dist_act.DISPATCH_SERVE if serving else dist_act.DISPATCH_ECD
     xbuf = dist_act.shard(xbuf, dispatch_kind)
-    ad = accum_dtype
-    if swiglu:
-        g = jnp.einsum("gecd,edh->gech", xbuf, params["leaf_wg"],
-                       preferred_element_type=ad)
-        u = jnp.einsum("gecd,edh->gech", xbuf, params["leaf_wu"],
-                       preferred_element_type=ad)
-        yg = jnp.einsum("gech,eho->geco", jax.nn.silu(g) * u,
-                        params["leaf_wd"], preferred_element_type=ad)
-    else:
-        h = jnp.einsum("gecd,edh->gech", xbuf, params["leaf_w1"],
-                       preferred_element_type=ad)
-        if "leaf_b1" in params:
-            h = h + params["leaf_b1"][None, :, None].astype(ad)
-        h = utils.get_activation(activation)(h)
-        yg = jnp.einsum("gech,eho->geco", h, params["leaf_w2"],
-                        preferred_element_type=ad)
-        if "leaf_b2" in params:
-            yg = yg + params["leaf_b2"][None, :, None].astype(ad)
+    yg = _leaf_mlp_on_buffers(xbuf, params, activation, accum_dtype)
     yg = dist_act.shard(yg, dispatch_kind)
     O = yg.shape[-1]
 
@@ -210,9 +259,152 @@ def grouped_leaf_apply(x: jax.Array, leaf_idx: jax.Array, params: dict,
         return jnp.where(kp[:, None], out, 0.0)
 
     y = jax.vmap(gather_one)(yg, flat_idx, kept)                  # (G, Bg, O)
+    y = y.reshape(-1, O)[:B]
     if return_kept:
-        return y.reshape(B, O), kept.reshape(B)
-    return y.reshape(B, O)
+        return y, kept.reshape(-1)[:B]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel grouped leaf execution: shard_map + all_to_all against the
+# model axis (the "grouped_ep" serving backend; DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+def _dense_leaf_gather(x: jax.Array, leaf_idx: jax.Array, params: dict,
+                       activation: str, accum_dtype) -> jax.Array:
+    """Exact per-token leaf eval via weight gathers: x (B, D), leaf_idx (B,)
+    indexing the LOCAL leaf axis of ``params`` -> (B, O).  The overflow-to-
+    dense repair path (DESIGN.md §8); O(B*D*l) gathered weight bytes, paid
+    only for tokens that overflowed capacity."""
+    ad = accum_dtype
+
+    def tk(name):
+        return jnp.take(params[name], leaf_idx, axis=0)
+
+    if "leaf_wg" in params:
+        g = jnp.einsum("bd,bdh->bh", x, tk("leaf_wg"), preferred_element_type=ad)
+        u = jnp.einsum("bd,bdh->bh", x, tk("leaf_wu"), preferred_element_type=ad)
+        return jnp.einsum("bh,bho->bo", jax.nn.silu(g) * u, tk("leaf_wd"),
+                          preferred_element_type=ad)
+    h = jnp.einsum("bd,bdh->bh", x, tk("leaf_w1"), preferred_element_type=ad)
+    if "leaf_b1" in params:
+        h = h + tk("leaf_b1").astype(ad)
+    h = utils.get_activation(activation)(h)
+    y = jnp.einsum("bh,bho->bo", h, tk("leaf_w2"), preferred_element_type=ad)
+    if "leaf_b2" in params:
+        y = y + tk("leaf_b2").astype(ad)
+    return y
+
+
+def grouped_leaf_apply_ep(x: jax.Array, leaf_idx: jax.Array, params: dict,
+                          activation: str, capacity_factor: float = 1.25,
+                          accum_dtype=jnp.float32, return_kept: bool = False):
+    """EXACT expert-parallel grouped leaf execution (DESIGN.md §5).
+
+    A ``shard_map`` over the installed mesh: the token axis is split over
+    (data x model), leaf weights over the model axis.  Each source shard
+    slots its Bl local tokens per leaf from ``group_slots`` sort ranks into
+    an (M, E/M, C, D) send buffer, one ``all_to_all`` over the model axis
+    delivers per-leaf token runs to the owning shard, local grouped GEMMs run
+    at (E/M, M*C) occupancy, and the inverse ``all_to_all`` returns results
+    to token order.  Capacity is per (source shard, leaf); over-capacity
+    tokens are repaired by an overflow-to-dense round (all_gather of the
+    dropped tokens over the model axis + masked dense eval + psum), entered
+    through a ``lax.cond`` on the globally summed drop count so the steady
+    state pays exactly the two all_to_alls.
+
+    With no mesh (or no model axis) installed this degrades to the local
+    grouped dispatch plus the same dense repair — still exact, so parity
+    tests exercise the identical contract unsharded.
+
+    Returns (B, O), or with ``return_kept=True`` a ``(y, kept)`` pair;
+    ``kept`` False marks tokens that overflowed capacity and took the dense
+    repair (their outputs are exact either way) — the honest
+    ``overflow_fraction`` the aux reports.
+    """
+    B, D = x.shape
+    swiglu = "leaf_wg" in params
+    E = (params["leaf_wg"] if swiglu else params["leaf_w1"]).shape[0]
+    mesh = dist_act.current_mesh()
+    M = dist_act.model_shard_count()
+
+    if mesh is None or M <= 1 or E % M:
+        # unsharded (or degenerate model axis) degradation: local dispatch +
+        # dense repair, same contract
+        y, kept = grouped_leaf_apply(
+            x, leaf_idx, params, activation, capacity_factor=capacity_factor,
+            accum_dtype=accum_dtype, serving=True, return_kept=True)
+        # repair only REAL overflow: callers may pass sentinel-padded tokens
+        # (leaf id E, kept=False by construction) which need no repair — a
+        # kept.all() predicate would fire the dense pass on every padded call
+        dropped = ~kept & (leaf_idx < E)
+        y = jax.lax.cond(
+            dropped.any(),
+            lambda y: jnp.where(
+                dropped[:, None],
+                _dense_leaf_gather(x, leaf_idx, params, activation,
+                                   accum_dtype), y),
+            lambda y: y,
+            y)
+        return (y, kept) if return_kept else y
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    G = dist_act.data_shard_count()
+    S = G * M
+    E_local = E // M
+    # pad BEFORE the layout constraint: constraining a non-divisible token
+    # axis forces padded-sharding lowerings (and see _pad_for_dispatch on
+    # why that is never allowed to feed the dispatch)
+    x, leaf_idx = _pad_tokens(x, leaf_idx, S, E)
+    x = dist_act.shard(x, dist_act.TOKENS_EP)
+    Bl = x.shape[0] // S
+    C = dispatch_lib.ep_capacity(Bl, E, capacity_factor)
+    all_axes = tuple(mesh.axis_names)
+
+    def body(x_l, idx_l, leaves_l):
+        valid = idx_l < E
+        slot = group_slots(idx_l, E + 1)   # pads slot into a virtual group
+        plan = dispatch_lib.make_ep_plan(idx_l, slot, valid, E, M, C)
+        send = dispatch_lib.ep_scatter(x_l, plan)
+        xr = dispatch_lib.ep_exchange(send, "model", plan)   # (E/M, M*C, D)
+        yr = _leaf_mlp_on_buffers(xr, leaves_l, activation, accum_dtype)
+        y_flat = dispatch_lib.ep_combine(yr, "model", plan)  # (E*C, O)
+        y_l = dispatch_lib.ep_gather(y_flat, plan)
+
+        dropped = valid & ~plan.kept
+        n_drop = jax.lax.psum(dropped.sum(), all_axes)
+
+        def repair(y_l):
+            # every model-axis peer sees every dropped token of its data row,
+            # evaluates the leaves it owns, and a psum assembles exact outputs
+            xm = jnp.where(dropped[:, None], x_l, 0.0)
+            im = jnp.where(dropped, idx_l, 0)
+            xg = jax.lax.all_gather(xm, "model", axis=0, tiled=True)
+            ig = jax.lax.all_gather(im, "model", axis=0, tiled=True)
+            dg = jax.lax.all_gather(dropped, "model", axis=0, tiled=True)
+            rank = jax.lax.axis_index("model")
+            off = rank * E_local
+            own = dg & (ig >= off) & (ig < off + E_local)
+            rel = jnp.clip(ig - off, 0, E_local - 1)
+            yd = _dense_leaf_gather(xg, rel, leaves_l, activation, accum_dtype)
+            yd = jax.lax.psum(jnp.where(own[:, None], yd, 0.0), "model")
+            mine = jax.lax.dynamic_slice_in_dim(yd, rank * x_l.shape[0],
+                                                x_l.shape[0], axis=0)
+            return jnp.where(dropped[:, None], mine, y_l)
+
+        y_l = jax.lax.cond(n_drop > 0, repair, lambda y: y, y_l)
+        return y_l, plan.kept
+
+    tok_axes = batch_axes + ("model",)
+    leaf_specs = {k: P(*(("model",) + (None,) * (v.ndim - 1)))
+                  for k, v in params.items()}
+    y, kept = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(tok_axes, None), P(tok_axes), leaf_specs),
+        out_specs=(P(tok_axes, None), P(tok_axes)),
+        check_rep=False)(x, leaf_idx, params)
+    y, kept = y[:B], kept[:B]
+    return (y, kept) if return_kept else y
 
 
 def leaf_histogram(leaf_idx: jax.Array, num_leaves: int) -> jax.Array:

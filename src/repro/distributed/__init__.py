@@ -1,2 +1,4 @@
-"""Distribution: meshes, sharding rules, compression, fault tolerance."""
-from repro.distributed import act, compression, fault, sharding, straggler
+"""Distribution: meshes, sharding rules, dispatch plans, compression, fault
+tolerance."""
+from repro.distributed import (act, compression, dispatch, fault, sharding,
+                               straggler)

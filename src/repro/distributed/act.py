@@ -37,6 +37,24 @@ def mesh_installed() -> bool:
     return _ctx() is not None
 
 
+def current_mesh() -> Optional[Mesh]:
+    """The installed mesh, or None when tracing unsharded.  Backends that
+    enter manual (shard_map) regions — e.g. the grouped_ep serving path —
+    read it here at trace time (DESIGN.md §5)."""
+    ctx = _ctx()
+    return None if ctx is None else ctx[0]
+
+
+def model_shard_count() -> int:
+    """Size of the model axis of the installed mesh (1 when tracing
+    unsharded or with no model axis)."""
+    ctx = _ctx()
+    if ctx is None:
+        return 1
+    mesh, _ = ctx
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
 def data_shard_count() -> int:
     """Number of data-parallel shards in the installed mesh context (1 when
     tracing unsharded).  Model code uses this to block token axes so that
@@ -80,3 +98,8 @@ DISPATCH_SERVE = "dispatch_serve"  # serving: E on the model axis — tokens
                                    # shards instead of weights being gathered
                                    # to tokens (decode reads O(B*l*D) weight
                                    # bytes, not O(2^d*l*D))
+TOKENS_EP = "tokens_ep"            # (B, D) flat tokens split over EVERY mesh
+                                   # axis (data *and* model) — the entry
+                                   # layout of the grouped_ep shard_map
+                                   # region, so the a2a sees B/(G*M) tokens
+                                   # per shard (DESIGN.md §5)

@@ -1,0 +1,120 @@
+"""Expert-parallel all_to_all dispatch plans (DESIGN.md §5).
+
+Generic token->group exchange for manual (shard_map) regions whose groups
+(experts / FFF leaves) are sharded across a mesh axis.  The caller brings
+per-token group ids and slot ranks (``core/routing.group_slots`` — sort
+ranks, never ``cumsum(one_hot)``); this module owns the send-buffer layout,
+the collective exchange and its inverse, and the capacity accounting.  It has
+no model knowledge: arrays in, arrays out.
+
+Layout contract (all shapes per shard, inside ``shard_map``):
+
+* groups are numbered globally ``0..E-1`` and owned contiguously — shard
+  ``s`` of the ``M``-way axis owns groups ``[s*E/M, (s+1)*E/M)``;
+* each source shard slots its ``Bl`` local tokens per (group) with capacity
+  ``C`` per *(source shard, group)* pair and scatters them into an
+  ``(M, E/M, C, D)`` send buffer;
+* one ``all_to_all`` over the axis delivers, to each owner shard, the
+  ``(M, E/M, C, D)`` buffer of its groups' tokens from every peer, viewed as
+  ``(E/M, M*C, D)`` per-group runs for grouped GEMMs;
+* the inverse ``all_to_all`` returns results in exactly the send layout, so
+  the original scatter indices gather them back to token order.
+
+Over-capacity tokens never occupy a slot (their scatter index is the uniform
+out-of-bounds sentinel ``E*C``); exactness is the caller's job (overflow-to-
+dense, DESIGN.md §8).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+
+
+class EPPlan(NamedTuple):
+    """Per-source-shard dispatch plan for one all_to_all exchange.
+
+    flat_idx:   (Bl,) int32 position ``group*C + slot`` in the flattened
+                ``(E*C,)`` send buffer; dropped/invalid tokens carry the
+                out-of-bounds sentinel ``E*C`` (scatter mode="drop" discards
+                them, the paired gather is masked by ``kept``)
+    kept:       (Bl,) bool — token is valid and under capacity
+    capacity:   C, per (source shard, group)
+    num_groups: E, global group count
+    num_shards: M, size of the exchange axis (E % M == 0)
+    """
+    flat_idx: jax.Array
+    kept: jax.Array
+    capacity: int
+    num_groups: int
+    num_shards: int
+
+    @property
+    def groups_local(self) -> int:
+        return self.num_groups // self.num_shards
+
+
+def ep_capacity(tokens_per_shard: int, num_groups: int,
+                capacity_factor: float, multiple: int = 8) -> int:
+    """Per-(source shard, group) slot count: ``cf * Bl / E`` rounded up to a
+    tile multiple.  Static — both ends of the a2a must agree on it."""
+    return max(multiple, utils.round_up(
+        int(capacity_factor * utils.cdiv(tokens_per_shard, num_groups)),
+        multiple))
+
+
+def make_ep_plan(group_idx: jax.Array, slot: jax.Array, valid: jax.Array,
+                 num_groups: int, num_shards: int, capacity: int) -> EPPlan:
+    """Build the plan from per-token group ids, slot ranks and a validity
+    mask (False = padding token: capacity-neutral, never occupies a slot)."""
+    if num_groups % num_shards:
+        raise ValueError(f"num_groups={num_groups} must divide over "
+                         f"num_shards={num_shards}")
+    kept = valid & (slot < capacity)
+    flat_idx = jnp.where(kept, group_idx * capacity + slot,
+                         num_groups * capacity).astype(jnp.int32)
+    return EPPlan(flat_idx, kept, capacity, num_groups, num_shards)
+
+
+def ep_scatter(x: jax.Array, plan: EPPlan) -> jax.Array:
+    """x (Bl, D) -> send buffer (M, E/M, C, D), grouped by owner shard."""
+    E, C = plan.num_groups, plan.capacity
+    buf = jnp.zeros((E * C, x.shape[-1]), x.dtype)
+    buf = buf.at[plan.flat_idx].set(x, mode="drop")
+    return buf.reshape(plan.num_shards, plan.groups_local, C, x.shape[-1])
+
+
+def ep_exchange(send: jax.Array, axis_name: str, plan: EPPlan) -> jax.Array:
+    """all_to_all the send buffer to group owners: (M, E/M, C, D) ->
+    (E/M, M*C, D) per-local-group token runs (sources concatenated)."""
+    recv = jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=0)
+    return recv.transpose(1, 0, 2, 3).reshape(
+        plan.groups_local, plan.num_shards * plan.capacity, send.shape[-1])
+
+
+def ep_combine(y: jax.Array, axis_name: str, plan: EPPlan) -> jax.Array:
+    """Inverse exchange: per-local-group results (E/M, M*C, O) back to the
+    source shards, flattened to the (E*C, O) send-buffer layout."""
+    M, C = plan.num_shards, plan.capacity
+    back = y.reshape(plan.groups_local, M, C, y.shape[-1]).transpose(1, 0, 2, 3)
+    ysend = jax.lax.all_to_all(back, axis_name, split_axis=0, concat_axis=0)
+    return ysend.reshape(plan.num_groups * C, y.shape[-1])
+
+
+def ep_gather(y_flat: jax.Array, plan: EPPlan) -> jax.Array:
+    """(E*C, O) -> per-token outputs (Bl, O); dropped tokens get zeros."""
+    y = jnp.take(y_flat, plan.flat_idx, axis=0)
+    return jnp.where(plan.kept[:, None], y, 0.0)
+
+
+def ep_bytes_moved(num_groups: int, num_shards: int, dim_in: int,
+                   dim_out: int, capacity: int, itemsize: int = 4) -> int:
+    """Cross-shard bytes per source shard for one dispatch round trip: two
+    all_to_alls of the (E, C, *) buffers, of which (M-1)/M leaves the shard.
+    The dispatch-locality benchmark reports this next to measured tokens/s."""
+    slots = num_groups * capacity
+    return int(slots * (dim_in + dim_out) * itemsize
+               * (num_shards - 1) / max(num_shards, 1))

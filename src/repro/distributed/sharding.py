@@ -103,6 +103,8 @@ def activation_rules(mesh: Mesh) -> dict:
         act.NODE_BTN: P(batch_axes, None, None),
         act.DISPATCH_ECD: P(batch_axes, None, None, None),  # (G, E, C, D)
         act.DISPATCH_SERVE: P(None, model, None, None),     # (G, E, C, D)
+        # (B, D) flat tokens split over every axis — grouped_ep entry layout
+        act.TOKENS_EP: P(batch_axes + ((model,) if model else ()), None),
     }
 
 

@@ -41,6 +41,18 @@ def make_host_mesh() -> Mesh:
     return jax.make_mesh((n,), ("data",), **_axis_types(1))
 
 
+def make_serving_mesh(model_parallel: int = 1) -> Mesh:
+    """Whatever devices exist, as a (data, model) mesh for expert-parallel
+    serving (the grouped_ep backend's all_to_all runs over the model axis;
+    DESIGN.md §5).  ``model_parallel`` must divide the device count."""
+    n = jax.device_count()
+    if model_parallel < 1 or n % model_parallel:
+        raise ValueError(
+            f"model_parallel={model_parallel} must divide {n} devices")
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"), **_axis_types(2))
+
+
 def data_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

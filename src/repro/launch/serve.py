@@ -10,9 +10,16 @@ this driver steers the whole stack's execution strategy with
 ``--fff-backend`` via ``api.use_backend`` — the launch-layer end of the
 backend-registry seam (core/api.py, DESIGN.md §2).
 
+``--model-parallel M`` installs an (all-devices/M, M) (data, model) mesh and
+shards the params onto it — the expert-parallel serving topology the
+``grouped_ep`` backend exchanges tokens over (DESIGN.md §5).  On a CPU host,
+combine with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to
+exercise the collective path.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-20b --reduced \
-      --batch 4 --prompt-len 32 --gen 16 [--fff-backend grouped]
+      --batch 4 --prompt-len 32 --gen 16 [--fff-backend grouped_ep] \
+      [--model-parallel 4]
 """
 from __future__ import annotations
 
@@ -44,6 +51,10 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="model-axis size of the serving mesh; >1 installs "
+                         "a (data, model) mesh over all devices so FFF "
+                         "sites serve expert-parallel (grouped_ep)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -53,6 +64,19 @@ def main() -> None:
     key = jax.random.PRNGKey(args.seed)
     params = lm.init(key, cfg)
     print(f"{cfg.arch_id}: {utils.tree_size(params)/1e6:.1f}M params")
+
+    if args.model_parallel > 1:
+        from repro.distributed import act, sharding
+        from repro.launch import mesh as mesh_lib
+        mesh = mesh_lib.make_serving_mesh(args.model_parallel)
+        rules = sharding.activation_rules(mesh)
+        params = sharding.shard_params(params, mesh, fsdp=False)
+        print(f"mesh: {dict(mesh.shape)} (expert-parallel serving)")
+
+        def mesh_ctx():
+            return act.use_mesh(mesh, rules)
+    else:
+        mesh_ctx = contextlib.nullcontext
 
     src = tokens_lib.MarkovTokenSource(cfg.vocab_size, seed=args.seed)
     prompt = jnp.asarray(src.sample(args.batch, args.prompt_len, seed=1)
@@ -80,7 +104,7 @@ def main() -> None:
 
     caches = lm.init_caches(cfg, args.batch, max_len)
     t0 = time.time()
-    with backend_ctx():
+    with mesh_ctx(), backend_ctx():
         logits, caches = prefill_jit(params, batch, caches)
     logits.block_until_ready()
     t_prefill = time.time() - t0
@@ -95,7 +119,7 @@ def main() -> None:
     lat = []
     for i in range(args.gen):
         t0 = time.time()
-        with backend_ctx():
+        with mesh_ctx(), backend_ctx():
             logits, caches = decode_jit(params, tok, caches,
                                         jnp.int32(args.prompt_len + i))
         logits.block_until_ready()

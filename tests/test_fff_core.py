@@ -143,6 +143,29 @@ def test_grouped_overflow_never_corrupts_kept_tokens():
     assert float(jnp.abs(y[~np.asarray(kept)]).max()) == 0.0
 
 
+def test_capacity_dispatch_flop_regression_guard():
+    """DESIGN.md §5: slot assignment must come from sort ranks, never
+    cumsum(one_hot) + dense (B, E, C) dispatch einsums.  The seed's
+    make_capacity_dispatch built exactly that (measured 260x FLOP inflation
+    at 64 experts); pin the compiled FLOP count orders of magnitude below the
+    dense-dispatch cost so it cannot come back."""
+    B, E, D = 512, 64, 128
+    x = jnp.zeros((B, D))
+    leaf_idx = jnp.zeros((B,), jnp.int32)
+
+    def gather(xx, ii):
+        return routing.capacity_gather(
+            xx, routing.make_capacity_dispatch(ii, E))
+
+    compiled = jax.jit(gather).lower(x, leaf_idx).compile()
+    ca = compiled.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    flops = float(ca.get("flops", 0.0))
+    # dense dispatch costs 2*B*E*C*D (~84 MFLOP here); sort-rank scatter is
+    # O(B log B) comparisons and O(B*D) moves — essentially FLOP-free
+    assert flops < B * E, f"capacity dispatch regressed to dense: {flops}"
+
+
 def test_hardening_loss_properties():
     p_half = jnp.full((8, 1, 7), 0.5)
     p_hard = jnp.concatenate([jnp.full((8, 1, 4), 1e-6),

@@ -98,13 +98,27 @@ def test_capacity_dispatch_conservation(batch, depth_pow, seed, cap):
     rng = np.random.default_rng(seed)
     leaf_idx = jnp.asarray(rng.integers(0, E, batch))
     plan = routing.make_capacity_dispatch(leaf_idx, E, capacity_factor=cap)
-    d = np.asarray(plan.dispatch)
-    # each kept token occupies exactly one slot; dropped tokens none
-    occ = d.sum(axis=(1, 2))
+    C = plan.capacity
     kept = np.asarray(plan.kept)
-    np.testing.assert_array_equal(occ, kept.astype(np.float32))
-    # no slot is double-occupied
-    assert (d.sum(axis=0) <= 1.0 + 1e-6).all()
+    flat = np.asarray(plan.flat_idx)
+    # each kept token occupies exactly one slot, inside its own leaf's block;
+    # dropped tokens carry the uniform out-of-bounds sentinel
+    assert len(set(flat[kept].tolist())) == int(kept.sum())
+    np.testing.assert_array_equal(flat[kept] // C,
+                                  np.asarray(leaf_idx)[kept])
+    assert (flat[kept] % C < C).all()
+    np.testing.assert_array_equal(flat[~kept], E * C)
+    # per leaf, kept count == min(routed count, capacity)
+    counts = np.bincount(np.asarray(leaf_idx), minlength=E)
+    kept_counts = np.bincount(np.asarray(leaf_idx)[kept], minlength=E)
+    np.testing.assert_array_equal(kept_counts, np.minimum(counts, C))
+    # gather/scatter round-trip: kept tokens come back exactly, dropped zero
+    x = jnp.asarray(rng.normal(0, 1, (batch, 7)), jnp.float32)
+    back = routing.capacity_scatter(routing.capacity_gather(x, plan), plan)
+    np.testing.assert_allclose(np.asarray(back)[kept],
+                               np.asarray(x)[kept], rtol=1e-6)
+    if (~kept).any():
+        assert float(jnp.abs(back[~kept]).max()) == 0.0
 
 
 @given(fff_case(max_depth=4))
