@@ -9,6 +9,9 @@
   roofline -> formats the dry-run roofline artifact (assignment)
   ep_dispatch -> grouped_ep dispatch-locality curve: tokens/s, per-shard
                  capacity and bytes moved vs model-shard count (DESIGN.md §5)
+  serving -> continuous-batching engine under Poisson load, fcfs vs
+             leaf_aware admission: throughput / TTFT / per-token latency /
+             overflow_fraction (DESIGN.md §9; writes BENCH_serving.json)
 
 ``python -m benchmarks.run`` runs the quick profile (CPU-sized, ~minutes);
 ``python -m benchmarks.run --full`` runs the paper-scale grids.
@@ -27,11 +30,11 @@ def main() -> None:
                     help="paper-scale grids (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,fig2,table2,fig34,"
-                         "table3,roofline,ep_dispatch")
+                         "table3,roofline,ep_dispatch,serving")
     args = ap.parse_args()
 
-    from benchmarks import (ep_dispatch, fig2, fig34, roofline_bench, table1,
-                            table2, table3)
+    from benchmarks import (ep_dispatch, fig2, fig34, roofline_bench,
+                            serving_load, table1, table2, table3)
     suites = {
         "table1": table1.main,
         "fig2": fig2.main,
@@ -40,6 +43,7 @@ def main() -> None:
         "table3": table3.main,
         "roofline": roofline_bench.main,
         "ep_dispatch": ep_dispatch.main,
+        "serving": serving_load.main,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     failures = []

@@ -59,6 +59,17 @@ DEFAULT_CAPACITY_EP = 1.25
 #: gathered decode kernel over the sorted-dispatch grouped GEMM (DESIGN.md §3)
 PALLAS_DECODE_MAX_TOKENS = 32
 
+
+def default_capacity_factor(backend: str, mode: str = "infer") -> float:
+    """The capacity factor a capacity-bounded backend runs with when
+    ``ExecutionSpec.capacity_factor`` is None — the single source of truth
+    for consumers that must PREDICT dispatch behavior (e.g. the serving
+    scheduler's overflow proxy, DESIGN.md §9)."""
+    if mode == "train":
+        return DEFAULT_CAPACITY_TRAIN_ST
+    return DEFAULT_CAPACITY_EP if backend == "grouped_ep" \
+        else DEFAULT_CAPACITY_INFER
+
 #: per-tree training width at which "auto" inference switches from the exact
 #: per-token gather to capacity-bounded grouped dispatch (DESIGN.md §3)
 AUTO_GROUPED_MIN_WIDTH = 4096
@@ -126,6 +137,78 @@ jax.tree_util.register_dataclass(
     data_fields=["leaf_idx", "node_probs", "mixture", "entropy",
                  "overflow_fraction"],
     meta_fields=[])
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingStats:
+    """Per-call routing telemetry for serving observability (DESIGN.md §9).
+
+    Built by ``routing_stats_from`` out of the ``FFFOutput`` every backend
+    already returns, when a ``collect_routing()`` tap is active.  The serving
+    engine's scheduler consumes these to compose microbatches that balance
+    leaf load (the paper's grouped dispatch is composition-sensitive:
+    capacity overflow depends on which tokens share a batch).
+
+    leaf_counts: (B, E) float32 — routed (token, tree) slots per leading
+                 batch row per leaf, summed over every other leading axis
+                 (sequence) and trees.  Row b is batch element b's *leaf
+                 footprint* at this site.
+    overflow:    scalar — the call's overflow_fraction (0 for exact paths)
+    slots:       scalar — total routed (token, tree) slots (weight for
+                 averaging overflow across sites)
+    """
+    leaf_counts: jax.Array
+    overflow: jax.Array
+    slots: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    RoutingStats, data_fields=["leaf_counts", "overflow", "slots"],
+    meta_fields=[])
+
+
+@contextlib.contextmanager
+def collect_routing(enable: bool = True):
+    """Ask FFF call sites to surface ``RoutingStats`` for the dynamic extent
+    of a trace.  Read at trace time (same thread-local pattern as
+    ``use_backend``): model code checks ``routing_enabled()`` and, when true,
+    attaches ``routing_stats_from(out, cfg)`` to its aux outputs so the
+    telemetry rides the normal function returns — it must, because inside a
+    ``lax.scan`` over layers a side-channel list would capture scan-body
+    tracers that cannot escape the loop."""
+    prev = getattr(_thread_state, "routing", False)
+    _thread_state.routing = bool(enable)
+    try:
+        yield
+    finally:
+        _thread_state.routing = prev
+
+
+def routing_enabled() -> bool:
+    """Whether a ``collect_routing()`` tap is active for the current trace."""
+    return bool(getattr(_thread_state, "routing", False))
+
+
+def routing_stats_from(out: FFFOutput, cfg: "fff_lib.FFFConfig"
+                       ) -> Optional[RoutingStats]:
+    """Compact per-call telemetry from a backend's ``FFFOutput``.
+
+    Reduces ``leaf_idx`` (B, ..., trees) to a per-batch-row leaf histogram
+    (B, E); returns None when the backend reported no leaf indices (e.g.
+    FORWARD_T training, depth-0 sites)."""
+    if out.leaf_idx is None:
+        return None
+    idx = out.leaf_idx
+    if idx.ndim == 1:                      # (B,) single-tree flat call
+        idx = idx[:, None]
+    flat = idx.reshape(idx.shape[0], -1)   # (B, S*...*trees)
+    counts = jax.vmap(
+        lambda i: jnp.bincount(i, length=cfg.num_leaves))(flat)
+    counts = counts.astype(jnp.float32)
+    ovf = (out.overflow_fraction if out.overflow_fraction is not None
+           else jnp.zeros((), jnp.float32))
+    return RoutingStats(leaf_counts=counts, overflow=ovf,
+                        slots=counts.sum())
 
 BackendFn = Callable[[dict, "fff_lib.FFFConfig", jax.Array, ExecutionSpec],
                      tuple[jax.Array, FFFOutput]]
@@ -252,6 +335,17 @@ def _resolve_auto(params: dict, cfg: fff_lib.FFFConfig, mode: str) -> str:
     if cfg.num_leaves * cfg.leaf_width >= AUTO_GROUPED_MIN_WIDTH:
         return "grouped"
     return "reference"
+
+
+def resolve_backend(params: dict, cfg: "fff_lib.FFFConfig",
+                    mode: str = "infer") -> str:
+    """The backend ``apply(backend="auto")`` would run under the CURRENT
+    trace-time context (installed mesh, ``use_backend`` override, supports
+    predicates) — for consumers that must predict dispatch behavior without
+    running it, e.g. the serving scheduler's capacity proxy (DESIGN.md §9).
+    Pass the site's params when available; ``{}`` is an acceptable proxy for
+    bias-free configs (the predicates only probe bias keys)."""
+    return _resolve_auto(params, cfg, mode)
 
 
 def apply(params: dict, cfg: fff_lib.FFFConfig, x: jax.Array,

@@ -53,6 +53,28 @@ def make_serving_mesh(model_parallel: int = 1) -> Mesh:
                          ("data", "model"), **_axis_types(2))
 
 
+def serving_context(model_parallel: int = 1):
+    """The serving topology as an installable pair: ``(mesh, trace_ctx)``.
+
+    ``trace_ctx()`` is a zero-arg context-manager factory entering
+    ``act.use_mesh(mesh, rules)`` — the shape both ``launch/serve.py`` paths
+    and the continuous-batching engine (``serving.engine``) wrap every traced
+    call in.  With ``model_parallel <= 1`` returns ``(None, nullcontext)`` so
+    callers need no branching."""
+    import contextlib
+
+    if model_parallel <= 1:
+        return None, contextlib.nullcontext
+    from repro.distributed import act, sharding
+    mesh = make_serving_mesh(model_parallel)
+    rules = sharding.activation_rules(mesh)
+
+    def trace_ctx():
+        return act.use_mesh(mesh, rules)
+
+    return mesh, trace_ctx
+
+
 def data_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

@@ -1,14 +1,16 @@
-"""Serving driver: batched prefill + decode with KV/state caches.
+"""Serving driver: continuous-batching engine (default) or the legacy
+fixed-batch loop (``--engine off``).
 
-Demonstrates the FFF serving path end-to-end: hard tree routing per FFN site,
-grouped leaf execution, per-step latency stats.  Runs reduced configs on CPU;
-the same step functions pjit onto the pod meshes (see dryrun.py for the
-compile proof at the production shapes).
+``--engine continuous`` (default) drives ``repro.serving``: a request queue,
+pluggable admission scheduling (``--scheduler fcfs|leaf_aware``), a
+slot-pooled KV-cache and interleaved prefill/decode over fixed compiled
+shapes — requests of mixed lengths arrive, finish and free their slots
+independently (DESIGN.md §9).  ``--engine off`` keeps the original
+synchronous batched prefill + decode demo loop.
 
-Model code invokes every FFF site through ``api.apply(..., backend="auto")``;
-this driver steers the whole stack's execution strategy with
-``--fff-backend`` via ``api.use_backend`` — the launch-layer end of the
-backend-registry seam (core/api.py, DESIGN.md §2).
+Both paths report p50/p90/p99 latency and tokens/s through
+``repro.serving.metrics`` and steer every FFF site's execution strategy with
+``--fff-backend`` via ``api.use_backend`` (core/api.py, DESIGN.md §2).
 
 ``--model-parallel M`` installs an (all-devices/M, M) (data, model) mesh and
 shards the params onto it — the expert-parallel serving topology the
@@ -18,8 +20,8 @@ exercise the collective path.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-20b --reduced \
-      --batch 4 --prompt-len 32 --gen 16 [--fff-backend grouped_ep] \
-      [--model-parallel 4]
+      --engine continuous --batch 4 --prompt-len 32 --gen 16 \
+      [--scheduler leaf_aware] [--fff-backend grouped_ep] [--model-parallel 4]
 """
 from __future__ import annotations
 
@@ -36,9 +38,13 @@ from repro.configs import registry
 from repro.core import api
 from repro.data import tokens as tokens_lib
 from repro.models import lm
+from repro.serving import metrics as metrics_lib
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+from repro.serving.request import Request
+from repro.serving.scheduler import SCHEDULERS
 
 
-def main() -> None:
+def parse_args(argv=None) -> argparse.Namespace:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-20b",
                     choices=list(registry.ARCH_IDS))
@@ -48,36 +54,81 @@ def main() -> None:
                     help="execution backend for every FFF site (auto = "
                          "per-site resolution; see core/api.py)")
     ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "off"],
+                    help="continuous = the batching engine (repro.serving); "
+                         "off = the legacy synchronous fixed-batch loop")
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=sorted(SCHEDULERS),
+                    help="admission policy for --engine continuous")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="fixed batch (legacy) / cache slots (engine)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="engine: number of requests (0 = 2x slots)")
+    ap.add_argument("--prompt-len", type=int, default=32,
+                    help="max prompt length (engine serves a mixed-length "
+                         "set up to this)")
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help=">= 0: stop each sequence at this token id")
     ap.add_argument("--model-parallel", type=int, default=1,
                     help="model-axis size of the serving mesh; >1 installs "
                          "a (data, model) mesh over all devices so FFF "
                          "sites serve expert-parallel (grouped_ep)")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap.parse_args(argv)
 
+
+def _setup(args):
     cfg = registry.get_config(args.arch, ffn=args.ffn)
     if args.reduced:
-        cfg = cfg.reduced()
-    key = jax.random.PRNGKey(args.seed)
-    params = lm.init(key, cfg)
+        cfg = cfg.reduced(seq=max(64, args.prompt_len + args.gen + 1))
+    params = lm.init(jax.random.PRNGKey(args.seed), cfg)
     print(f"{cfg.arch_id}: {utils.tree_size(params)/1e6:.1f}M params")
 
-    if args.model_parallel > 1:
-        from repro.distributed import act, sharding
-        from repro.launch import mesh as mesh_lib
-        mesh = mesh_lib.make_serving_mesh(args.model_parallel)
-        rules = sharding.activation_rules(mesh)
+    from repro.launch import mesh as mesh_lib
+    mesh, mesh_ctx = mesh_lib.serving_context(args.model_parallel)
+    if mesh is not None:
+        from repro.distributed import sharding
         params = sharding.shard_params(params, mesh, fsdp=False)
         print(f"mesh: {dict(mesh.shape)} (expert-parallel serving)")
+    return cfg, params, mesh_ctx
 
-        def mesh_ctx():
-            return act.use_mesh(mesh, rules)
-    else:
-        mesh_ctx = contextlib.nullcontext
 
+def run_engine(args) -> None:
+    cfg, params, mesh_ctx = _setup(args)
+    eos = args.eos_id if args.eos_id >= 0 else None
+    ecfg = EngineConfig(
+        num_slots=args.batch,
+        max_len=args.prompt_len + args.gen + 1,
+        max_prompt_len=args.prompt_len,
+        scheduler=args.scheduler,
+        fff_backend=args.fff_backend,
+        seed=args.seed)
+    engine = ContinuousBatchingEngine(params, cfg, ecfg, trace_ctx=mesh_ctx)
+
+    n = args.requests or 2 * args.batch
+    src = tokens_lib.MarkovTokenSource(cfg.vocab_size, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    reqs = []
+    for i in range(n):
+        # mixed lengths: the engine's reason to exist
+        lo = min(max(4, args.prompt_len // 4), args.prompt_len)
+        L = int(rng.integers(lo, args.prompt_len + 1))
+        prompt = src.sample(1, L, seed=args.seed + 1 + i)[0, :L]
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=args.gen,
+                            eos_id=eos))
+    print(f"engine: {args.batch} slots, {n} requests, prompt lens "
+          f"{min(len(r.prompt) for r in reqs)}-"
+          f"{max(len(r.prompt) for r in reqs)}, scheduler={args.scheduler}, "
+          f"fff backend={args.fff_backend} requested")
+    _, m = engine.run(reqs)
+    print(m.report())
+    print(f"compiled shapes: {engine.compiled_shapes()}")
+
+
+def run_legacy(args) -> None:
+    cfg, params, mesh_ctx = _setup(args)
     src = tokens_lib.MarkovTokenSource(cfg.vocab_size, seed=args.seed)
     prompt = jnp.asarray(src.sample(args.batch, args.prompt_len, seed=1)
                          [:, :args.prompt_len])
@@ -114,24 +165,51 @@ def main() -> None:
     print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill*1e3:.1f}ms "
           f"(incl. compile, fff backend={args.fff_backend} requested)")
 
+    eos = args.eos_id if args.eos_id >= 0 else None
     tok = logits.argmax(-1)[:, None].astype(jnp.int32)
     out = [tok]
     lat = []
+    step_tokens = []                      # real (non-pad) tokens per step
+    done = np.zeros((args.batch,), bool)
     for i in range(args.gen):
+        if eos is not None:
+            done |= np.asarray(tok[:, 0]) == eos
+            if done.all():
+                break
         t0 = time.time()
         with mesh_ctx(), backend_ctx():
             logits, caches = decode_jit(params, tok, caches,
                                         jnp.int32(args.prompt_len + i))
         logits.block_until_ready()
         lat.append(time.time() - t0)
+        step_tokens.append(int(args.batch - done.sum()))  # finished rows: pad
         tok = logits.argmax(-1)[:, None].astype(jnp.int32)
+        if eos is not None:
+            tok = jnp.where(jnp.asarray(done)[:, None], jnp.int32(eos), tok)
         out.append(tok)
     gen = jnp.concatenate(out, axis=1)
-    lat_steady = lat[1:] if len(lat) > 1 else lat
-    print(f"decode: {args.gen} steps; first {lat[0]*1e3:.1f}ms (compile), "
-          f"steady p50 {np.median(lat_steady)*1e3:.2f}ms "
-          f"p95 {np.percentile(lat_steady, 95)*1e3:.2f}ms")
+    if lat:
+        # steady state excludes the first (compile-laden) step when possible;
+        # tokens and time cover the same steps so tok/s is decode-only
+        steady = slice(1, None) if len(lat) > 1 else slice(None)
+        summary = metrics_lib.summarize(lat[steady])
+        tok_s = metrics_lib.tokens_per_second(sum(step_tokens[steady]),
+                                              max(sum(lat[steady]), 1e-9))
+        print(f"decode: {len(lat)} steps; first {lat[0]*1e3:.1f}ms (compile); "
+              + summary.line("steady"))
+        print(f"throughput: {tok_s:.1f} tok/s steady decode "
+              f"({sum(step_tokens)} decode tokens total)")
+    else:
+        print("decode: 0 steps (every sequence hit --eos-id at prefill)")
     print("sample continuation:", np.asarray(gen[0])[:12].tolist())
+
+
+def main(argv=None) -> None:
+    args = parse_args(argv)
+    if args.engine == "continuous":
+        run_engine(args)
+    else:
+        run_legacy(args)
 
 
 if __name__ == "__main__":

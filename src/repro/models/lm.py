@@ -143,28 +143,151 @@ def prefill(params: Params, cfg: ModelConfig, batch: dict,
     return logits[:, 0], caches
 
 
+def prefill_padded(params: Params, cfg: ModelConfig, batch: dict,
+                   caches: list[dict], true_len: jax.Array
+                   ) -> tuple[jax.Array, list[dict], Any]:
+    """Prefill with RIGHT-PADDED prompts (the serving engine's fixed-shape
+    contract, DESIGN.md §9).
+
+    ``batch["tokens"]`` is (B, S_pad); ``true_len`` (B,) int32 gives each
+    row's real prompt length.  Causal attention makes positions < true_len
+    independent of the pad garbage to their right; the garbage K/V rows land
+    in the cache but are masked out by setting each row's cache length to
+    ``true_len`` (and are progressively overwritten by decode appends).
+    Returns (logits at each row's last real token (B, V), caches, routing
+    stats — None unless an ``api.collect_routing`` tap is active).
+
+    Only valid for attention-mixer stacks: recurrent mixers (mamba/xlstm)
+    fold pad tokens into their state.  Callers enforce that
+    (``serving.engine`` checks the period at construction).
+    """
+    x = _embed_inputs(params, cfg, batch)
+    x, caches, aux = transformer.stack_forward(params["stack"], cfg, x,
+                                               mode="prefill", caches=caches)
+    last = jnp.take_along_axis(
+        x, (true_len - 1)[:, None, None].astype(jnp.int32), axis=1)  # (B,1,D)
+    logits = _head(params, cfg, last)
+    caches = set_cache_lengths(caches, true_len)
+    return logits[:, 0], caches, aux.get("routing")
+
+
 def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
-                caches: list[dict], pos_offset: jax.Array | int = 0
-                ) -> tuple[jax.Array, list[dict]]:
-    """One serve step: token (B, 1) int32 -> logits (B, V), updated caches."""
+                caches: list[dict], pos_offset: jax.Array | int = 0,
+                *, with_stats: bool = False):
+    """One serve step: token (B, 1) int32 -> logits (B, V), updated caches.
+
+    ``pos_offset`` may be per-row (B,) for continuous batching (slots sit at
+    different positions; only learned positional embeddings consume it — RoPE
+    reads per-row positions off the KV cache lengths).  With
+    ``with_stats=True`` also returns the per-site routing-stats tuple from
+    the ``api.collect_routing`` tap (None when no tap is active)."""
     x = _embed_inputs(params, cfg, {"tokens": token}, pos_offset=pos_offset)
-    x, caches, _ = transformer.stack_forward(params["stack"], cfg, x,
-                                             mode="decode", caches=caches)
+    x, caches, aux = transformer.stack_forward(params["stack"], cfg, x,
+                                               mode="decode", caches=caches)
     logits = _head(params, cfg, x)
+    if with_stats:
+        return logits[:, 0], caches, aux.get("routing")
     return logits[:, 0], caches
+
+
+# ---------------------------------------------------------------------------
+# slot-indexed cache surgery (continuous-batching serving, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def set_cache_lengths(caches: list[dict], lengths: jax.Array) -> list[dict]:
+    """Overwrite every attention cache's per-row filled length with
+    ``lengths`` (B,) — the padded-prefill epilogue."""
+    out = []
+    for c in caches:
+        c = dict(c)
+        if "kv" in c:
+            kv = c["kv"]
+            c["kv"] = kv._replace(length=jnp.broadcast_to(
+                lengths.astype(kv.length.dtype)[None], kv.length.shape))
+        out.append(c)
+    return out
+
+
+def cache_insert(big: list[dict], small: list[dict], slot: jax.Array
+                 ) -> list[dict]:
+    """Insert a 1-row cache tree into row ``slot`` of a pooled cache tree.
+
+    Every cache leaf is (n_periods, B, ...); ``small`` carries B = 1 with the
+    same trailing shape (same max_len), so the insert is one dynamic update
+    per leaf at batch index ``slot`` (traced — one compiled shape serves all
+    slots)."""
+    def ins(b, s):
+        start = (jnp.zeros((), jnp.int32), jnp.asarray(slot, jnp.int32)
+                 ) + (jnp.zeros((), jnp.int32),) * (b.ndim - 2)
+        return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), start)
+    return jax.tree_util.tree_map(ins, big, small)
+
+
+def cache_evict_rows(caches: list[dict], evict: jax.Array) -> list[dict]:
+    """Free every cache row where ``evict`` (B,) bool is True, in ONE pass:
+    zero their attention lengths (stale K/V rows are masked by length and
+    overwritten on re-admission) and zero any recurrent / cross-attention
+    state.  The engine evicts a whole step's finished slots with a single
+    dispatch instead of one cache-threading call per slot."""
+    def zero_rows(leaf):
+        m = evict.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+        return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
+
+    out = []
+    for c in caches:
+        nc = {}
+        for k, v in c.items():
+            if k == "kv":
+                nc[k] = v._replace(length=jnp.where(evict[None, :], 0,
+                                                    v.length))
+            else:
+                nc[k] = jax.tree_util.tree_map(zero_rows, v)
+        out.append(nc)
+    return out
+
+
+def cache_evict(caches: list[dict], slot: jax.Array) -> list[dict]:
+    """Free cache row ``slot`` (the single-row view of ``cache_evict_rows``)."""
+    n = jax.tree_util.tree_leaves(caches)[0].shape[1]
+    return cache_evict_rows(caches, jnp.arange(n) == slot)
+
+
+def prefill_slot(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                 true_len: jax.Array, caches: list[dict], max_len: int,
+                 slot: jax.Array) -> tuple[jax.Array, list[dict], Any]:
+    """Admit one request into pooled caches: prefill the right-padded prompt
+    ``tokens`` (1, S_pad) with real length ``true_len`` into a fresh 1-row
+    cache, then insert it at row ``slot``.  Returns (next-token logits (V,),
+    updated pooled caches, routing stats)."""
+    small = init_caches(cfg, 1, max_len)
+    logits, small, stats = prefill_padded(
+        params, cfg, {"tokens": tokens}, small,
+        jnp.reshape(jnp.asarray(true_len, jnp.int32), (1,)))
+    return logits[0], cache_insert(caches, small, slot), stats
 
 
 def generate(params: Params, cfg: ModelConfig, prompt: jax.Array,
              steps: int, max_len: int, rng: Optional[jax.Array] = None,
-             temperature: float = 0.0) -> jax.Array:
-    """Greedy/temperature sampling loop (host-driven example path)."""
+             temperature: float = 0.0,
+             eos_id: Optional[int] = None) -> jax.Array:
+    """Greedy/temperature sampling loop (host-driven example path).
+
+    With ``eos_id`` set, rows that emit it stop: their subsequent tokens are
+    pinned to ``eos_id`` (pad), and the loop exits once every row has
+    finished — so the result may have fewer than ``steps`` generated columns.
+    """
     B = prompt.shape[0]
     caches = init_caches(cfg, B, max_len)
     logits, caches = prefill(params, cfg, {"tokens": prompt}, caches)
     out = [prompt]
     tok = logits.argmax(-1)[:, None].astype(jnp.int32)
+    done = jnp.zeros((B,), bool)
     for i in range(steps):
         out.append(tok)
+        if eos_id is not None:
+            done = done | (tok[:, 0] == eos_id)
+            if bool(done.all()):
+                break
         logits, caches = decode_step(params, cfg, tok, caches,
                                      pos_offset=prompt.shape[1] + i)
         if temperature > 0.0 and rng is not None:
@@ -173,4 +296,6 @@ def generate(params: Params, cfg: ModelConfig, prompt: jax.Array,
             tok = tok.astype(jnp.int32)
         else:
             tok = logits.argmax(-1)[:, None].astype(jnp.int32)
+        if eos_id is not None:
+            tok = jnp.where(done[:, None], jnp.int32(eos_id), tok)
     return jnp.concatenate(out, axis=1)

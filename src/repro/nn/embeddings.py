@@ -45,8 +45,16 @@ def learned_pos_init(key: jax.Array, max_len: int, d_model: int,
     return {"pos": utils.truncated_init(key, (max_len, d_model), 0.02, param_dtype)}
 
 
-def learned_pos(params: Params, x: jax.Array, offset: int = 0) -> jax.Array:
+def learned_pos(params: Params, x: jax.Array,
+                offset: "int | jax.Array" = 0) -> jax.Array:
+    """Add learned position rows.  ``offset`` may be a scalar (whole-batch
+    prefix length) or a (B,) vector of per-row offsets — the continuous-
+    batching decode path, where slots sit at different positions."""
     S = x.shape[1]
+    if getattr(offset, "ndim", 0) == 1:
+        pos = jnp.take(params["pos"],
+                       offset[:, None] + jnp.arange(S)[None, :], axis=0)
+        return x + pos.astype(x.dtype)
     return x + jax.lax.dynamic_slice_in_dim(
         params["pos"], offset, S, axis=0).astype(x.dtype)
 

@@ -80,8 +80,13 @@ def forward(params: Params, spec: FFNSpec, d_model: int, x: jax.Array, *,
             mode="train" if train else "infer", rng=rng))
         if train:
             harden = spec.hardening_scale * fff.hardening_loss(out.node_probs)
-        return y, {"hardening": harden.astype(jnp.float32) if train else zero,
-                   "moe_aux": zero}
+        aux = {"hardening": harden.astype(jnp.float32) if train else zero,
+               "moe_aux": zero}
+        if not train and api.routing_enabled():
+            # serving telemetry rides the aux return (DESIGN.md §9): a side
+            # list would capture scan-body tracers under scan_layers
+            aux["routing"] = api.routing_stats_from(out, cfg)
+        return y, aux
     if spec.kind == "moe":
         cfg = make_moe_config(spec, d_model, **kw)
         if train:

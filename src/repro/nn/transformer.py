@@ -17,11 +17,27 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import BlockSpec, ModelConfig
+from repro.core import api
 from repro.distributed import act
 from repro.nn import attention, mamba, mlp, norms, xlstm
 
 Params = dict
 Cache = dict
+
+
+def _routing_weighted(r: "api.RoutingStats | None"):
+    """Pre-weight overflow by slot count so per-layer records sum correctly
+    across the period scan (finalized back to a fraction below)."""
+    if r is None:
+        return None
+    return api.RoutingStats(r.leaf_counts, r.overflow * r.slots, r.slots)
+
+
+def _routing_finalize(r: "api.RoutingStats | None"):
+    if r is None:
+        return None
+    return api.RoutingStats(r.leaf_counts,
+                            r.overflow / jnp.maximum(r.slots, 1.0), r.slots)
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +239,7 @@ def stack_forward(params: list[Params], cfg: ModelConfig, x: jax.Array, *,
         new_caches = []
         aux_h = jnp.zeros((), jnp.float32)
         aux_m = jnp.zeros((), jnp.float32)
+        routing = []
         for pos, spec in enumerate(period):
             r = per_rngs[pos] if use_rng else None
             c = per_caches[pos] if per_caches is not None else None
@@ -232,7 +249,17 @@ def stack_forward(params: list[Params], cfg: ModelConfig, x: jax.Array, *,
             new_caches.append(nc)
             aux_h = aux_h + aux["hardening"]
             aux_m = aux_m + aux["moe_aux"]
-        return x, new_caches, (aux_h, aux_m)
+            # per-position (not summed across positions): sites in one period
+            # may have different leaf counts; summation happens across
+            # *periods*, where position specs are identical
+            routing.append(_routing_weighted(aux.get("routing")))
+        return x, new_caches, (aux_h, aux_m, tuple(routing))
+
+    def finish_aux(aux_h, aux_m, routing):
+        aux = {"hardening": aux_h, "moe_aux": aux_m}
+        if any(r is not None for r in routing):
+            aux["routing"] = tuple(_routing_finalize(r) for r in routing)
+        return aux
 
     if cfg.scan_layers:
         def scan_body(carry, xs):
@@ -251,26 +278,31 @@ def stack_forward(params: list[Params], cfg: ModelConfig, x: jax.Array, *,
         elif cfg.remat == "full" and mode == "train":
             body = jax.checkpoint(scan_body)
         xs = (params, caches, rngs)
-        x, (new_caches, (aux_h, aux_m)) = jax.lax.scan(body, x, xs)
-        aux = {"hardening": aux_h.sum(), "moe_aux": aux_m.sum()}
+        x, (new_caches, (aux_h, aux_m, routing)) = jax.lax.scan(body, x, xs)
+        routing = jax.tree_util.tree_map(lambda a: a.sum(0), routing)
+        aux = finish_aux(aux_h.sum(), aux_m.sum(), routing)
         return x, (new_caches if caches is not None else None), aux
 
     # unrolled path (smoke tests / tiny models)
     aux_h = jnp.zeros((), jnp.float32)
     aux_m = jnp.zeros((), jnp.float32)
+    routing_acc = None
     new_caches_acc = [[] for _ in period]
     for i in range(n_periods):
         per_params = [jax.tree_util.tree_map(lambda a: a[i], p) for p in params]
         per_caches = ([jax.tree_util.tree_map(lambda a: a[i], c) for c in caches]
                       if caches is not None else None)
         per_rngs = rngs[i]
-        x, ncs, (h_, m_) = period_body(x, per_params, per_caches, per_rngs)
+        x, ncs, (h_, m_, routing) = period_body(x, per_params, per_caches,
+                                                per_rngs)
         aux_h += h_
         aux_m += m_
+        routing_acc = (routing if routing_acc is None else
+                       jax.tree_util.tree_map(jnp.add, routing_acc, routing))
         for pos, nc in enumerate(ncs):
             new_caches_acc[pos].append(nc)
     new_caches = None
     if caches is not None:
         new_caches = [jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ncs)
                       for ncs in new_caches_acc]
-    return x, new_caches, {"hardening": aux_h, "moe_aux": aux_m}
+    return x, new_caches, finish_aux(aux_h, aux_m, routing_acc)

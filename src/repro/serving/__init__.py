@@ -1,0 +1,16 @@
+"""Continuous-batching serving engine with FFF leaf-occupancy-aware
+scheduling (DESIGN.md §9)."""
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+from repro.serving.metrics import EngineMetrics, LatencySummary, summarize, \
+    tokens_per_second
+from repro.serving.request import Request, RequestResult
+from repro.serving.scheduler import SCHEDULERS, FCFSScheduler, \
+    LeafAwareScheduler, Scheduler, SchedulerView, make_scheduler
+
+__all__ = [
+    "ContinuousBatchingEngine", "EngineConfig", "EngineMetrics",
+    "LatencySummary", "summarize", "tokens_per_second",
+    "Request", "RequestResult",
+    "SCHEDULERS", "FCFSScheduler", "LeafAwareScheduler", "Scheduler",
+    "SchedulerView", "make_scheduler",
+]

@@ -1,0 +1,490 @@
+"""Continuous-batching serving engine (DESIGN.md §9).
+
+Owns a request queue, an admission scheduler, a slot-pooled KV-cache
+allocator and interleaved prefill/decode over FIXED compiled shapes:
+
+* The decode batch is always ``(num_slots, 1)`` — free slots decode a dummy
+  token whose output is ignored — so the decode step compiles exactly once.
+* Prompts prefill one request at a time, right-padded to a small static set
+  of *buckets* (powers of two up to ``max_prompt_len``), each bucket
+  compiling once; the prefilled 1-row cache is inserted into the pooled
+  caches at the assigned slot (``models/lm.cache_insert``).
+* Requests enter with prompt + sampling/stop params, decode together until
+  EOS/max-tokens, then free their slot for waiting requests
+  (``lm.cache_evict`` zeroes the row's attention lengths).
+
+Admission policy is pluggable (``serving/scheduler.py``); ``leaf_aware``
+consumes the per-step FFF leaf-occupancy telemetry the engine collects via
+``core/api.collect_routing`` to compose microbatches that minimize grouped-
+dispatch capacity overflow.
+
+The engine is mesh-agnostic: pass ``trace_ctx`` (e.g. the launch layer's
+``act.use_mesh`` wrapper) and every jitted call traces under it, so the same
+loop serves single-device and expert-parallel (``grouped_ep``) topologies.
+Sampling is host-side numpy (deterministic under ``EngineConfig.seed``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import api
+from repro.models import lm
+from repro.serving import metrics as metrics_lib
+from repro.serving.request import Request, RequestResult, SlotState
+from repro.serving.scheduler import Scheduler, SchedulerView, make_scheduler
+
+
+def _pow2_buckets(lo: int, hi: int) -> Tuple[int, ...]:
+    out, b = [], lo
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(hi)
+    return tuple(sorted(set(out)))
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Engine shape/policy knobs.  ``max_len`` bounds prompt + generation per
+    slot (the pooled cache's sequence axis); ``prefill_buckets`` is the
+    static set of compiled prompt shapes (default: powers of two from 16 up
+    to ``max_prompt_len``)."""
+    num_slots: int = 8
+    max_len: int = 128
+    max_prompt_len: int = 64
+    prefill_buckets: Tuple[int, ...] = ()
+    max_prefills_per_step: int = 2
+    scheduler: str = "fcfs"
+    scheduler_kw: dict = dataclasses.field(default_factory=dict)
+    fff_backend: str = "auto"            # api.use_backend override, "auto" = none
+    capacity_factor: Optional[float] = None   # scheduler's overflow proxy;
+                                              # None = the dispatch default of
+                                              # the configured backend
+    telemetry: bool = True               # collect FFF routing stats
+    occupancy_ewma: float = 0.5
+    seed: int = 0
+
+    def buckets(self) -> Tuple[int, ...]:
+        if self.prefill_buckets:
+            return tuple(sorted(set(self.prefill_buckets)))
+        return _pow2_buckets(min(16, self.max_prompt_len), self.max_prompt_len)
+
+
+
+class ContinuousBatchingEngine:
+    def __init__(self, params, cfg, ecfg: EngineConfig,
+                 scheduler: Optional[Scheduler] = None,
+                 trace_ctx: Optional[Callable] = None):
+        if cfg.encoder is not None or cfg.frontend != "none":
+            raise ValueError("serving engine supports decoder-only token LMs")
+        if any(b.mixer != "attn" for b in cfg.period):
+            # recurrent mixers fold right-pad garbage into their state; the
+            # engine's padded-prefill contract (DESIGN.md §9) needs
+            # length-maskable caches
+            raise ValueError("serving engine requires attention mixers "
+                             "(padded prefill is length-masked, recurrent "
+                             "state is not)")
+        if ecfg.max_prompt_len >= ecfg.max_len:
+            raise ValueError("max_prompt_len must leave room to generate "
+                             "(max_prompt_len < max_len)")
+        if ecfg.buckets()[-1] != ecfg.max_prompt_len:
+            raise ValueError(
+                f"prefill_buckets {ecfg.buckets()} must top out at "
+                f"max_prompt_len {ecfg.max_prompt_len} — the two knobs "
+                f"would otherwise disagree on the servable prompt length")
+        self.params = params
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.num_leaves = next(
+            (2 ** b.ffn.fff_depth for b in cfg.period if b.ffn.kind == "fff"),
+            0)
+        fff_spec = next((b.ffn for b in cfg.period if b.ffn.kind == "fff"),
+                        None)
+        # the first FFF site's layer config, for predicting what the auto
+        # resolver will dispatch (the scheduler's capacity proxy)
+        from repro.nn import mlp as mlp_lib
+        self._site_cfg = None if fff_spec is None else mlp_lib.make_fff_config(
+            fff_spec, cfg.d_model, param_dtype=cfg.param_dtype,
+            accum_dtype=cfg.accum_dtype)
+        self.scheduler = scheduler or make_scheduler(ecfg.scheduler,
+                                                     **ecfg.scheduler_kw)
+        self._trace_ctx = trace_ctx
+        self._topology: Optional[Tuple[int, float]] = None
+
+        S, L = ecfg.num_slots, ecfg.max_len
+        self.caches = lm.init_caches(cfg, S, L)
+        self.slots: List[Optional[SlotState]] = [None] * S
+        self.queue: deque = deque()
+        self.results: List[RequestResult] = []
+        self.occupancy = np.zeros((S, max(self.num_leaves, 1)), np.float64)
+        # what a FREE slot decodes: its last occupant's final token (distinct
+        # per-slot ids before first use — a constant would concentrate
+        # startup phantom load on one leaf).  Free rows' outputs are
+        # ignored, but they still
+        # route through FFF sites and — under the drop-semantics "grouped"
+        # backend — share per-leaf capacity with real tokens; feeding
+        # in-distribution, naturally-spread tokens keeps that phantom load
+        # from piling onto one leaf (exact backends: reference / pallas /
+        # grouped_ep's repair are unaffected by construction)
+        self._free_tok = (np.arange(S) % cfg.vocab_size).astype(np.int32)
+        self._live_rids: set = set()            # queued or in a slot
+        self._arrivals: Dict[int, float] = {}   # id(req) -> engine-clock s
+
+        # donate the pooled caches through every cache-threading jit so XLA
+        # updates them in place instead of copying the full KV pool per
+        # token (the caller always rebinds self.caches to the result); CPU
+        # has no donation support and would warn per compile
+        def _don(i):
+            return {} if jax.default_backend() == "cpu" \
+                else {"donate_argnums": (i,)}
+        self._decode_jit = jax.jit(
+            lambda p, t, c, off: lm.decode_step(p, cfg, t, c, off,
+                                                with_stats=True), **_don(2))
+        self._prefill_jits = {
+            b: jax.jit(
+                lambda p, t, n, c, s: lm.prefill_slot(p, cfg, t, n, c, L, s),
+                **_don(3))
+            for b in ecfg.buckets()}
+        self._evict_jit = jax.jit(lambda c, ev: lm.cache_evict_rows(c, ev),
+                                  **_don(0))
+
+        self._t0 = time.monotonic()
+        self.n_steps = 0
+        self.n_prefills = 0
+        self.decode_lat: List[float] = []
+        # slot-weighted overflow accumulators, split by phase: admission
+        # composes the *decode* batch, so decode overflow is the scheduler's
+        # signal; prefill overflow is per-request and composition-free
+        self._overflow = {"prefill": [0.0, 0.0], "decode": [0.0, 0.0]}
+
+    # -- clock ---------------------------------------------------------------
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    # -- submission ----------------------------------------------------------
+
+    def validate(self, req: Request) -> None:
+        """Shape/uniqueness checks a request must pass to be servable;
+        raises ValueError otherwise (``run`` fail-fasts its whole batch
+        through this before serving anything)."""
+        buckets = self.ecfg.buckets()
+        if len(req.prompt) > buckets[-1]:
+            raise ValueError(
+                f"request {req.rid}: prompt len {len(req.prompt)} exceeds "
+                f"max prefill bucket {buckets[-1]}")
+        if len(req.prompt) + req.max_new_tokens > self.ecfg.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt + max_new_tokens exceeds "
+                f"max_len {self.ecfg.max_len}")
+        if req.rid in self._live_rids:
+            # rid keys the scheduler's hold map and the sampling RNG stream;
+            # two live requests sharing one would alias
+            raise ValueError(f"request rid {req.rid} is already queued or "
+                             f"active")
+
+    def submit(self, req: Request,
+               arrival_time: Optional[float] = None) -> None:
+        """Enqueue a request.  Its arrival is recorded on the engine clock —
+        submission time by default — in a side table (the caller's
+        ``Request.arrival_time`` offset is never mutated, so request lists
+        can be replayed on a warm engine)."""
+        self.validate(req)
+        self._live_rids.add(req.rid)
+        self._arrivals[id(req)] = (self.now() if arrival_time is None
+                                   else arrival_time)
+        self.queue.append(req)
+
+    # -- trace contexts ------------------------------------------------------
+
+    def _ctx(self):
+        es = contextlib.ExitStack()
+        if self._trace_ctx is not None:
+            es.enter_context(self._trace_ctx())
+        if self.ecfg.fff_backend != "auto":
+            es.enter_context(api.use_backend(self.ecfg.fff_backend,
+                                             mode="infer"))
+        if self.ecfg.telemetry:
+            es.enter_context(api.collect_routing())
+        return es
+
+    def _dispatch_topology(self) -> Tuple[int, Optional[float]]:
+        """(token-axis shard count, capacity factor) the live FFF dispatch
+        actually runs with — the scheduler's overflow proxy must match it,
+        not the engine's nominal config.  ``auto`` resolves through
+        ``api.resolve_backend`` (the real resolver, including supports
+        predicates), evaluated under the trace contexts because the mesh
+        accessors and overrides are trace-time thread-locals; cached — the
+        mesh is fixed for the engine's lifetime.  Capacity factor None =
+        exact per-token backend, no capacity bound to predict against."""
+        if self._topology is None:
+            from repro.distributed import act as dist_act
+            backend = self.ecfg.fff_backend
+            with self._ctx():
+                g = dist_act.data_shard_count()
+                m = dist_act.model_shard_count()
+                if backend == "auto":
+                    backend = (api.resolve_backend({}, self._site_cfg)
+                               if self._site_cfg is not None else "reference")
+            if backend in ("reference", "pallas"):
+                self._topology = (1, None)     # exact: no capacity bound
+            else:
+                shards = g * m if backend == "grouped_ep" else g
+                cf = (self.ecfg.capacity_factor
+                      if self.ecfg.capacity_factor is not None
+                      else api.default_capacity_factor(backend))
+                self._topology = (shards, cf)
+        return self._topology
+
+    # -- telemetry -----------------------------------------------------------
+
+    def _stats_rows(self, stats, phase: str) -> Optional[np.ndarray]:
+        """Merge a per-site routing-stats tuple into per-batch-row leaf
+        counts (B, E) for sites matching the engine's telemetry width, and
+        fold the slot-weighted overflow into the running per-phase mean."""
+        if stats is None or self.num_leaves == 0:
+            return None
+        counts = None
+        acc = self._overflow[phase]
+        for s in stats:
+            if s is None:
+                continue
+            c = np.asarray(s.leaf_counts, np.float64)
+            w = float(s.slots)
+            acc[0] += float(s.overflow) * w
+            acc[1] += w
+            if c.shape[-1] == self.num_leaves:
+                counts = c if counts is None else counts + c
+        return counts
+
+    def _update_occupancy(self, slot_rows: Sequence[int],
+                          counts: Optional[np.ndarray]) -> None:
+        if counts is None:
+            return
+        a = self.ecfg.occupancy_ewma
+        for r in slot_rows:
+            tot = counts[r].sum()
+            if tot <= 0:
+                continue
+            frac = counts[r] / tot
+            prev = self.occupancy[r]
+            self.occupancy[r] = frac if not prev.any() else \
+                (1.0 - a) * prev + a * frac
+
+    def overflow_mean(self, phase: Optional[str] = None) -> float:
+        """Slot-weighted mean overflow_fraction; ``phase`` in
+        {"prefill", "decode", None = both}."""
+        keys = [phase] if phase else list(self._overflow)
+        w = sum(self._overflow[k][0] for k in keys)
+        n = sum(self._overflow[k][1] for k in keys)
+        return w / n if n else 0.0
+
+    # -- sampling (host-side, deterministic under seed) ----------------------
+
+    def _sample(self, st: SlotState, logits_row: np.ndarray) -> int:
+        if st.request.temperature <= 0.0:
+            return int(logits_row.argmax())
+        rng = np.random.default_rng(
+            (self.ecfg.seed, st.request.rid, len(st.tokens)))
+        z = logits_row / st.request.temperature
+        return int((z + rng.gumbel(size=z.shape)).argmax())
+
+    def _record_token(self, st: SlotState, tok: int) -> None:
+        st.tokens.append(tok)
+        st.total_len += 1
+        req = st.request
+        if req.eos_id is not None and tok == req.eos_id:
+            st.done, st.finish_reason = True, "eos"
+        elif len(st.tokens) >= req.max_new_tokens:
+            st.done, st.finish_reason = True, "length"
+        if st.done:
+            st.finish_time = self.now()
+
+    # -- the loop ------------------------------------------------------------
+
+    def _evict_finished(self) -> None:
+        evict = np.zeros((self.ecfg.num_slots,), bool)
+        for i, st in enumerate(self.slots):
+            if st is None or not st.done:
+                continue
+            evict[i] = True
+            self.occupancy[i] = 0.0
+            # what this freed slot will decode while idle: the occupant's
+            # last NON-EOS token — replaying the EOS id itself would pile
+            # every freed slot's phantom routing onto the EOS token's leaf
+            spread = [t for t in st.tokens if t != st.request.eos_id]
+            self._free_tok[i] = (spread[-1] if spread
+                                 else int(st.request.prompt[-1]))
+            self._live_rids.discard(st.request.rid)
+            arrival = self._arrivals.pop(id(st.request), st.admitted_time)
+            self.results.append(RequestResult(
+                rid=st.request.rid, prompt=st.request.prompt,
+                tokens=np.asarray(st.tokens, np.int32),
+                finish_reason=st.finish_reason,
+                arrival_time=arrival,
+                admitted_time=st.admitted_time,
+                first_token_time=st.first_token_time,
+                finish_time=st.finish_time))
+            self.slots[i] = None
+        if evict.any():      # one dispatch frees the whole step's slots
+            self.caches = self._evict_jit(self.caches, jnp.asarray(evict))
+
+    def _bucket_for(self, n: int) -> int:
+        return next(b for b in self.ecfg.buckets() if b >= n)
+
+    def _admit(self) -> None:
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        if not free or not self.queue:
+            return
+        n = min(len(free), self.ecfg.max_prefills_per_step)
+        shards, cf = self._dispatch_topology()
+        view = SchedulerView(
+            occupancy=self.occupancy,
+            active=np.asarray([s is not None for s in self.slots]),
+            num_leaves=self.num_leaves,
+            capacity_factor=cf,
+            num_slots=self.ecfg.num_slots,
+            dispatch_shards=shards)
+        chosen = self.scheduler.select(list(self.queue), n, view)
+        for req in chosen:
+            self.queue.remove(req)
+            slot = free.pop(0)
+            L = len(req.prompt)
+            bucket = self._bucket_for(L)
+            # right-pad with the LAST real token, not a constant: pad
+            # positions are length-masked in the cache either way, but they
+            # do route through FFF sites, and the telemetry tap counts them —
+            # repeating in-distribution content keeps the seeded leaf
+            # footprint representative instead of phantom-weighted toward a
+            # fixed pad token's leaf
+            toks = np.full((1, bucket), req.prompt[-1], np.int32)
+            toks[0, :L] = req.prompt
+            with self._ctx():
+                logits, self.caches, stats = self._prefill_jits[bucket](
+                    self.params, jnp.asarray(toks), jnp.int32(L),
+                    self.caches, jnp.int32(slot))
+            logits = np.asarray(jax.block_until_ready(logits))
+            self.n_prefills += 1
+            t = self.now()
+            st = SlotState(request=req, admitted_time=t, first_token_time=t,
+                           tokens=[], total_len=L)
+            self.slots[slot] = st
+            # seed the slot's footprint: measured prefill counts (row 0 of
+            # the 1-row prefill batch), else the request's hint prior
+            counts = self._stats_rows(stats, "prefill")
+            if counts is not None and counts[0].sum() > 0:
+                self.occupancy[slot] = counts[0] / counts[0].sum()
+            elif req.leaf_hint is not None and self.num_leaves and \
+                    req.leaf_hint.size == self.num_leaves:
+                self.occupancy[slot] = req.leaf_hint / max(
+                    req.leaf_hint.sum(), 1e-9)
+            self._record_token(st, self._sample(st, logits))
+
+    def _decode(self) -> None:
+        live = [i for i, s in enumerate(self.slots)
+                if s is not None and not s.done]
+        if not live:
+            return
+        toks = self._free_tok[:, None].copy()
+        offs = np.zeros((self.ecfg.num_slots,), np.int32)
+        for i in live:
+            st = self.slots[i]
+            toks[i, 0] = st.tokens[-1]
+            offs[i] = st.total_len - 1      # position of the token being fed
+        t0 = time.monotonic()
+        with self._ctx():
+            logits, self.caches, stats = self._decode_jit(
+                self.params, jnp.asarray(toks), self.caches,
+                jnp.asarray(offs))
+        logits = np.asarray(jax.block_until_ready(logits))
+        self.decode_lat.append(time.monotonic() - t0)
+        self.n_steps += 1
+        self._update_occupancy(live, self._stats_rows(stats, "decode"))
+        for i in live:
+            self._record_token(self.slots[i], self._sample(self.slots[i],
+                                                           logits[i]))
+
+    def step(self) -> None:
+        """One engine iteration: evict finished slots, admit from the queue,
+        decode every active slot together."""
+        self._evict_finished()
+        self._admit()
+        self._decode()
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def run(self, requests: Sequence[Request]) -> Tuple[List[RequestResult],
+                                                        metrics_lib.EngineMetrics]:
+        """Serve ``requests`` (arrival_time = offsets from THIS call's start,
+        seconds) to completion; returns (results sorted by rid, metrics).
+        Re-entrant: each call reports only its own requests/steps and rebases
+        arrivals onto its own start — ``Request.arrival_time`` offsets are
+        never mutated, so the same list replays (jit caches and slot state
+        persist: a later wave is a warm engine, not a fresh one)."""
+        for r in requests:            # fail fast, before serving anything
+            self.validate(r)
+        if len({r.rid for r in requests}) != len(requests):
+            raise ValueError("duplicate rids in the request batch")
+        pending = deque(sorted(requests,
+                               key=lambda r: (r.arrival_time, r.rid)))
+        # per-run deltas against the engine-lifetime accumulators
+        n_results0, n_steps0 = len(self.results), self.n_steps
+        n_prefills0, n_lat0 = self.n_prefills, len(self.decode_lat)
+        ovf0 = {k: list(v) for k, v in self._overflow.items()}
+        t_start = self.now()
+        while pending or self.has_work():
+            while pending and t_start + pending[0].arrival_time <= self.now():
+                r = pending.popleft()
+                self.submit(r, arrival_time=t_start + r.arrival_time)
+            if not self.has_work():
+                if pending:
+                    time.sleep(min(
+                        max(t_start + pending[0].arrival_time - self.now(),
+                            0.0), 0.05))
+                continue
+            self.step()
+        elapsed = self.now() - t_start
+        results = sorted(self.results[n_results0:], key=lambda r: r.rid)
+        # drain this run's slice so a long-lived warm engine doesn't grow
+        # without bound across waves (earlier entries belong to manual
+        # step() users and are left alone)
+        del self.results[n_results0:]
+        lat = self.decode_lat[n_lat0:]
+        del self.decode_lat[n_lat0:]
+
+        def ovf_delta(keys):
+            w = sum(self._overflow[k][0] - ovf0[k][0] for k in keys)
+            n = sum(self._overflow[k][1] - ovf0[k][1] for k in keys)
+            return w / n if n else 0.0
+
+        m = metrics_lib.from_results(
+            results, elapsed_s=elapsed, n_steps=self.n_steps - n_steps0,
+            n_prefills=self.n_prefills - n_prefills0,
+            decode_lat_s=lat,
+            overflow_mean=ovf_delta(list(self._overflow)),
+            overflow_decode_mean=ovf_delta(["decode"]))
+        return results, m
+
+    # -- fixed-shape accounting ----------------------------------------------
+
+    def compiled_shapes(self) -> Dict[str, int]:
+        """Number of compiled traces per entry point (the fixed-shape
+        contract: after warmup, decode == 1 and each prefill bucket <= 1)."""
+        def n(fn):
+            try:
+                return int(fn._cache_size())
+            except AttributeError:           # pragma: no cover - old jax
+                return -1
+        out = {"decode": n(self._decode_jit), "evict": n(self._evict_jit)}
+        for b, fn in self._prefill_jits.items():
+            out[f"prefill_{b}"] = n(fn)
+        return out

@@ -1,0 +1,119 @@
+"""Latency/throughput summaries shared by the serving engine and the legacy
+``launch/serve.py`` loop (ISSUE 3 satellite: serve reported mean-only).
+
+All inputs are seconds; summaries render in milliseconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencySummary:
+    n: int
+    mean_ms: float
+    p50_ms: float
+    p90_ms: float
+    p99_ms: float
+    max_ms: float
+
+    def line(self, label: str) -> str:
+        return (f"{label}: p50 {self.p50_ms:.2f}ms p90 {self.p90_ms:.2f}ms "
+                f"p99 {self.p99_ms:.2f}ms mean {self.mean_ms:.2f}ms "
+                f"max {self.max_ms:.2f}ms (n={self.n})")
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def summarize(samples_s: Sequence[float]) -> LatencySummary:
+    """Percentile summary of latency samples (seconds in, ms out)."""
+    a = np.asarray(list(samples_s), np.float64)
+    if a.size == 0:
+        return LatencySummary(0, 0.0, 0.0, 0.0, 0.0, 0.0)
+    ms = a * 1e3
+    return LatencySummary(
+        n=int(a.size), mean_ms=float(ms.mean()),
+        p50_ms=float(np.percentile(ms, 50)),
+        p90_ms=float(np.percentile(ms, 90)),
+        p99_ms=float(np.percentile(ms, 99)),
+        max_ms=float(ms.max()))
+
+
+def tokens_per_second(n_tokens: int, elapsed_s: float) -> float:
+    return n_tokens / max(elapsed_s, 1e-9)
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Aggregate engine telemetry, filled by ``engine.run`` /
+    per-``RequestResult`` bookkeeping."""
+    n_requests: int = 0
+    n_tokens: int = 0
+    elapsed_s: float = 0.0
+    n_steps: int = 0
+    n_prefills: int = 0
+    ttft: LatencySummary = dataclasses.field(
+        default_factory=lambda: summarize(()))
+    per_token: LatencySummary = dataclasses.field(
+        default_factory=lambda: summarize(()))
+    e2e: LatencySummary = dataclasses.field(
+        default_factory=lambda: summarize(()))
+    decode_step: LatencySummary = dataclasses.field(
+        default_factory=lambda: summarize(()))
+    overflow_fraction_mean: float = 0.0
+    overflow_decode_mean: float = 0.0    # decode-phase only: the scheduler's
+                                         # microbatch-composition signal
+
+    @property
+    def throughput_tok_s(self) -> float:
+        return tokens_per_second(self.n_tokens, self.elapsed_s)
+
+    def report(self) -> str:
+        lines = [
+            f"served {self.n_requests} requests, {self.n_tokens} tokens in "
+            f"{self.elapsed_s:.2f}s ({self.throughput_tok_s:.1f} tok/s, "
+            f"{self.n_steps} decode steps, {self.n_prefills} prefills)",
+            self.ttft.line("ttft"),
+            self.per_token.line("per-token"),
+            self.e2e.line("e2e"),
+            self.decode_step.line("decode step"),
+            f"fff overflow_fraction mean {self.overflow_fraction_mean:.4f} "
+            f"(decode-only {self.overflow_decode_mean:.4f})",
+        ]
+        return "\n".join(lines)
+
+    def as_dict(self) -> dict:
+        return {
+            "n_requests": self.n_requests, "n_tokens": self.n_tokens,
+            "elapsed_s": self.elapsed_s, "n_steps": self.n_steps,
+            "n_prefills": self.n_prefills,
+            "throughput_tok_s": self.throughput_tok_s,
+            "ttft_ms": self.ttft.as_dict(),
+            "per_token_ms": self.per_token.as_dict(),
+            "e2e_ms": self.e2e.as_dict(),
+            "decode_step_ms": self.decode_step.as_dict(),
+            "overflow_fraction_mean": self.overflow_fraction_mean,
+            "overflow_decode_mean": self.overflow_decode_mean,
+        }
+
+
+def from_results(results: Iterable, *, elapsed_s: float, n_steps: int,
+                 n_prefills: int, decode_lat_s: Sequence[float],
+                 overflow_mean: float,
+                 overflow_decode_mean: float = 0.0) -> EngineMetrics:
+    """Build an ``EngineMetrics`` from finished ``RequestResult`` records."""
+    rs = list(results)
+    return EngineMetrics(
+        n_requests=len(rs),
+        n_tokens=sum(r.n_generated for r in rs),
+        elapsed_s=elapsed_s, n_steps=n_steps, n_prefills=n_prefills,
+        ttft=summarize([r.ttft for r in rs]),
+        per_token=summarize([r.per_token_latency() for r in rs]),
+        e2e=summarize([r.e2e_latency for r in rs]),
+        decode_step=summarize(decode_lat_s),
+        overflow_fraction_mean=overflow_mean,
+        overflow_decode_mean=overflow_decode_mean)

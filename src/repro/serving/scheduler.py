@@ -1,0 +1,166 @@
+"""Admission schedulers for the continuous-batching engine (DESIGN.md §9).
+
+``select(waiting, n_free, view)`` picks which waiting requests to admit into
+free cache slots this step.  The engine passes a ``SchedulerView`` of its
+live FFF telemetry; schedulers are pure host-side policy (numpy only) so new
+ones need no jax knowledge.
+
+Built-ins:
+
+* ``fcfs`` — strict arrival order.
+* ``leaf_aware`` — FFF-composition-aware: grouped/grouped_ep serving drops
+  (or dense-repairs) tokens past per-leaf capacity, and which tokens share a
+  microbatch decides that overflow (Fast Feedforward Networks, 2023; skewed
+  leaf load is the failure mode the load-balancing follow-up targets).  The
+  scheduler greedily admits, from a bounded look-ahead window, the candidate
+  whose predicted leaf footprint (its ``leaf_hint`` prior, or live EWMA
+  occupancy once measured) minimizes predicted capacity overflow of the
+  composed batch.  A hold counter bounds how often the queue head can be
+  bypassed, so no request starves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class SchedulerView:
+    """What the engine exposes to admission policy each step.
+
+    occupancy: (num_slots, E) float64 — per-slot EWMA leaf-footprint
+               fractions (rows of active slots sum to ~1; free rows are 0)
+    active:    (num_slots,) bool
+    num_leaves: E of the telemetry (0 = no FFF telemetry; leaf_aware then
+               degrades to FCFS)
+    capacity_factor: the serving capacity factor the dispatch runs with
+    num_slots: total cache slots (the decode dispatch batch is always this
+               size — free slots decode a dummy token)
+    dispatch_shards: how many ways the dispatch splits the token axis —
+               the data-shard count G for local grouped dispatch, G·M for
+               grouped_ep (capacity is per *source shard* there, DESIGN.md
+               §5); 1 unmeshed
+    """
+    occupancy: np.ndarray
+    active: np.ndarray
+    num_leaves: int
+    capacity_factor: Optional[float]     # None = exact backend, no bound
+    num_slots: int
+    dispatch_shards: int = 1
+
+    def leaf_capacity(self) -> float:
+        """Whole-batch per-leaf slot capacity of one decode dispatch: the
+        dispatch layer's own per-(shard, leaf) law (``dispatch.ep_capacity``,
+        shared by ``grouped_leaf_apply``) times the shard count — with
+        tokens split roughly evenly, the per-shard floor multiplies.
+        Infinite for exact (capacity-unbounded) backends: the leaf_aware
+        objective then reduces to its max-load balancing term."""
+        if self.num_leaves <= 0 or self.capacity_factor is None:
+            return float("inf")
+        from repro.distributed import dispatch as dispatch_lib
+        shards = max(self.dispatch_shards, 1)
+        per_shard = -(-self.num_slots // shards)             # ceil
+        return float(dispatch_lib.ep_capacity(
+            per_shard, self.num_leaves, self.capacity_factor) * shards)
+
+
+class Scheduler:
+    name = "base"
+
+    def select(self, waiting: Sequence[Request], n_free: int,
+               view: SchedulerView) -> List[Request]:
+        raise NotImplementedError
+
+
+class FCFSScheduler(Scheduler):
+    """First-come-first-served: admit in arrival order."""
+    name = "fcfs"
+
+    def select(self, waiting, n_free, view):
+        return list(waiting[:n_free])
+
+
+class LeafAwareScheduler(Scheduler):
+    """Greedy leaf-load-balancing admission (module docstring).
+
+    window:   how deep into the queue the policy may look (bounds both
+              unfairness and per-step host cost)
+    max_hold: after this many bypasses the queue head is force-admitted
+              (the no-starvation bound: head waits at most ``max_hold``
+              admission rounds beyond FCFS)
+    """
+    name = "leaf_aware"
+
+    def __init__(self, window: int = 16, max_hold: int = 8):
+        self.window = window
+        self.max_hold = max_hold
+        self._holds: Dict[int, int] = {}
+
+    def _footprint(self, req: Request, E: int) -> np.ndarray:
+        h = req.leaf_hint
+        if h is None or h.size != E or h.sum() <= 0:
+            return np.full((E,), 1.0 / E)
+        return h / h.sum()
+
+    @staticmethod
+    def _overflow(load: np.ndarray, cap: float) -> float:
+        return float(np.maximum(load - cap, 0.0).sum())
+
+    def select(self, waiting, n_free, view):
+        if view.num_leaves <= 0 or not waiting:
+            return list(waiting[:n_free])
+        E = view.num_leaves
+        cap = view.leaf_capacity()
+        # current per-leaf load of the composed decode batch, in routed
+        # slots per step (each active slot ≈ its footprint row)
+        load = view.occupancy[view.active].sum(axis=0) if view.active.any() \
+            else np.zeros((E,))
+        pool = list(waiting[: max(self.window, n_free)])
+        chosen: List[Request] = []
+        for _ in range(min(n_free, len(waiting))):
+            if not pool:
+                break
+            head = pool[0]
+            if self._holds.get(head.rid, 0) >= self.max_hold:
+                pick = 0                                  # starvation guard
+            else:
+                # lexicographic: predicted overflow, then max-leaf load
+                # (balance below the capacity threshold too — headroom),
+                # then arrival order (stable/deterministic)
+                costs = []
+                for i, r in enumerate(pool):
+                    nl = load + self._footprint(r, E)
+                    costs.append((self._overflow(nl, cap), float(nl.max()), i))
+                pick = min(costs)[2]
+            req = pool.pop(pick)
+            load = load + self._footprint(req, E)
+            chosen.append(req)
+        chosen_ids = {r.rid for r in chosen}
+        # bump hold counters for bypassed waiters ahead of any chosen one
+        for r in waiting:
+            if r.rid in chosen_ids:
+                break
+            self._holds[r.rid] = self._holds.get(r.rid, 0) + (1 if chosen
+                                                              else 0)
+        for r in chosen:
+            self._holds.pop(r.rid, None)
+        return chosen
+
+
+SCHEDULERS = {
+    "fcfs": FCFSScheduler,
+    "leaf_aware": LeafAwareScheduler,
+}
+
+
+def make_scheduler(name: str, **kw) -> Scheduler:
+    try:
+        cls = SCHEDULERS[name]
+    except KeyError:
+        raise KeyError(f"unknown scheduler {name!r}; have "
+                       f"{sorted(SCHEDULERS)}") from None
+    return cls(**kw)
