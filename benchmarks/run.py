@@ -12,6 +12,9 @@
   serving -> continuous-batching engine under Poisson load, fcfs vs
              leaf_aware admission: throughput / TTFT / per-token latency /
              overflow_fraction (DESIGN.md §9; writes BENCH_serving.json)
+  serving_chunked -> chunked vs monolithic prefill under long-prompt
+             arrivals: decode-interval p99 / throughput / TTFT
+             (DESIGN.md §9; writes BENCH_serving_chunked.json)
 
 ``python -m benchmarks.run`` runs the quick profile (CPU-sized, ~minutes);
 ``python -m benchmarks.run --full`` runs the paper-scale grids.
@@ -30,11 +33,13 @@ def main() -> None:
                     help="paper-scale grids (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,fig2,table2,fig34,"
-                         "table3,roofline,ep_dispatch,serving")
+                         "table3,roofline,ep_dispatch,serving,"
+                         "serving_chunked")
     args = ap.parse_args()
 
     from benchmarks import (ep_dispatch, fig2, fig34, roofline_bench,
-                            serving_load, table1, table2, table3)
+                            serving_chunked, serving_load, table1, table2,
+                            table3)
     suites = {
         "table1": table1.main,
         "fig2": fig2.main,
@@ -44,6 +49,7 @@ def main() -> None:
         "roofline": roofline_bench.main,
         "ep_dispatch": ep_dispatch.main,
         "serving": serving_load.main,
+        "serving_chunked": serving_chunked.main,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     failures = []

@@ -1,0 +1,191 @@
+"""Chunked-prefill benchmark: decode latency under long-prompt admission
+(ISSUE 4 tentpole; DESIGN.md §9).
+
+Workload: short interactive requests decode continuously while BURSTS of
+long prompts (batch-job shape: 256-token prompt, few output tokens) arrive
+mid-run.  Under monolithic prefill a burst runs up to ``burst`` full-prompt
+dispatches back-to-back between two decode steps, so every in-flight
+request's inter-token latency spikes by the whole burst's prefill cost;
+chunked prefill advances all of the burst's prompts *together* through one
+``(num_slots, chunk)`` slab per step — the per-step added work is one slab
+whatever the burst size, and the concurrent prefills amortize the slab's
+fixed rows.
+
+The headline comparison is **decode-interval p99** (gap between consecutive
+decode dispatches while work is in flight — what a streaming client
+experiences as a stall) at equal offered load: same request list, same
+arrivals, same slot count.  Throughput and TTFT ride along so the trade is
+visible.
+
+Measurement note: this container throttles CPU in bursts (a bare decode
+dispatch jitters 5ms p50 -> 35ms p95), so a single run's p99 mostly samples
+the scheduler, not the engine.  Each mode therefore runs ``REPEATS`` times
+and the BEST (minimum-p99) run is compared: the monolithic admission stall
+is *structural* — its burst-prefill gap is real work and survives
+minimization — while throttle noise does not.  The JSON artifact also
+records the deterministic per-gap admission bound in tokens
+(``stall_bound_tokens``): burst x prompt_len for monolithic vs
+budget x num_slots x chunk for chunked — the structural claim independent
+of wall-clock noise.
+
+Emits CSV rows
+``serving_chunked,<mode>,<tok_s>,<interval_p50_ms>,<interval_p99_ms>,
+<ttft_p50_ms>,<n_chunks>`` and writes
+``experiments/BENCH_serving_chunked.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+ARTIFACT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "BENCH_serving_chunked.json")
+
+LONG_LEN = 256          # long prompts: the stall source
+SHORT_LO, SHORT_HI = 4, 16
+CHUNK = 32
+PREFILL_BUDGET = 1      # chunk-slab dispatches per engine step
+REPEATS = 5             # best-of-N per mode (see measurement note above)
+
+
+def _model(seed: int = 0, max_len: int = 288):
+    from repro.configs import registry
+    from repro.models import lm
+    # d_model=512 (8x the test-reduced size): the admission stall must
+    # dwarf both per-dispatch host overhead AND this container's ~25ms
+    # sporadic dispatch-latency tail for p99 to measure prefill policy
+    # rather than OS noise — at the smoke-test size a full 256-token
+    # prefill costs about the same as one chunk slab and there is nothing
+    # to win (measured: prefill(1,256) ~14ms, chunk slab ~9ms, decode ~3ms
+    # at this size, so a 4-prompt monolithic burst stalls ~60ms)
+    cfg = registry.get_config("internlm2-20b", ffn="fff").reduced(
+        d_model=512, n_heads=8, seq=max(320, max_len))
+    params = lm.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def make_workload(vocab: int, *, n_short: int, gen_short: int, burst: int,
+                  n_bursts: int, gen_long: int, seed: int):
+    """``n_short`` interactive requests arrive at t=0 and decode throughout;
+    ``n_bursts`` bursts of ``burst`` long prompts land while they are
+    mid-decode — each burst is the admission-stall event."""
+    from repro.data import tokens as tokens_lib
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    src = tokens_lib.MarkovTokenSource(vocab, seed=seed)
+    reqs = []
+    for i in range(n_short):
+        L = int(rng.integers(SHORT_LO, SHORT_HI + 1))
+        reqs.append(Request(
+            rid=i, prompt=src.sample(1, L, seed=seed + 1 + i)[0, :L],
+            max_new_tokens=gen_short, arrival_time=0.0))
+    rid = n_short
+    for b in range(n_bursts):
+        for _ in range(burst):
+            reqs.append(Request(
+                rid=rid,
+                prompt=src.sample(1, LONG_LEN,
+                                  seed=seed + 100 + rid)[0, :LONG_LEN],
+                max_new_tokens=gen_long,
+                arrival_time=0.05 + 0.22 * b))
+            rid += 1
+    return reqs
+
+
+def run_one(params, cfg, reqs, *, chunk: int, slots: int, max_len: int,
+            seed: int):
+    """Serve ``reqs`` REPEATS times on a warm engine; return the run with
+    the best decode-interval p99 (plus the compiled-shape counts)."""
+    from repro.serving import ContinuousBatchingEngine, EngineConfig
+    ecfg = EngineConfig(
+        num_slots=slots,
+        max_len=max_len,
+        max_prompt_len=LONG_LEN,
+        prefill_chunk=chunk,
+        prefill_budget=PREFILL_BUDGET,
+        max_prefills_per_step=slots,
+        seed=seed)
+    engine = ContinuousBatchingEngine(params, cfg, ecfg)
+    # warmup: compile every entry point on a throwaway request so the timed
+    # runs measure steady-state dispatches, not compiles
+    warm = [type(reqs[0])(rid=10_000, prompt=reqs[-1].prompt.copy(),
+                          max_new_tokens=2),
+            type(reqs[0])(rid=10_001, prompt=reqs[0].prompt.copy(),
+                          max_new_tokens=2)]
+    engine.run(warm)
+    runs = [engine.run(reqs)[1] for _ in range(REPEATS)]
+    # best-of-N: structural admission stalls survive minimization, CPU
+    # throttle windows do not (module docstring, measurement note)
+    best = min(runs, key=lambda m: m.decode_interval.p99_ms)
+    return best, engine.compiled_shapes()
+
+
+def main(quick: bool = True) -> None:
+    seed = 0
+    # 2 interactive streams + 4 spare slots: a whole burst prefills
+    # concurrently, sharing (and filling) the chunk slab's fixed rows —
+    # and the 4-prompt monolithic burst (~60ms at this size) clears the
+    # container's throttle-noise ceiling
+    n_short, burst = 2, 4
+    slots = n_short + burst
+    gen_short = 192 if quick else 384
+    n_bursts = 4 if quick else 8
+    gen_long = 4
+    max_len = max(SHORT_HI + gen_short, LONG_LEN + gen_long) + 1
+
+    cfg, params = _model(seed, max_len=max_len)
+    reqs = make_workload(cfg.vocab_size, n_short=n_short,
+                         gen_short=gen_short, burst=burst,
+                         n_bursts=n_bursts, gen_long=gen_long, seed=seed + 1)
+    print(f"# {n_short} short (len {SHORT_LO}-{SHORT_HI}, gen {gen_short}) + "
+          f"{n_bursts} bursts of {burst} long (len {LONG_LEN}, gen "
+          f"{gen_long}), {slots} slots, chunk {CHUNK}")
+    print("# name,mode,tok_s,interval_p50_ms,interval_p99_ms,ttft_p50_ms,"
+          "n_chunks")
+
+    runs = {}
+    for mode, chunk in (("monolithic", 0), ("chunked", CHUNK)):
+        m, shapes = run_one(params, cfg, reqs, chunk=chunk, slots=slots,
+                            max_len=max_len, seed=seed)
+        print(f"serving_chunked,{mode},{m.throughput_tok_s:.1f},"
+              f"{m.decode_interval.p50_ms:.2f},{m.decode_interval.p99_ms:.2f},"
+              f"{m.ttft.p50_ms:.2f},{m.n_chunks}", flush=True)
+        runs[mode] = {"prefill_chunk": chunk, "compiled_shapes": shapes,
+                      **m.as_dict()}
+
+    mono, chk = runs["monolithic"], runs["chunked"]
+    p99_drop = 1.0 - chk["decode_interval_ms"]["p99_ms"] / max(
+        mono["decode_interval_ms"]["p99_ms"], 1e-9)
+    tput_ratio = chk["throughput_tok_s"] / max(mono["throughput_tok_s"], 1e-9)
+    verdict = p99_drop > 0.0
+    print(f"# decode-interval p99: chunked "
+          f"{chk['decode_interval_ms']['p99_ms']:.2f}ms vs monolithic "
+          f"{mono['decode_interval_ms']['p99_ms']:.2f}ms "
+          f"({p99_drop:+.0%} change) at {tput_ratio:.2f}x throughput -> "
+          f"{'LOWER' if verdict else 'NOT LOWER'}")
+
+    # the deterministic structural claim: max admission tokens that can land
+    # between two decode dispatches (independent of wall-clock noise)
+    stall_bound = {"monolithic": burst * LONG_LEN,
+                   "chunked": PREFILL_BUDGET * slots * CHUNK}
+    print(f"# structural stall bound (admission tokens per decode gap): "
+          f"monolithic {stall_bound['monolithic']} vs chunked "
+          f"{stall_bound['chunked']}")
+
+    with open(ARTIFACT, "w") as f:
+        json.dump({"bench": "serving_chunked", "quick": quick,
+                   "slots": slots, "chunk": CHUNK, "long_len": LONG_LEN,
+                   "n_short": n_short, "burst": burst, "n_bursts": n_bursts,
+                   "gen_short": gen_short, "gen_long": gen_long,
+                   "decode_interval_p99_drop": p99_drop,
+                   "throughput_ratio_chunked_over_mono": tput_ratio,
+                   "stall_bound_tokens": stall_bound,
+                   "runs": runs}, f, indent=1)
+    print(f"# wrote {ARTIFACT}")
+
+
+if __name__ == "__main__":
+    main()

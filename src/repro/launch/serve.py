@@ -5,8 +5,12 @@ fixed-batch loop (``--engine off``).
 pluggable admission scheduling (``--scheduler fcfs|leaf_aware``), a
 slot-pooled KV-cache and interleaved prefill/decode over fixed compiled
 shapes — requests of mixed lengths arrive, finish and free their slots
-independently (DESIGN.md §9).  ``--engine off`` keeps the original
-synchronous batched prefill + decode demo loop.
+independently (DESIGN.md §9).  ``--prefill-chunk N`` switches admission to
+chunked prefill: long prompts advance N tokens per step instead of running
+one monolithic prefill between decode steps (stall-free admission; tune with
+``--prefill-budget`` / ``--max-prefilling``).  ``--engine off`` keeps the
+original synchronous batched prefill + decode demo loop.  Operator guide:
+docs/serving.md.
 
 Both paths report p50/p90/p99 latency and tokens/s through
 ``repro.serving.metrics`` and steer every FFF site's execution strategy with
@@ -44,7 +48,9 @@ from repro.serving.request import Request
 from repro.serving.scheduler import SCHEDULERS
 
 
-def parse_args(argv=None) -> argparse.Namespace:
+def build_parser() -> argparse.ArgumentParser:
+    """The serving CLI (docs/serving.md documents every flag; the docs CI
+    job cross-checks that list against this parser)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-20b",
                     choices=list(registry.ARCH_IDS))
@@ -61,6 +67,25 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--scheduler", default="fcfs",
                     choices=sorted(SCHEDULERS),
                     help="admission policy for --engine continuous")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="engine: >0 = chunked prefill — prompts advance "
+                         "this many tokens per (num_slots, chunk) slab "
+                         "dispatch, interleaved with decode so long-prompt "
+                         "admission never stalls in-flight decode (power of "
+                         "two <= --prompt-len; 0 = monolithic per-bucket "
+                         "prefill)")
+    ap.add_argument("--prefill-budget", type=int, default=1,
+                    help="engine: max chunk-slab dispatches per step when "
+                         "--prefill-chunk > 0 (higher = faster admission / "
+                         "TTFT, longer decode intervals / p99)")
+    ap.add_argument("--max-prefilling", type=int, default=0,
+                    help="scheduler: cap on slots concurrently mid-chunked-"
+                         "prefill (0 = uncapped); the admission-side "
+                         "TTFT-vs-p99 knob")
+    ap.add_argument("--metrics-json", default="",
+                    help="engine: write the run's EngineMetrics (+ compiled-"
+                         "shape counts) as JSON to this path — the "
+                         "autoscaling-signal schema (docs/serving.md)")
     ap.add_argument("--batch", type=int, default=4,
                     help="fixed batch (legacy) / cache slots (engine)")
     ap.add_argument("--requests", type=int, default=0,
@@ -76,7 +101,11 @@ def parse_args(argv=None) -> argparse.Namespace:
                          "a (data, model) mesh over all devices so FFF "
                          "sites serve expert-parallel (grouped_ep)")
     ap.add_argument("--seed", type=int, default=0)
-    return ap.parse_args(argv)
+    return ap
+
+
+def parse_args(argv=None) -> argparse.Namespace:
+    return build_parser().parse_args(argv)
 
 
 def _setup(args):
@@ -98,11 +127,16 @@ def _setup(args):
 def run_engine(args) -> None:
     cfg, params, mesh_ctx = _setup(args)
     eos = args.eos_id if args.eos_id >= 0 else None
+    sched_kw = ({"max_prefilling": args.max_prefilling}
+                if args.max_prefilling > 0 else {})
     ecfg = EngineConfig(
         num_slots=args.batch,
         max_len=args.prompt_len + args.gen + 1,
         max_prompt_len=args.prompt_len,
         scheduler=args.scheduler,
+        scheduler_kw=sched_kw,
+        prefill_chunk=args.prefill_chunk,
+        prefill_budget=args.prefill_budget,
         fff_backend=args.fff_backend,
         seed=args.seed)
     engine = ContinuousBatchingEngine(params, cfg, ecfg, trace_ctx=mesh_ctx)
@@ -118,13 +152,23 @@ def run_engine(args) -> None:
         prompt = src.sample(1, L, seed=args.seed + 1 + i)[0, :L]
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=args.gen,
                             eos_id=eos))
+    mode = (f"chunked prefill (chunk={args.prefill_chunk}, "
+            f"budget={args.prefill_budget})" if args.prefill_chunk
+            else "monolithic prefill")
     print(f"engine: {args.batch} slots, {n} requests, prompt lens "
           f"{min(len(r.prompt) for r in reqs)}-"
           f"{max(len(r.prompt) for r in reqs)}, scheduler={args.scheduler}, "
-          f"fff backend={args.fff_backend} requested")
+          f"{mode}, fff backend={args.fff_backend} requested")
     _, m = engine.run(reqs)
     print(m.report())
     print(f"compiled shapes: {engine.compiled_shapes()}")
+    if args.metrics_json:
+        import json
+        payload = m.as_dict()
+        payload["compiled_shapes"] = engine.compiled_shapes()
+        with open(args.metrics_json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote metrics to {args.metrics_json}")
 
 
 def run_legacy(args) -> None:

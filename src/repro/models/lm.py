@@ -173,17 +173,22 @@ def prefill_padded(params: Params, cfg: ModelConfig, batch: dict,
 
 def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
                 caches: list[dict], pos_offset: jax.Array | int = 0,
-                *, with_stats: bool = False):
+                *, write_mask: Optional[jax.Array] = None,
+                with_stats: bool = False):
     """One serve step: token (B, 1) int32 -> logits (B, V), updated caches.
 
     ``pos_offset`` may be per-row (B,) for continuous batching (slots sit at
     different positions; only learned positional embeddings consume it — RoPE
-    reads per-row positions off the KV cache lengths).  With
+    reads per-row positions off the KV cache lengths).  ``write_mask`` (B,)
+    bool, optional: rows where it is False compute logits but neither write
+    K/V nor advance their cache length — the engine decodes its full slot
+    batch while some slots are mid-chunked-prefill (DESIGN.md §9).  With
     ``with_stats=True`` also returns the per-site routing-stats tuple from
     the ``api.collect_routing`` tap (None when no tap is active)."""
     x = _embed_inputs(params, cfg, {"tokens": token}, pos_offset=pos_offset)
     x, caches, aux = transformer.stack_forward(params["stack"], cfg, x,
-                                               mode="decode", caches=caches)
+                                               mode="decode", caches=caches,
+                                               decode_mask=write_mask)
     logits = _head(params, cfg, x)
     if with_stats:
         return logits[:, 0], caches, aux.get("routing")
@@ -264,6 +269,39 @@ def prefill_slot(params: Params, cfg: ModelConfig, tokens: jax.Array,
         params, cfg, {"tokens": tokens}, small,
         jnp.reshape(jnp.asarray(true_len, jnp.int32), (1,)))
     return logits[0], cache_insert(caches, small, slot), stats
+
+
+def prefill_chunk(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                  valid_len: jax.Array, caches: list[dict],
+                  pos_offset: jax.Array) -> tuple[jax.Array, list[dict], Any]:
+    """Consume one chunk of prefill for every row of a pooled cache at once
+    (chunked prefill, DESIGN.md §9).
+
+    ``tokens`` is a fixed-shape (B, C) slab — B = num_slots, C = the engine's
+    ``prefill_chunk`` — so ALL in-flight prefills advance in ONE dispatch
+    that compiles exactly once.  ``valid_len`` (B,) int32 in [0, C] is each
+    row's real token count this chunk (0 = the slot has no prefill work;
+    its slab row is in-distribution filler).  ``pos_offset`` (B,) is each
+    row's absolute start position — the number of prompt tokens already
+    consumed — and must equal the row's current attention-cache length
+    (the caller tracks both; they advance in lockstep).
+
+    Each row's valid tokens are appended to its cache at
+    ``pos_offset[b]..`` and attend causally to the row's full history;
+    pad positions and inactive rows write nothing (``chunk_into_cache``
+    drops their scatter indices) and their outputs are garbage the caller
+    ignores.  Returns (logits (B, V) at each row's LAST VALID chunk
+    position — the next-token logits for rows whose prompt completes this
+    chunk — updated caches, routing stats).  Attention mixers only, like
+    ``prefill_padded``."""
+    x = _embed_inputs(params, cfg, {"tokens": tokens}, pos_offset=pos_offset)
+    x, caches, aux = transformer.stack_forward(
+        params["stack"], cfg, x, mode="chunk", caches=caches,
+        chunk_valid=valid_len)
+    last_idx = jnp.clip(valid_len - 1, 0)[:, None, None].astype(jnp.int32)
+    last = jnp.take_along_axis(x, last_idx, axis=1)               # (B, 1, D)
+    logits = _head(params, cfg, last)
+    return logits[:, 0], caches, aux.get("routing")
 
 
 def generate(params: Params, cfg: ModelConfig, prompt: jax.Array,

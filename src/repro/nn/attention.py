@@ -253,14 +253,45 @@ def prefill_into_cache(cache: KVCache, k: jax.Array, v: jax.Array) -> KVCache:
     return KVCache(new_k, new_v, jnp.full_like(cache.length, S))
 
 
-def append_to_cache(cache: KVCache, k1: jax.Array, v1: jax.Array) -> KVCache:
-    """Append one token (B, 1, K, hd) at each sequence's current length."""
+def append_to_cache(cache: KVCache, k1: jax.Array, v1: jax.Array,
+                    write_mask: Optional[jax.Array] = None) -> KVCache:
+    """Append one token (B, 1, K, hd) at each sequence's current length.
+
+    ``write_mask`` (B,) bool, optional: rows where it is False neither write
+    K/V nor advance ``length`` (their write index is pushed out of bounds and
+    dropped).  The continuous-batching engine uses this to decode a full
+    ``(num_slots, 1)`` batch while some slots are mid-chunked-prefill — those
+    rows' caches must not be perturbed by the dummy decode token.
+
+    This is the C = 1 case of ``chunk_into_cache`` (write_mask == that
+    row's valid_len), delegated so the masked-scatter/length invariant
+    lives in one place."""
     B = k1.shape[0]
-    idx = cache.length                                            # (B,)
-    bidx = jnp.arange(B)
-    new_k = cache.k.at[bidx, idx].set(k1[:, 0].astype(cache.k.dtype))
-    new_v = cache.v.at[bidx, idx].set(v1[:, 0].astype(cache.v.dtype))
-    return KVCache(new_k, new_v, cache.length + 1)
+    valid = (jnp.ones((B,), jnp.int32) if write_mask is None
+             else write_mask.astype(jnp.int32))
+    return chunk_into_cache(cache, k1, v1, valid)
+
+
+def chunk_into_cache(cache: KVCache, k: jax.Array, v: jax.Array,
+                     valid_len: jax.Array) -> KVCache:
+    """Write a chunk (B, C, K, hd) at each row's current length (chunked
+    prefill, DESIGN.md §9).
+
+    Row b's first ``valid_len[b]`` positions land at
+    ``length[b] .. length[b] + valid_len[b] - 1``; the rest of the chunk is
+    padding whose write indices are pushed out of bounds and dropped, so
+    rows with no prefill work this step (``valid_len == 0``) are untouched.
+    ``length`` advances by ``valid_len``."""
+    B, C = k.shape[:2]
+    S = cache.k.shape[1]
+    col = jnp.arange(C)[None, :]                                  # (1, C)
+    idx = cache.length[:, None] + col                             # (B, C)
+    idx = jnp.where(col < valid_len[:, None], idx, S)  # pad/inactive: drop
+    bidx = jnp.arange(B)[:, None]
+    new_k = cache.k.at[bidx, idx].set(k.astype(cache.k.dtype), mode="drop")
+    new_v = cache.v.at[bidx, idx].set(v.astype(cache.v.dtype), mode="drop")
+    return KVCache(new_k, new_v,
+                   cache.length + valid_len.astype(cache.length.dtype))
 
 
 def decode_attend(q1: jax.Array, cache: KVCache, *, sliding_window: int = 0
@@ -288,6 +319,35 @@ def decode_attend(q1: jax.Array, cache: KVCache, *, sliding_window: int = 0
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgp,bpkd->bkgd", p, cache.v.astype(jnp.float32))
     return o.reshape(B, 1, H, hd).astype(q1.dtype)
+
+
+def chunk_attend(q: jax.Array, cache: KVCache, start: jax.Array, *,
+                 sliding_window: int = 0) -> jax.Array:
+    """Chunk attention against the cache with per-row positions.
+
+    q (B, C, H, hd) holds the chunk's queries; row b's query i sits at
+    absolute position ``start[b] + i`` and attends to cache positions
+    ``<= start[b] + i`` — the row's history (previous chunks, already in the
+    cache) plus the chunk's own causal prefix (this chunk's K/V must already
+    be written at ``start[b]..``; see ``chunk_into_cache``).  Like
+    ``decode_attend``, the GQA contraction stays on the K axis and the mask
+    is per-row, so rows of one batch may sit at different offsets."""
+    B, C, H, hd = q.shape
+    K = cache.k.shape[2]
+    G = H // K
+    S = cache.k.shape[1]
+    qg = q.reshape(B, C, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bckgd,bpkd->bkgcp", qg, cache.k.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    qpos = start[:, None] + jnp.arange(C)[None, :]                # (B, C)
+    kpos = jnp.arange(S)[None, None, :]                           # (1, 1, S)
+    valid = kpos <= qpos[:, :, None]                              # (B, C, S)
+    if sliding_window > 0:
+        valid &= kpos > qpos[:, :, None] - sliding_window
+    s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgcp,bpkd->bckgd", p, cache.v.astype(jnp.float32))
+    return o.reshape(B, C, H, hd).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -330,12 +390,35 @@ def forward_prefill(params: Params, cfg: AttnConfig, x: jax.Array,
 
 
 def forward_decode(params: Params, cfg: AttnConfig, x1: jax.Array,
-                   cache: KVCache) -> tuple[jax.Array, KVCache]:
-    """One decode step: x1 (B, 1, D)."""
+                   cache: KVCache, write_mask: Optional[jax.Array] = None
+                   ) -> tuple[jax.Array, KVCache]:
+    """One decode step: x1 (B, 1, D).  Rows where ``write_mask`` (B,) is
+    False leave the cache untouched (see ``append_to_cache``) — their
+    attention output is still computed but the caller ignores it."""
     positions = cache.length[:, None] if cfg.use_rope else None   # (B, 1)
     q, k, v = qkv(params, cfg, x1, positions)
-    cache = append_to_cache(cache, k, v)
+    cache = append_to_cache(cache, k, v, write_mask)
     o = decode_attend(q, cache, sliding_window=cfg.sliding_window)
+    return out_proj(params, cfg, o), cache
+
+
+def forward_chunk(params: Params, cfg: AttnConfig, x: jax.Array,
+                  cache: KVCache, valid_len: jax.Array
+                  ) -> tuple[jax.Array, KVCache]:
+    """Chunked prefill: x (B, C, D) continues each row's sequence at its
+    current cache length (DESIGN.md §9).
+
+    Row b's first ``valid_len[b]`` chunk positions are real tokens — written
+    into the cache and attended causally against the row's full history —
+    while pad positions (and rows with ``valid_len == 0``) write nothing and
+    produce garbage outputs the caller ignores.  RoPE positions are absolute:
+    ``cache.length[b] + i``."""
+    B, C, _ = x.shape
+    start = cache.length                                          # (B,)
+    positions = start[:, None] + jnp.arange(C)[None, :]           # (B, C)
+    q, k, v = qkv(params, cfg, x, positions if cfg.use_rope else None)
+    cache = chunk_into_cache(cache, k, v, valid_len)
+    o = chunk_attend(q, cache, start, sliding_window=cfg.sliding_window)
     return out_proj(params, cfg, o), cache
 
 

@@ -117,11 +117,25 @@ def block_forward(params: Params, cfg: ModelConfig, spec: BlockSpec,
                   cache: Optional[Cache] = None,
                   rng: Optional[jax.Array] = None,
                   enc_out: Optional[jax.Array] = None,
-                  causal: bool = True) -> tuple[jax.Array, Optional[Cache], dict]:
-    """One block: pre-norm mixer + residual, [cross-attn], pre-norm FFN + residual."""
+                  causal: bool = True,
+                  chunk_valid: Optional[jax.Array] = None,
+                  decode_mask: Optional[jax.Array] = None
+                  ) -> tuple[jax.Array, Optional[Cache], dict]:
+    """One block: pre-norm mixer + residual, [cross-attn], pre-norm FFN + residual.
+
+    ``mode="chunk"`` (chunked prefill, DESIGN.md §9) consumes a (B, C) slab
+    against each row's cache at its current length; ``chunk_valid`` (B,)
+    gives each row's real token count.  ``decode_mask`` (B,) bool, decode
+    mode only: rows where it is False do not write/advance their KV cache.
+    Both are attention-mixer features — recurrent mixers have no
+    length-masked state to protect (the serving engine rejects them)."""
     new_cache: Cache = {} if cache is not None else None
     h = norms.norm_apply(cfg.norm, params["norm1"], x)
 
+    if mode == "chunk" and (spec.mixer != "attn" or spec.cross_attention):
+        raise ValueError("chunked prefill requires plain attention mixers "
+                         "(recurrent state folds pad garbage in; cross-attn "
+                         "slabs are unsupported)")
     if spec.mixer == "attn":
         acfg = make_attn_config(cfg, spec, causal=causal)
         if mode in ("train", "eval"):      # eval: full attn, hard FFN routing
@@ -129,8 +143,13 @@ def block_forward(params: Params, cfg: ModelConfig, spec: BlockSpec,
         elif mode == "prefill":
             y, kv = attention.forward_prefill(params["mixer"], acfg, h, cache["kv"])
             new_cache["kv"] = kv
+        elif mode == "chunk":
+            y, kv = attention.forward_chunk(params["mixer"], acfg, h,
+                                            cache["kv"], chunk_valid)
+            new_cache["kv"] = kv
         else:
-            y, kv = attention.forward_decode(params["mixer"], acfg, h, cache["kv"])
+            y, kv = attention.forward_decode(params["mixer"], acfg, h,
+                                             cache["kv"], decode_mask)
             new_cache["kv"] = kv
     elif spec.mixer == "mamba":
         mcfg = make_mamba_config(cfg)
@@ -224,8 +243,13 @@ def stack_forward(params: list[Params], cfg: ModelConfig, x: jax.Array, *,
                   rng: Optional[jax.Array] = None,
                   enc_out: Optional[jax.Array] = None,
                   causal: bool = True,
-                  period: tuple[BlockSpec, ...] | None = None
+                  period: tuple[BlockSpec, ...] | None = None,
+                  chunk_valid: Optional[jax.Array] = None,
+                  decode_mask: Optional[jax.Array] = None
                   ) -> tuple[jax.Array, Optional[list[Cache]], dict]:
+    """Run the whole stack (scan over periods).  ``chunk_valid`` /
+    ``decode_mask`` ride through to every block (see ``block_forward``);
+    they are loop-invariant, so the scan closes over them."""
     period = period or cfg.period
     n_periods = jax.tree_util.tree_leaves(params[0])[0].shape[0]
     use_rng = rng is not None
@@ -245,7 +269,8 @@ def stack_forward(params: list[Params], cfg: ModelConfig, x: jax.Array, *,
             c = per_caches[pos] if per_caches is not None else None
             x, nc, aux = block_forward(
                 per_params[pos], cfg, spec, x, mode=mode, cache=c, rng=r,
-                enc_out=enc_out, causal=causal)
+                enc_out=enc_out, causal=causal, chunk_valid=chunk_valid,
+                decode_mask=decode_mask)
             new_caches.append(nc)
             aux_h = aux_h + aux["hardening"]
             aux_m = aux_m + aux["moe_aux"]

@@ -9,6 +9,13 @@ allocator and interleaved prefill/decode over FIXED compiled shapes:
   of *buckets* (powers of two up to ``max_prompt_len``), each bucket
   compiling once; the prefilled 1-row cache is inserted into the pooled
   caches at the assigned slot (``models/lm.cache_insert``).
+* With ``EngineConfig.prefill_chunk > 0`` prefill is CHUNKED instead: every
+  in-flight prefill advances together through one fixed
+  ``(num_slots, prefill_chunk)`` slab per dispatch (``lm.prefill_chunk`` —
+  one more compiled shape, total), at most ``prefill_budget`` dispatches per
+  engine step, interleaved with decode — a long prompt's admission never
+  stalls in-flight decode latency by more than the budgeted chunk work
+  (DESIGN.md §9).  Decode steps mask cache writes for mid-prefill slots.
 * Requests enter with prompt + sampling/stop params, decode together until
   EOS/max-tokens, then free their slot for waiting requests
   (``lm.cache_evict`` zeroes the row's attention lengths).
@@ -56,12 +63,25 @@ class EngineConfig:
     """Engine shape/policy knobs.  ``max_len`` bounds prompt + generation per
     slot (the pooled cache's sequence axis); ``prefill_buckets`` is the
     static set of compiled prompt shapes (default: powers of two from 16 up
-    to ``max_prompt_len``)."""
+    to ``max_prompt_len``).
+
+    ``prefill_chunk``: 0 = monolithic prefill (one bucket-padded dispatch
+    per admission, between decode steps); > 0 = chunked prefill — prompts
+    advance ``prefill_chunk`` tokens at a time through a shared
+    ``(num_slots, prefill_chunk)`` slab, at most ``prefill_budget`` slab
+    dispatches per engine step.  Must be a power of two <= max_prompt_len
+    (the slab is one fixed compiled shape from the same pow2 family as the
+    buckets).  Smaller chunks / budget bound each step's admission work
+    tighter (decode p99) at the cost of slower admission (TTFT); the
+    scheduler-side ``max_prefilling`` knob caps how many slots prefill
+    concurrently (see serving/scheduler.py)."""
     num_slots: int = 8
     max_len: int = 128
     max_prompt_len: int = 64
     prefill_buckets: Tuple[int, ...] = ()
     max_prefills_per_step: int = 2
+    prefill_chunk: int = 0
+    prefill_budget: int = 1
     scheduler: str = "fcfs"
     scheduler_kw: dict = dataclasses.field(default_factory=dict)
     fff_backend: str = "auto"            # api.use_backend override, "auto" = none
@@ -80,6 +100,23 @@ class EngineConfig:
 
 
 class ContinuousBatchingEngine:
+    """Continuous-batching serving loop (module docstring has the design).
+
+    Args:
+        params:    the LM parameter tree (``lm.init``), possibly sharded.
+        cfg:       the ``ModelConfig`` — decoder-only, attention mixers.
+        ecfg:      engine shape/policy knobs (``EngineConfig``).
+        scheduler: an admission ``Scheduler`` instance; default builds one
+                   from ``ecfg.scheduler`` / ``ecfg.scheduler_kw``.
+        trace_ctx: optional zero-arg context-manager factory entered around
+                   every jitted call (e.g. ``launch/mesh.serving_context``'s
+                   wrapper installing the SPMD mesh).
+
+    Drive it either with ``run(requests)`` (serve a workload to completion,
+    returns results + ``EngineMetrics``) or manually: ``submit`` then
+    ``step()`` while ``has_work()``, polling ``poll_metrics()`` for live
+    queue depth / latency / overflow telemetry."""
+
     def __init__(self, params, cfg, ecfg: EngineConfig,
                  scheduler: Optional[Scheduler] = None,
                  trace_ctx: Optional[Callable] = None):
@@ -100,6 +137,21 @@ class ContinuousBatchingEngine:
                 f"prefill_buckets {ecfg.buckets()} must top out at "
                 f"max_prompt_len {ecfg.max_prompt_len} — the two knobs "
                 f"would otherwise disagree on the servable prompt length")
+        if ecfg.prefill_chunk:
+            c = ecfg.prefill_chunk
+            if c < 1 or (c & (c - 1)):
+                raise ValueError(
+                    f"prefill_chunk {c} must be a power of two — the chunk "
+                    f"slab is one fixed compiled shape from the same pow2 "
+                    f"family as the prefill buckets (DESIGN.md §9)")
+            if c > ecfg.max_prompt_len:
+                raise ValueError(
+                    f"prefill_chunk {c} exceeds max_prompt_len "
+                    f"{ecfg.max_prompt_len}: every prompt would fit in one "
+                    f"chunk — use monolithic prefill (prefill_chunk=0)")
+            if ecfg.prefill_budget < 1:
+                raise ValueError("prefill_budget must be >= 1 when chunked "
+                                 "prefill is on")
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
@@ -146,28 +198,49 @@ class ContinuousBatchingEngine:
             return {} if jax.default_backend() == "cpu" \
                 else {"donate_argnums": (i,)}
         self._decode_jit = jax.jit(
-            lambda p, t, c, off: lm.decode_step(p, cfg, t, c, off,
-                                                with_stats=True), **_don(2))
+            lambda p, t, c, off, wm: lm.decode_step(p, cfg, t, c, off,
+                                                    write_mask=wm,
+                                                    with_stats=True),
+            **_don(2))
         self._prefill_jits = {
             b: jax.jit(
                 lambda p, t, n, c, s: lm.prefill_slot(p, cfg, t, n, c, L, s),
                 **_don(3))
             for b in ecfg.buckets()}
+        self._chunk_jit = None
+        if ecfg.prefill_chunk:
+            self._chunk_jit = jax.jit(
+                lambda p, t, v, c, off: lm.prefill_chunk(p, cfg, t, v, c,
+                                                         off), **_don(3))
         self._evict_jit = jax.jit(lambda c, ev: lm.cache_evict_rows(c, ev),
                                   **_don(0))
+        # per-slot raw leaf counts accumulated across a request's prefill
+        # chunks; normalized into self.occupancy when its prefill completes
+        self._prefill_counts = np.zeros((S, max(self.num_leaves, 1)),
+                                        np.float64)
 
         self._t0 = time.monotonic()
         self.n_steps = 0
         self.n_prefills = 0
+        self.n_chunks = 0
         self.decode_lat: List[float] = []
+        # gaps between consecutive decode dispatches while work was in
+        # flight: the stall-free-admission signal (a monolithic long-prompt
+        # prefill lands in one of these gaps; chunked prefill bounds them)
+        self.decode_interval_s: List[float] = []
+        self._last_decode_end: Optional[float] = None
         # slot-weighted overflow accumulators, split by phase: admission
         # composes the *decode* batch, so decode overflow is the scheduler's
-        # signal; prefill overflow is per-request and composition-free
+        # signal; prefill overflow is per-request and composition-free under
+        # monolithic prefill (chunked slabs DO mix requests + filler rows —
+        # their weight is scaled to the real-token fraction, _stats_rows)
         self._overflow = {"prefill": [0.0, 0.0], "decode": [0.0, 0.0]}
 
     # -- clock ---------------------------------------------------------------
 
     def now(self) -> float:
+        """Engine-clock seconds since construction (all Request arrival
+        offsets and RequestResult timestamps are on this clock)."""
         return time.monotonic() - self._t0
 
     # -- submission ----------------------------------------------------------
@@ -246,10 +319,17 @@ class ContinuousBatchingEngine:
 
     # -- telemetry -----------------------------------------------------------
 
-    def _stats_rows(self, stats, phase: str) -> Optional[np.ndarray]:
+    def _stats_rows(self, stats, phase: str,
+                    weight_scale: float = 1.0) -> Optional[np.ndarray]:
         """Merge a per-site routing-stats tuple into per-batch-row leaf
         counts (B, E) for sites matching the engine's telemetry width, and
-        fold the slot-weighted overflow into the running per-phase mean."""
+        fold the slot-weighted overflow into the running per-phase mean.
+
+        ``weight_scale`` discounts a dispatch whose batch is partly filler:
+        the chunk slab always carries num_slots rows but only the
+        mid-prefill rows' tokens belong to requests, so its overflow weight
+        is scaled to the real-token fraction — otherwise the exported
+        overflow_fraction_mean would mostly reflect filler routing."""
         if stats is None or self.num_leaves == 0:
             return None
         counts = None
@@ -258,7 +338,7 @@ class ContinuousBatchingEngine:
             if s is None:
                 continue
             c = np.asarray(s.leaf_counts, np.float64)
-            w = float(s.slots)
+            w = float(s.slots) * weight_scale
             acc[0] += float(s.overflow) * w
             acc[1] += w
             if c.shape[-1] == self.num_leaves:
@@ -317,6 +397,7 @@ class ContinuousBatchingEngine:
                 continue
             evict[i] = True
             self.occupancy[i] = 0.0
+            self._prefill_counts[i] = 0.0
             # what this freed slot will decode while idle: the occupant's
             # last NON-EOS token — replaying the EOS id itself would pile
             # every freed slot's phantom routing onto the EOS token's leaf
@@ -340,6 +421,12 @@ class ContinuousBatchingEngine:
     def _bucket_for(self, n: int) -> int:
         return next(b for b in self.ecfg.buckets() if b >= n)
 
+    def _seed_hint(self, slot: int, req: Request) -> None:
+        if req.leaf_hint is not None and self.num_leaves and \
+                req.leaf_hint.size == self.num_leaves:
+            self.occupancy[slot] = req.leaf_hint / max(
+                req.leaf_hint.sum(), 1e-9)
+
     def _admit(self) -> None:
         free = [i for i, s in enumerate(self.slots) if s is None]
         if not free or not self.queue:
@@ -352,45 +439,115 @@ class ContinuousBatchingEngine:
             num_leaves=self.num_leaves,
             capacity_factor=cf,
             num_slots=self.ecfg.num_slots,
-            dispatch_shards=shards)
+            dispatch_shards=shards,
+            prefilling=np.asarray([s is not None and s.prefilling
+                                   for s in self.slots]))
+        if self.ecfg.prefill_chunk:
+            # the max_prefilling knob is chunked-only by contract (a
+            # monolithic admission never *dwells* in the prefilling state,
+            # so capping it would just throttle admission throughput)
+            n = min(n, self.scheduler.admission_cap(view))
+        if n <= 0:
+            return
         chosen = self.scheduler.select(list(self.queue), n, view)
         for req in chosen:
             self.queue.remove(req)
             slot = free.pop(0)
-            L = len(req.prompt)
-            bucket = self._bucket_for(L)
-            # right-pad with the LAST real token, not a constant: pad
-            # positions are length-masked in the cache either way, but they
-            # do route through FFF sites, and the telemetry tap counts them —
-            # repeating in-distribution content keeps the seeded leaf
-            # footprint representative instead of phantom-weighted toward a
-            # fixed pad token's leaf
-            toks = np.full((1, bucket), req.prompt[-1], np.int32)
-            toks[0, :L] = req.prompt
-            with self._ctx():
-                logits, self.caches, stats = self._prefill_jits[bucket](
-                    self.params, jnp.asarray(toks), jnp.int32(L),
-                    self.caches, jnp.int32(slot))
-            logits = np.asarray(jax.block_until_ready(logits))
-            self.n_prefills += 1
-            t = self.now()
-            st = SlotState(request=req, admitted_time=t, first_token_time=t,
-                           tokens=[], total_len=L)
-            self.slots[slot] = st
-            # seed the slot's footprint: measured prefill counts (row 0 of
-            # the 1-row prefill batch), else the request's hint prior
-            counts = self._stats_rows(stats, "prefill")
-            if counts is not None and counts[0].sum() > 0:
-                self.occupancy[slot] = counts[0] / counts[0].sum()
-            elif req.leaf_hint is not None and self.num_leaves and \
-                    req.leaf_hint.size == self.num_leaves:
-                self.occupancy[slot] = req.leaf_hint / max(
-                    req.leaf_hint.sum(), 1e-9)
-            self._record_token(st, self._sample(st, logits))
+            if self.ecfg.prefill_chunk:
+                self._admit_chunked(req, slot)
+            else:
+                self._admit_monolithic(req, slot)
+
+    def _admit_monolithic(self, req: Request, slot: int) -> None:
+        L = len(req.prompt)
+        bucket = self._bucket_for(L)
+        # right-pad with the LAST real token, not a constant: pad
+        # positions are length-masked in the cache either way, but they
+        # do route through FFF sites, and the telemetry tap counts them —
+        # repeating in-distribution content keeps the seeded leaf
+        # footprint representative instead of phantom-weighted toward a
+        # fixed pad token's leaf
+        toks = np.full((1, bucket), req.prompt[-1], np.int32)
+        toks[0, :L] = req.prompt
+        with self._ctx():
+            logits, self.caches, stats = self._prefill_jits[bucket](
+                self.params, jnp.asarray(toks), jnp.int32(L),
+                self.caches, jnp.int32(slot))
+        logits = np.asarray(jax.block_until_ready(logits))
+        self.n_prefills += 1
+        t = self.now()
+        st = SlotState(request=req, admitted_time=t, first_token_time=t,
+                       tokens=[], total_len=L, prefill_pos=L)
+        self.slots[slot] = st
+        # seed the slot's footprint: measured prefill counts (row 0 of
+        # the 1-row prefill batch), else the request's hint prior
+        counts = self._stats_rows(stats, "prefill")
+        if counts is not None and counts[0].sum() > 0:
+            self.occupancy[slot] = counts[0] / counts[0].sum()
+        else:
+            self._seed_hint(slot, req)
+        self._record_token(st, self._sample(st, logits))
+
+    def _admit_chunked(self, req: Request, slot: int) -> None:
+        """Assign the slot only — no model call.  The prompt advances through
+        the shared chunk slab in subsequent ``_chunk_prefill`` dispatches.
+        The slot's cache row is already empty: eviction zeroed its lengths,
+        and chunked-mode decode never writes free rows (the write mask)."""
+        st = SlotState(request=req, admitted_time=self.now(),
+                       first_token_time=0.0, tokens=[], total_len=0,
+                       prefill_pos=0)
+        self.slots[slot] = st
+        self._prefill_counts[slot] = 0.0
+        self._seed_hint(slot, req)     # prior until measured counts land
+
+    def _chunk_prefill(self) -> None:
+        """One (num_slots, prefill_chunk) slab dispatch: every mid-prefill
+        slot consumes its next chunk of prompt; rows whose prompt completes
+        sample their first token from the slab's logits (DESIGN.md §9)."""
+        prefilling = [i for i, s in enumerate(self.slots)
+                      if s is not None and s.prefilling]
+        if not prefilling:
+            return
+        S, C = self.ecfg.num_slots, self.ecfg.prefill_chunk
+        # inactive rows carry in-distribution filler (same rationale as the
+        # free-slot decode token); their writes are masked out by valid=0
+        toks = np.repeat(self._free_tok[:, None], C, axis=1)
+        valid = np.zeros((S,), np.int32)
+        offs = np.zeros((S,), np.int32)
+        for i in prefilling:
+            st = self.slots[i]
+            p = st.request.prompt
+            n = min(C, len(p) - st.prefill_pos)
+            toks[i, :n] = p[st.prefill_pos:st.prefill_pos + n]
+            toks[i, n:] = p[st.prefill_pos + n - 1]   # pad: last real token
+            valid[i] = n
+            offs[i] = st.prefill_pos
+        with self._ctx():
+            logits, self.caches, stats = self._chunk_jit(
+                self.params, jnp.asarray(toks), jnp.asarray(valid),
+                self.caches, jnp.asarray(offs))
+        logits = np.asarray(jax.block_until_ready(logits))
+        self.n_chunks += 1
+        # overflow weight ~ real prompt tokens in the slab, not slab size
+        counts = self._stats_rows(stats, "prefill",
+                                  weight_scale=float(valid.sum()) / (S * C))
+        for i in prefilling:
+            st = self.slots[i]
+            st.prefill_pos += int(valid[i])
+            if counts is not None:
+                self._prefill_counts[i] += counts[i]
+            if not st.prefilling:          # prompt fully consumed this chunk
+                self.n_prefills += 1
+                tot = self._prefill_counts[i].sum()
+                if tot > 0:
+                    self.occupancy[i] = self._prefill_counts[i] / tot
+                st.total_len = len(st.request.prompt)
+                st.first_token_time = self.now()
+                self._record_token(st, self._sample(st, logits[i]))
 
     def _decode(self) -> None:
         live = [i for i, s in enumerate(self.slots)
-                if s is not None and not s.done]
+                if s is not None and not s.done and not s.prefilling]
         if not live:
             return
         toks = self._free_tok[:, None].copy()
@@ -399,13 +556,28 @@ class ContinuousBatchingEngine:
             st = self.slots[i]
             toks[i, 0] = st.tokens[-1]
             offs[i] = st.total_len - 1      # position of the token being fed
+        if self.ecfg.prefill_chunk:
+            # mid-prefill slots MUST NOT write/advance their caches on the
+            # dummy decode token; masking free/done rows too keeps newly
+            # admitted rows' lengths at zero for the chunk path
+            wm = np.zeros((self.ecfg.num_slots,), bool)
+            wm[live] = True
+        else:
+            # monolithic: every row appends (free rows' garbage is length-
+            # masked and wholesale-replaced by cache_insert on admission) —
+            # the pre-chunking behavior, preserved bit-for-bit
+            wm = np.ones((self.ecfg.num_slots,), bool)
         t0 = time.monotonic()
         with self._ctx():
             logits, self.caches, stats = self._decode_jit(
                 self.params, jnp.asarray(toks), self.caches,
-                jnp.asarray(offs))
+                jnp.asarray(offs), jnp.asarray(wm))
         logits = np.asarray(jax.block_until_ready(logits))
-        self.decode_lat.append(time.monotonic() - t0)
+        t1 = time.monotonic()
+        self.decode_lat.append(t1 - t0)
+        if self._last_decode_end is not None:
+            self.decode_interval_s.append(t1 - self._last_decode_end)
+        self._last_decode_end = t1
         self.n_steps += 1
         self._update_occupancy(live, self._stats_rows(stats, "decode"))
         for i in live:
@@ -414,12 +586,18 @@ class ContinuousBatchingEngine:
 
     def step(self) -> None:
         """One engine iteration: evict finished slots, admit from the queue,
-        decode every active slot together."""
+        advance chunked prefills (up to ``prefill_budget`` slab dispatches),
+        decode every active non-prefilling slot together."""
         self._evict_finished()
         self._admit()
+        if self.ecfg.prefill_chunk:
+            for _ in range(self.ecfg.prefill_budget):
+                self._chunk_prefill()
         self._decode()
 
     def has_work(self) -> bool:
+        """True while anything is queued or occupying a slot (the manual
+        ``step()`` loop's condition)."""
         return bool(self.queue) or any(s is not None for s in self.slots)
 
     def run(self, requests: Sequence[Request]) -> Tuple[List[RequestResult],
@@ -439,13 +617,16 @@ class ContinuousBatchingEngine:
         # per-run deltas against the engine-lifetime accumulators
         n_results0, n_steps0 = len(self.results), self.n_steps
         n_prefills0, n_lat0 = self.n_prefills, len(self.decode_lat)
+        n_chunks0, n_int0 = self.n_chunks, len(self.decode_interval_s)
         ovf0 = {k: list(v) for k, v in self._overflow.items()}
         t_start = self.now()
+        self._last_decode_end = None    # decode gaps don't span runs
         while pending or self.has_work():
             while pending and t_start + pending[0].arrival_time <= self.now():
                 r = pending.popleft()
                 self.submit(r, arrival_time=t_start + r.arrival_time)
             if not self.has_work():
+                self._last_decode_end = None    # idle gap, not a stall
                 if pending:
                     time.sleep(min(
                         max(t_start + pending[0].arrival_time - self.now(),
@@ -460,6 +641,8 @@ class ContinuousBatchingEngine:
         del self.results[n_results0:]
         lat = self.decode_lat[n_lat0:]
         del self.decode_lat[n_lat0:]
+        intervals = self.decode_interval_s[n_int0:]
+        del self.decode_interval_s[n_int0:]
 
         def ovf_delta(keys):
             w = sum(self._overflow[k][0] - ovf0[k][0] for k in keys)
@@ -471,14 +654,40 @@ class ContinuousBatchingEngine:
             n_prefills=self.n_prefills - n_prefills0,
             decode_lat_s=lat,
             overflow_mean=ovf_delta(list(self._overflow)),
-            overflow_decode_mean=ovf_delta(["decode"]))
+            overflow_decode_mean=ovf_delta(["decode"]),
+            n_chunks=self.n_chunks - n_chunks0,
+            decode_interval_s=intervals)
         return results, m
+
+    def poll_metrics(self) -> metrics_lib.EngineMetrics:
+        """Live engine-lifetime telemetry snapshot — the autoscaling signal
+        (ROADMAP).  Unlike ``run``'s per-run report this reflects everything
+        since engine construction (or since ``run`` last drained its slice)
+        plus instantaneous state: ``queue_depth`` (waiting requests),
+        ``active_slots`` / ``prefilling_slots``, TTFT/latency percentiles
+        over finished requests, and the overflow means.  Host-only: no
+        device work, safe to call from a monitoring thread between steps.
+        ``serve.py --metrics-json`` dumps the same schema (docs/serving.md
+        has the field glossary)."""
+        m = metrics_lib.from_results(
+            self.results, elapsed_s=self.now(), n_steps=self.n_steps,
+            n_prefills=self.n_prefills, decode_lat_s=self.decode_lat,
+            overflow_mean=self.overflow_mean(),
+            overflow_decode_mean=self.overflow_mean("decode"),
+            n_chunks=self.n_chunks,
+            decode_interval_s=self.decode_interval_s)
+        m.queue_depth = len(self.queue)
+        m.active_slots = sum(s is not None for s in self.slots)
+        m.prefilling_slots = sum(s is not None and s.prefilling
+                                 for s in self.slots)
+        return m
 
     # -- fixed-shape accounting ----------------------------------------------
 
     def compiled_shapes(self) -> Dict[str, int]:
         """Number of compiled traces per entry point (the fixed-shape
-        contract: after warmup, decode == 1 and each prefill bucket <= 1)."""
+        contract: after warmup, decode == 1, each prefill bucket <= 1, and
+        the chunk slab — when chunked prefill is on — exactly 1)."""
         def n(fn):
             try:
                 return int(fn._cache_size())
@@ -487,4 +696,6 @@ class ContinuousBatchingEngine:
         out = {"decode": n(self._decode_jit), "evict": n(self._evict_jit)}
         for b, fn in self._prefill_jits.items():
             out[f"prefill_{b}"] = n(fn)
+        if self._chunk_jit is not None:
+            out["prefill_chunk"] = n(self._chunk_jit)
         return out

@@ -44,18 +44,31 @@ def summarize(samples_s: Sequence[float]) -> LatencySummary:
 
 
 def tokens_per_second(n_tokens: int, elapsed_s: float) -> float:
+    """Throughput with a zero-division guard (0 tokens in 0s -> 0.0)."""
     return n_tokens / max(elapsed_s, 1e-9)
 
 
 @dataclasses.dataclass
 class EngineMetrics:
     """Aggregate engine telemetry, filled by ``engine.run`` /
-    per-``RequestResult`` bookkeeping."""
+    per-``RequestResult`` bookkeeping, and snapshotted live by
+    ``engine.poll_metrics()`` (the autoscaling signal; the JSON schema —
+    ``as_dict()`` — is documented in docs/serving.md).
+
+    Latency summaries are over finished requests (``ttft``, ``per_token``,
+    ``e2e``), decode dispatches (``decode_step``), and gaps between
+    consecutive decode dispatches while work was in flight
+    (``decode_interval`` — the stall-free-admission signal: monolithic
+    prefill of a long prompt lands between two decode steps and shows up
+    here, chunked prefill bounds it).  ``queue_depth`` / ``active_slots`` /
+    ``prefilling_slots`` are instantaneous (0 in a finished ``run`` report,
+    meaningful from ``poll_metrics``)."""
     n_requests: int = 0
     n_tokens: int = 0
     elapsed_s: float = 0.0
     n_steps: int = 0
     n_prefills: int = 0
+    n_chunks: int = 0                    # chunked-prefill dispatches
     ttft: LatencySummary = dataclasses.field(
         default_factory=lambda: summarize(()))
     per_token: LatencySummary = dataclasses.field(
@@ -64,9 +77,14 @@ class EngineMetrics:
         default_factory=lambda: summarize(()))
     decode_step: LatencySummary = dataclasses.field(
         default_factory=lambda: summarize(()))
+    decode_interval: LatencySummary = dataclasses.field(
+        default_factory=lambda: summarize(()))
     overflow_fraction_mean: float = 0.0
     overflow_decode_mean: float = 0.0    # decode-phase only: the scheduler's
                                          # microbatch-composition signal
+    queue_depth: int = 0                 # waiting requests (instantaneous)
+    active_slots: int = 0                # occupied slots (instantaneous)
+    prefilling_slots: int = 0            # slots mid-chunked-prefill
 
     @property
     def throughput_tok_s(self) -> float:
@@ -76,44 +94,57 @@ class EngineMetrics:
         lines = [
             f"served {self.n_requests} requests, {self.n_tokens} tokens in "
             f"{self.elapsed_s:.2f}s ({self.throughput_tok_s:.1f} tok/s, "
-            f"{self.n_steps} decode steps, {self.n_prefills} prefills)",
+            f"{self.n_steps} decode steps, {self.n_prefills} prefills"
+            + (f", {self.n_chunks} prefill chunks" if self.n_chunks else "")
+            + ")",
             self.ttft.line("ttft"),
             self.per_token.line("per-token"),
             self.e2e.line("e2e"),
             self.decode_step.line("decode step"),
+            self.decode_interval.line("decode interval"),
             f"fff overflow_fraction mean {self.overflow_fraction_mean:.4f} "
             f"(decode-only {self.overflow_decode_mean:.4f})",
         ]
         return "\n".join(lines)
 
     def as_dict(self) -> dict:
+        """The metrics JSON schema (``serve.py --metrics-json``; documented
+        field-by-field in docs/serving.md)."""
         return {
             "n_requests": self.n_requests, "n_tokens": self.n_tokens,
             "elapsed_s": self.elapsed_s, "n_steps": self.n_steps,
-            "n_prefills": self.n_prefills,
+            "n_prefills": self.n_prefills, "n_chunks": self.n_chunks,
             "throughput_tok_s": self.throughput_tok_s,
             "ttft_ms": self.ttft.as_dict(),
             "per_token_ms": self.per_token.as_dict(),
             "e2e_ms": self.e2e.as_dict(),
             "decode_step_ms": self.decode_step.as_dict(),
+            "decode_interval_ms": self.decode_interval.as_dict(),
             "overflow_fraction_mean": self.overflow_fraction_mean,
             "overflow_decode_mean": self.overflow_decode_mean,
+            "queue_depth": self.queue_depth,
+            "active_slots": self.active_slots,
+            "prefilling_slots": self.prefilling_slots,
         }
 
 
 def from_results(results: Iterable, *, elapsed_s: float, n_steps: int,
                  n_prefills: int, decode_lat_s: Sequence[float],
                  overflow_mean: float,
-                 overflow_decode_mean: float = 0.0) -> EngineMetrics:
+                 overflow_decode_mean: float = 0.0,
+                 n_chunks: int = 0,
+                 decode_interval_s: Sequence[float] = ()) -> EngineMetrics:
     """Build an ``EngineMetrics`` from finished ``RequestResult`` records."""
     rs = list(results)
     return EngineMetrics(
         n_requests=len(rs),
         n_tokens=sum(r.n_generated for r in rs),
         elapsed_s=elapsed_s, n_steps=n_steps, n_prefills=n_prefills,
+        n_chunks=n_chunks,
         ttft=summarize([r.ttft for r in rs]),
         per_token=summarize([r.per_token_latency() for r in rs]),
         e2e=summarize([r.e2e_latency for r in rs]),
         decode_step=summarize(decode_lat_s),
+        decode_interval=summarize(decode_interval_s),
         overflow_fraction_mean=overflow_mean,
         overflow_decode_mean=overflow_decode_mean)

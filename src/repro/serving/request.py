@@ -77,12 +77,26 @@ class RequestResult:
 
 @dataclasses.dataclass
 class SlotState:
-    """Host-side record of one cache slot's occupant."""
+    """Host-side record of one cache slot's occupant.
+
+    ``prefill_pos`` tracks chunked-prefill progress: how many prompt tokens
+    are already consumed into the slot's cache.  Monolithic admission sets
+    it to the full prompt length up front; under chunked prefill it advances
+    chunk by chunk and the slot decodes only once ``prefilling`` is False.
+    ``first_token_time`` is 0.0 until the first token is actually sampled
+    (at admission for monolithic prefill, at prefill completion for
+    chunked)."""
     request: Request
     admitted_time: float
     first_token_time: float
     tokens: list                            # generated token ids (host ints)
     total_len: int                          # prompt + generated, in cache
+    prefill_pos: int = 0                    # prompt tokens consumed so far
     done: bool = False
     finish_reason: str = ""
     finish_time: float = 0.0
+
+    @property
+    def prefilling(self) -> bool:
+        """True while the occupant still has prompt tokens to consume."""
+        return self.prefill_pos < self.request.prompt.size

@@ -44,6 +44,9 @@ class SchedulerView:
                the data-shard count G for local grouped dispatch, G·M for
                grouped_ep (capacity is per *source shard* there, DESIGN.md
                §5); 1 unmeshed
+    prefilling: (num_slots,) bool — slots admitted but still mid-chunked-
+               prefill (all False under monolithic prefill); the
+               ``max_prefilling`` admission cap counts these
     """
     occupancy: np.ndarray
     active: np.ndarray
@@ -51,6 +54,7 @@ class SchedulerView:
     capacity_factor: Optional[float]     # None = exact backend, no bound
     num_slots: int
     dispatch_shards: int = 1
+    prefilling: Optional[np.ndarray] = None
 
     def leaf_capacity(self) -> float:
         """Whole-batch per-leaf slot capacity of one decode dispatch: the
@@ -69,10 +73,43 @@ class SchedulerView:
 
 
 class Scheduler:
+    """Admission-policy base class.
+
+    Subclasses implement ``select``; registering the class in ``SCHEDULERS``
+    (or shadowing a built-in name) makes it reachable from
+    ``EngineConfig.scheduler`` and ``serve.py --scheduler``.
+
+    ``max_prefilling`` is the TTFT-vs-decode-p99 knob for chunked prefill
+    (DESIGN.md §9): it caps how many slots may sit in the prefilling state
+    at once.  Admitting more concurrent prefills fills the shared
+    ``(num_slots, chunk_len)`` slab — better amortization and TTFT — but
+    every in-flight prefill keeps the per-step chunk work at its budgeted
+    maximum for longer, which is what decode p99 pays.  0 = uncapped.  The
+    knob is inert under monolithic prefill (admission and prefill complete
+    in the same step, so nothing is ever *in* the prefilling state)."""
     name = "base"
+
+    def __init__(self, max_prefilling: int = 0):
+        self.max_prefilling = max_prefilling
+
+    def admission_cap(self, view: SchedulerView) -> int:
+        """How many NEW requests may be admitted this step, given how many
+        slots are already mid-prefill.  The engine intersects this with its
+        free-slot count and ``max_prefills_per_step``."""
+        if self.max_prefilling <= 0:
+            return view.num_slots
+        busy = (int(view.prefilling.sum()) if view.prefilling is not None
+                else 0)
+        return max(self.max_prefilling - busy, 0)
 
     def select(self, waiting: Sequence[Request], n_free: int,
                view: SchedulerView) -> List[Request]:
+        """Pick <= n_free requests from ``waiting`` to admit this step.
+
+        ``waiting`` is in arrival order; the returned list's order is the
+        admission order (earlier = lower slot index).  Must not mutate
+        ``waiting`` or the requests.  Called once per engine step while any
+        slot is free and the queue is non-empty."""
         raise NotImplementedError
 
 
@@ -95,7 +132,9 @@ class LeafAwareScheduler(Scheduler):
     """
     name = "leaf_aware"
 
-    def __init__(self, window: int = 16, max_hold: int = 8):
+    def __init__(self, window: int = 16, max_hold: int = 8,
+                 max_prefilling: int = 0):
+        super().__init__(max_prefilling=max_prefilling)
         self.window = window
         self.max_hold = max_hold
         self._holds: Dict[int, int] = {}
@@ -158,6 +197,12 @@ SCHEDULERS = {
 
 
 def make_scheduler(name: str, **kw) -> Scheduler:
+    """Instantiate a registered admission scheduler by name.
+
+    ``kw`` is forwarded to the scheduler's constructor (``EngineConfig.
+    scheduler_kw`` arrives here): ``fcfs`` takes ``max_prefilling``;
+    ``leaf_aware`` additionally takes ``window`` and ``max_hold``.  Unknown
+    names raise KeyError listing the registry."""
     try:
         cls = SCHEDULERS[name]
     except KeyError:

@@ -1,0 +1,75 @@
+"""Documentation lint (ISSUE 4 satellite; the CI docs job runs just this
+file).
+
+* intra-repo markdown links in README.md / DESIGN.md / docs/ must resolve;
+* `§N` section references must exist in DESIGN.md;
+* doc drift: every flag documented in docs/serving.md's flag table must
+  exist in `launch/serve.py`'s argparse, and every serve.py flag must be
+  documented there.
+"""
+import pathlib
+import re
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md", REPO / "DESIGN.md",
+             *sorted((REPO / "docs").glob("*.md"))]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SECTION_RE = re.compile(r"§(\d+)")
+
+
+def test_doc_files_exist():
+    for f in DOC_FILES:
+        assert f.is_file(), f"missing doc file {f}"
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_intra_repo_links_resolve(doc):
+    broken = []
+    for target in LINK_RE.findall(doc.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:                       # pure-anchor link
+            continue
+        if not (doc.parent / path).resolve().exists():
+            broken.append(target)
+    assert not broken, f"{doc.name}: broken intra-repo links {broken}"
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_design_section_refs_exist(doc):
+    design = (REPO / "DESIGN.md").read_text()
+    have = {m.group(1) for m in re.finditer(r"^## §(\d+)", design, re.M)}
+    wanted = set(SECTION_RE.findall(doc.read_text()))
+    assert wanted <= have, (f"{doc.name} references DESIGN.md sections "
+                            f"{sorted(wanted - have)} that do not exist")
+
+
+def _serve_flags():
+    from repro.launch import serve
+    return {opt for action in serve.build_parser()._actions
+            for opt in action.option_strings
+            if opt.startswith("--") and opt != "--help"}
+
+
+def test_documented_flags_exist_in_serve():
+    """Every flag row in docs/serving.md's flag table names a real
+    serve.py option (doc drift, direction 1)."""
+    text = (REPO / "docs" / "serving.md").read_text()
+    rows = re.findall(r"^\| `(--[a-z][a-z0-9-]*)`", text, re.M)
+    assert rows, "docs/serving.md flag table not found"
+    missing = sorted(set(rows) - _serve_flags())
+    assert not missing, (f"docs/serving.md documents flags that serve.py "
+                         f"does not define: {missing}")
+
+
+def test_serve_flags_are_documented():
+    """Every serve.py option appears in docs/serving.md (doc drift,
+    direction 2: adding a flag without documenting it fails CI)."""
+    text = (REPO / "docs" / "serving.md").read_text()
+    undocumented = sorted(f for f in _serve_flags() if f not in text)
+    assert not undocumented, (f"serve.py flags missing from "
+                              f"docs/serving.md: {undocumented}")
