@@ -15,6 +15,10 @@
   serving_chunked -> chunked vs monolithic prefill under long-prompt
              arrivals: decode-interval p99 / throughput / TTFT
              (DESIGN.md §9; writes BENCH_serving_chunked.json)
+  serving_qos -> multi-tenant weighted-fair admission + online routing
+             profiles on a skewed two-tenant workload: fairness vs
+             weights, profile convergence, overflow vs no-hint fcfs
+             (DESIGN.md §9; writes BENCH_serving_qos.json)
 
 ``python -m benchmarks.run`` runs the quick profile (CPU-sized, ~minutes);
 ``python -m benchmarks.run --full`` runs the paper-scale grids.
@@ -34,12 +38,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,fig2,table2,fig34,"
                          "table3,roofline,ep_dispatch,serving,"
-                         "serving_chunked")
+                         "serving_chunked,serving_qos")
     args = ap.parse_args()
 
     from benchmarks import (ep_dispatch, fig2, fig34, roofline_bench,
-                            serving_chunked, serving_load, table1, table2,
-                            table3)
+                            serving_chunked, serving_load, serving_qos,
+                            table1, table2, table3)
     suites = {
         "table1": table1.main,
         "fig2": fig2.main,
@@ -50,6 +54,7 @@ def main() -> None:
         "ep_dispatch": ep_dispatch.main,
         "serving": serving_load.main,
         "serving_chunked": serving_chunked.main,
+        "serving_qos": serving_qos.main,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     failures = []

@@ -1,0 +1,245 @@
+"""Multi-tenant QoS benchmark: weighted-fair admission + online routing
+profiles under a skewed two-tenant workload (ISSUE 5 tentpole; DESIGN.md
+§9).
+
+Two tenants whose prompts route to *different* FFF leaves (classes from the
+offline ``calibrate_classes`` probe) hammer an overloaded engine:
+
+* **Fairness.**  Both tenants stay backlogged while the engine serves with
+  ``weighted_leaf_aware`` (weights gold=3, free=1).  Per-step generated
+  tokens are attributed per tenant and accumulated only over steps where
+  BOTH tenants still have waiting requests — over that saturated window the
+  tokens/s ratio must track the weight ratio within tolerance (10%).
+  (Whole-run totals would be meaningless: the run serves every request, so
+  lifetime token counts are fixed by the workload, not the scheduler.)
+* **Online profiles.**  The QoS runs carry NO ``leaf_hint``: the engine
+  learns each tenant's footprint from finished requests
+  (``RoutingProfileStore``).  After the run the learned profiles must agree
+  with the offline calibration footprints (dominant leaf + L1 tolerance),
+  and the burst workload's decode overflow under ``weighted_leaf_aware``
+  (hint-less, profile-driven) must undercut hint-less FCFS.
+
+Emits CSV rows
+``serving_qos,<case>,<tok_s>,<ovf_decode>,...`` and writes
+``experiments/BENCH_serving_qos.json`` (schema-checked in CI by
+``benchmarks/check_schema.py``).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks.serving_load import _model, calibrate_classes
+
+ARTIFACT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "BENCH_serving_qos.json")
+
+PROMPT_LEN = 16
+GEN = 8
+WEIGHTS = {"gold": 3.0, "free": 1.0}
+FAIRNESS_TOL = 0.10          # acceptance: tokens/s ratio within 10% of 3.0
+PROFILE_L1_TOL = 0.5         # learned-vs-offline footprint L1 tolerance
+
+
+def _ecfg(scheduler: str, slots: int, seed: int, **sched_kw):
+    from repro.serving import EngineConfig
+    return EngineConfig(
+        num_slots=slots, max_len=PROMPT_LEN + GEN + 1,
+        max_prompt_len=PROMPT_LEN, scheduler=scheduler,
+        scheduler_kw=sched_kw,
+        fff_backend="grouped",          # capacity-bounded dispatch: the
+        max_prefills_per_step=slots,    # regime where composition matters
+        seed=seed)
+
+
+def _tenant_requests(classes, counts: dict, *, hints: bool):
+    """``counts[tenant]`` requests per tenant, interleaved round-robin so
+    arrival order favors nobody; tenant i's prompts are its class token."""
+    from repro.serving import Request
+    tenants = sorted(counts)
+    toks = {t: classes[i % len(classes)] for i, t in enumerate(tenants)}
+    reqs, rid, left = [], 0, dict(counts)
+    while any(left.values()):
+        for t in tenants:
+            if left[t] <= 0:
+                continue
+            tok, fp = toks[t]
+            reqs.append(Request(
+                rid=rid, prompt=np.full((PROMPT_LEN,), tok, np.int32),
+                max_new_tokens=GEN, tenant=t,
+                leaf_hint=fp.copy() if hints else None))
+            rid += 1
+            left[t] -= 1
+    return reqs, {t: toks[t] for t in tenants}
+
+
+def run_fairness(params, cfg, classes, *, slots: int, seed: int):
+    """Overloaded weighted run, manual step loop: count per-tenant token
+    production only while BOTH tenants are backlogged."""
+    from repro.serving import ContinuousBatchingEngine
+    counts = {t: int(slots * w / min(WEIGHTS.values()))
+              for t, w in WEIGHTS.items()}          # backlog ∝ weight
+    reqs, _ = _tenant_requests(classes, counts, hints=False)
+    eng = ContinuousBatchingEngine(params, cfg, _ecfg(
+        "weighted_leaf_aware", slots, seed, weights=WEIGHTS,
+        window=4 * slots))
+    for r in reqs:
+        eng.submit(r)
+
+    def tokens(tenant):
+        done = sum(r.n_generated for r in eng.results
+                   if r.tenant == tenant)
+        live = sum(len(s.tokens) for s in eng.slots
+                   if s is not None and s.request.tenant == tenant)
+        return done + live
+
+    window = {t: 0 for t in WEIGHTS}
+    saturated_steps = 0
+    while eng.has_work():
+        both_backlogged = all(eng.queue.depth(t) > 0 for t in WEIGHTS)
+        before = {t: tokens(t) for t in WEIGHTS}
+        eng.step()
+        if both_backlogged:
+            saturated_steps += 1
+            for t in WEIGHTS:
+                window[t] += tokens(t) - before[t]
+    m = eng.poll_metrics()
+    ratio = window["gold"] / max(window["free"], 1)
+    target = WEIGHTS["gold"] / WEIGHTS["free"]
+    ok = abs(ratio / target - 1.0) <= FAIRNESS_TOL
+    return {"weights": WEIGHTS, "n_requests": counts,
+            "saturated_steps": saturated_steps,
+            "saturated_window_tokens": window,
+            "tokens_ratio_gold_over_free": ratio,
+            "target_ratio": target, "tolerance": FAIRNESS_TOL,
+            "within_tolerance": bool(ok),
+            "throughput_tok_s": m.throughput_tok_s,
+            "tenants": m.tenants}, eng
+
+
+def run_bursts(params, cfg, classes, *, scheduler: str, slots: int,
+               seed: int):
+    """Per-tenant bursts (the overflow-adversarial arrival pattern), NO
+    hints: fcfs admits each burst wholesale (one hot leaf); the weighted
+    scheduler interleaves tenants and — once profiles converge — composes
+    by learned footprint."""
+    from repro.serving import ContinuousBatchingEngine, Request
+    tenants = sorted(WEIGHTS)
+    reqs, rid = [], 0
+    for burst in range(4):
+        tok, _ = classes[burst % len(classes)]
+        t = tenants[burst % len(tenants)]
+        for _ in range(slots):
+            reqs.append(Request(
+                rid=rid, prompt=np.full((PROMPT_LEN,), tok, np.int32),
+                max_new_tokens=GEN, tenant=t))
+            rid += 1
+    kw = ({"weights": WEIGHTS, "window": 4 * slots}
+          if scheduler == "weighted_leaf_aware" else {})
+    eng = ContinuousBatchingEngine(params, cfg,
+                                   _ecfg(scheduler, slots, seed, **kw))
+    _, m = eng.run(reqs)
+    return m, eng
+
+
+def main(quick: bool = True) -> None:
+    seed = 0
+    slots = 16 if quick else 32
+
+    cfg, params = _model(seed)
+    classes = calibrate_classes(params, cfg, len(WEIGHTS))
+    offline = {t: classes[i % len(classes)]
+               for i, t in enumerate(sorted(WEIGHTS))}
+    print(f"# classes (tenant -> token, leaf): "
+          f"{[(t, tok, int(fp.argmax())) for t, (tok, fp) in offline.items()]}")
+
+    # (a) weighted fairness under overload
+    fairness, _ = run_fairness(params, cfg, classes, slots=slots, seed=seed)
+    print("# name,case,tokens_ratio,target,within_tol,saturated_steps")
+    print(f"serving_qos,fairness,{fairness['tokens_ratio_gold_over_free']:.3f},"
+          f"{fairness['target_ratio']:.1f},"
+          f"{fairness['within_tolerance']},{fairness['saturated_steps']}",
+          flush=True)
+
+    # (b) hint-less burst workload: fcfs baseline vs weighted + online
+    # profiles, plus learned-profile convergence vs the offline probe
+    print("# name,case,tok_s,overflow_decode_mean,n_steps")
+    runs = {}
+    for sched in ("fcfs", "weighted_leaf_aware"):
+        m, eng = run_bursts(params, cfg, classes, scheduler=sched,
+                            slots=slots, seed=seed)
+        runs[sched] = {"scheduler": sched, "slots": slots, **m.as_dict()}
+        print(f"serving_qos,bursts_{sched},{m.throughput_tok_s:.1f},"
+              f"{m.overflow_decode_mean:.4f},{m.n_steps}", flush=True)
+        if sched == "weighted_leaf_aware":
+            qos_engine = eng
+
+    convergence = {}
+    for t, (tok, fp) in offline.items():
+        learned = (qos_engine.profiles.lookup(t)
+                   if qos_engine.profiles is not None else None)
+        if learned is None:
+            convergence[t] = {"learned": None, "converged": False}
+            continue
+        learned = learned / learned.sum()
+        l1 = float(np.abs(learned - fp).sum())
+        convergence[t] = {
+            "offline_dominant_leaf": int(fp.argmax()),
+            "learned_dominant_leaf": int(learned.argmax()),
+            "l1_distance": l1, "l1_tolerance": PROFILE_L1_TOL,
+            "n_updates": qos_engine.profiles.n_updates(t),
+            "converged": bool(l1 <= PROFILE_L1_TOL
+                              and learned.argmax() == fp.argmax()),
+        }
+    ovf_fcfs = runs["fcfs"]["overflow_decode_mean"]
+    ovf_qos = runs["weighted_leaf_aware"]["overflow_decode_mean"]
+    overflow_cut = ovf_qos < ovf_fcfs
+    print(f"# profiles converged: "
+          f"{ {t: c['converged'] for t, c in convergence.items()} }")
+    print(f"# decode overflow: weighted+profiles {ovf_qos:.4f} vs no-hint "
+          f"fcfs {ovf_fcfs:.4f} -> "
+          f"{'LOWER' if overflow_cut else 'NOT LOWER'}")
+    print(f"# fairness ratio {fairness['tokens_ratio_gold_over_free']:.3f} "
+          f"vs target {fairness['target_ratio']:.1f} -> "
+          f"{'WITHIN' if fairness['within_tolerance'] else 'OUTSIDE'} "
+          f"{FAIRNESS_TOL:.0%}")
+
+    # the acceptance predicates GATE (benchmarks/run.py turns the raise into
+    # a failing exit, so the CI bench-smoke job goes red on a fairness or
+    # profile regression instead of shipping a green artifact that says
+    # false inside).  All three are deterministic token/leaf counts, not
+    # wall-clock measurements — safe to assert on a noisy CI runner.
+    failures = []
+    if not fairness["within_tolerance"]:
+        failures.append(
+            f"fairness ratio {fairness['tokens_ratio_gold_over_free']:.3f} "
+            f"outside {FAIRNESS_TOL:.0%} of target "
+            f"{fairness['target_ratio']:.1f}")
+    for t, c in convergence.items():
+        if not c["converged"]:
+            failures.append(f"tenant {t!r} profile did not converge: {c}")
+    if not overflow_cut:
+        failures.append(f"weighted+profiles decode overflow {ovf_qos:.4f} "
+                        f"not below no-hint fcfs {ovf_fcfs:.4f}")
+
+    with open(ARTIFACT, "w") as f:
+        json.dump({"bench": "serving_qos", "quick": quick, "slots": slots,
+                   "prompt_len": PROMPT_LEN, "gen": GEN,
+                   "classes": {t: [int(tok), int(fp.argmax())]
+                               for t, (tok, fp) in offline.items()},
+                   "fairness": fairness,
+                   "profile_convergence": convergence,
+                   "overflow_decode": {"fcfs_no_hint": ovf_fcfs,
+                                       "weighted_online_profiles": ovf_qos,
+                                       "reduced": bool(overflow_cut)},
+                   "runs": runs}, f, indent=1)
+    print(f"# wrote {ARTIFACT}")
+    if failures:
+        raise RuntimeError("serving_qos acceptance failed: "
+                           + "; ".join(failures))
+
+
+if __name__ == "__main__":
+    main()

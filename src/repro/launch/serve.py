@@ -1,11 +1,12 @@
 """Serving driver: continuous-batching engine (default) or the legacy
 fixed-batch loop (``--engine off``).
 
-``--engine continuous`` (default) drives ``repro.serving``: a request queue,
-pluggable admission scheduling (``--scheduler fcfs|leaf_aware``), a
-slot-pooled KV-cache and interleaved prefill/decode over fixed compiled
-shapes — requests of mixed lengths arrive, finish and free their slots
-independently (DESIGN.md §9).  ``--prefill-chunk N`` switches admission to
+``--engine continuous`` (default) drives ``repro.serving``: a request queue
+with per-tenant views, pluggable admission scheduling (``--scheduler
+fcfs|leaf_aware|weighted_leaf_aware``, the latter taking QoS shares from
+``--tenant-weights``), a slot-pooled KV-cache and interleaved
+prefill/decode over fixed compiled shapes — requests of mixed lengths
+arrive, finish and free their slots independently (DESIGN.md §9).  ``--prefill-chunk N`` switches admission to
 chunked prefill: long prompts advance N tokens per step instead of running
 one monolithic prefill between decode steps (stall-free admission; tune with
 ``--prefill-budget`` / ``--max-prefilling``).  ``--engine off`` keeps the
@@ -67,6 +68,13 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--scheduler", default="fcfs",
                     choices=sorted(SCHEDULERS),
                     help="admission policy for --engine continuous")
+    ap.add_argument("--tenant-weights", default="",
+                    help="comma list of tenant=weight pairs (e.g. "
+                         "gold=3,free=1): synthetic requests are assigned "
+                         "round-robin across the named tenants, and the "
+                         "weights parameterize --scheduler "
+                         "weighted_leaf_aware's weighted-fair admission; "
+                         "empty = single 'default' tenant")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="engine: >0 = chunked prefill — prompts advance "
                          "this many tokens per (num_slots, chunk) slab "
@@ -124,11 +132,47 @@ def _setup(args):
     return cfg, params, mesh_ctx
 
 
+def parse_tenant_weights(spec: str) -> dict:
+    """'gold=3,free=1' -> {'gold': 3.0, 'free': 1.0} (docs/serving.md)."""
+    out = {}
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        name, eq, w = part.partition("=")
+        if not eq or not name:
+            raise ValueError(f"--tenant-weights entry {part!r} is not "
+                             f"tenant=weight")
+        try:
+            weight = float(w)
+        except ValueError:
+            raise ValueError(f"--tenant-weights entry {part!r}: weight "
+                             f"{w!r} is not a number") from None
+        if not (weight > 0 and np.isfinite(weight)):
+            # fail at the CLI boundary, where the operator can see which
+            # flag was wrong, not later inside the scheduler constructor
+            raise ValueError(f"--tenant-weights entry {part!r}: weight must "
+                             f"be positive and finite")
+        if name in out:
+            # a silent overwrite would turn an intended 3:1 split into
+            # whatever the last duplicate said
+            raise ValueError(f"--tenant-weights names tenant {name!r} twice")
+        out[name] = weight
+    return out
+
+
 def run_engine(args) -> None:
     cfg, params, mesh_ctx = _setup(args)
     eos = args.eos_id if args.eos_id >= 0 else None
+    weights = parse_tenant_weights(args.tenant_weights)
     sched_kw = ({"max_prefilling": args.max_prefilling}
                 if args.max_prefilling > 0 else {})
+    if weights and args.scheduler == "weighted_leaf_aware":
+        sched_kw["weights"] = weights
+    elif weights:
+        # labels without enforcement is a misconfiguration trap: metrics
+        # split per tenant but admission ignores the weights entirely
+        print(f"WARNING: --tenant-weights given but --scheduler is "
+              f"{args.scheduler!r}: requests get tenant labels and "
+              f"per-tenant metrics, but only weighted_leaf_aware enforces "
+              f"the weights at admission")
     ecfg = EngineConfig(
         num_slots=args.batch,
         max_len=args.prompt_len + args.gen + 1,
@@ -144,6 +188,7 @@ def run_engine(args) -> None:
     n = args.requests or 2 * args.batch
     src = tokens_lib.MarkovTokenSource(cfg.vocab_size, seed=args.seed)
     rng = np.random.default_rng(args.seed)
+    tenants = sorted(weights) or ["default"]
     reqs = []
     for i in range(n):
         # mixed lengths: the engine's reason to exist
@@ -151,14 +196,15 @@ def run_engine(args) -> None:
         L = int(rng.integers(lo, args.prompt_len + 1))
         prompt = src.sample(1, L, seed=args.seed + 1 + i)[0, :L]
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=args.gen,
-                            eos_id=eos))
+                            eos_id=eos, tenant=tenants[i % len(tenants)]))
     mode = (f"chunked prefill (chunk={args.prefill_chunk}, "
             f"budget={args.prefill_budget})" if args.prefill_chunk
             else "monolithic prefill")
+    qos = (f", tenants={{{args.tenant_weights}}}" if weights else "")
     print(f"engine: {args.batch} slots, {n} requests, prompt lens "
           f"{min(len(r.prompt) for r in reqs)}-"
-          f"{max(len(r.prompt) for r in reqs)}, scheduler={args.scheduler}, "
-          f"{mode}, fff backend={args.fff_backend} requested")
+          f"{max(len(r.prompt) for r in reqs)}, scheduler={args.scheduler}"
+          f"{qos}, {mode}, fff backend={args.fff_backend} requested")
     _, m = engine.run(reqs)
     print(m.report())
     print(f"compiled shapes: {engine.compiled_shapes()}")
@@ -166,6 +212,10 @@ def run_engine(args) -> None:
         import json
         payload = m.as_dict()
         payload["compiled_shapes"] = engine.compiled_shapes()
+        if engine.profiles is not None:
+            # learned per-tenant routing profiles (docs/serving.md): lets
+            # operators watch online calibration converge across dumps
+            payload["routing_profiles"] = engine.profiles.as_dict()
         with open(args.metrics_json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote metrics to {args.metrics_json}")

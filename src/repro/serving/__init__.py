@@ -1,16 +1,21 @@
 """Continuous-batching serving engine with FFF leaf-occupancy-aware
-scheduling (DESIGN.md §9)."""
-from repro.serving.engine import ContinuousBatchingEngine, EngineConfig
+scheduling, multi-tenant QoS admission and online per-tenant routing
+profiles (DESIGN.md §9)."""
+from repro.serving.engine import ContinuousBatchingEngine, EngineConfig, \
+    TenantQueues
 from repro.serving.metrics import EngineMetrics, LatencySummary, summarize, \
-    tokens_per_second
+    tenant_breakdown, tokens_per_second
+from repro.serving.profiles import RoutingProfileStore, TenantProfile
 from repro.serving.request import Request, RequestResult
 from repro.serving.scheduler import SCHEDULERS, FCFSScheduler, \
-    LeafAwareScheduler, Scheduler, SchedulerView, make_scheduler
+    LeafAwareScheduler, Scheduler, SchedulerView, \
+    WeightedLeafAwareScheduler, make_scheduler
 
 __all__ = [
     "ContinuousBatchingEngine", "EngineConfig", "EngineMetrics",
-    "LatencySummary", "summarize", "tokens_per_second",
-    "Request", "RequestResult",
+    "LatencySummary", "summarize", "tenant_breakdown", "tokens_per_second",
+    "Request", "RequestResult", "RoutingProfileStore", "TenantProfile",
+    "TenantQueues",
     "SCHEDULERS", "FCFSScheduler", "LeafAwareScheduler", "Scheduler",
-    "SchedulerView", "make_scheduler",
+    "SchedulerView", "WeightedLeafAwareScheduler", "make_scheduler",
 ]

@@ -23,7 +23,12 @@ allocator and interleaved prefill/decode over FIXED compiled shapes:
 Admission policy is pluggable (``serving/scheduler.py``); ``leaf_aware``
 consumes the per-step FFF leaf-occupancy telemetry the engine collects via
 ``core/api.collect_routing`` to compose microbatches that minimize grouped-
-dispatch capacity overflow.
+dispatch capacity overflow, and ``weighted_leaf_aware`` adds weighted-fair
+admission across ``Request.tenant`` classes (the queue keeps per-tenant FIFO
+views — ``TenantQueues``).  Finished requests promote their measured leaf
+occupancy into an online per-tenant ``RoutingProfileStore``
+(``serving/profiles.py``), so hint-less tenants self-calibrate after their
+first completions.
 
 The engine is mesh-agnostic: pass ``trace_ctx`` (e.g. the launch layer's
 ``act.use_mesh`` wrapper) and every jitted call traces under it, so the same
@@ -35,6 +40,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
+import warnings
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -45,8 +51,45 @@ import numpy as np
 from repro.core import api
 from repro.models import lm
 from repro.serving import metrics as metrics_lib
+from repro.serving.profiles import RoutingProfileStore
 from repro.serving.request import Request, RequestResult, SlotState
 from repro.serving.scheduler import Scheduler, SchedulerView, make_scheduler
+
+
+class TenantQueues:
+    """The engine's waiting queue: arrival order globally, FIFO per tenant.
+
+    Schedulers receive the arrival-ordered view (``list(queue)``) — FCFS and
+    ``leaf_aware`` never notice tenants exist — while QoS policies and the
+    per-tenant metrics read the ``per_tenant`` map.  ``remove`` is identity-
+    based (Request is eq=False), matching the admission path's contract."""
+
+    def __init__(self):
+        self._order: List[Request] = []
+        self.per_tenant: Dict[str, deque] = {}
+
+    def append(self, req: Request) -> None:
+        self._order.append(req)
+        self.per_tenant.setdefault(req.tenant, deque()).append(req)
+
+    def remove(self, req: Request) -> None:
+        self._order.remove(req)
+        q = self.per_tenant[req.tenant]
+        q.remove(req)
+        if not q:
+            del self.per_tenant[req.tenant]
+
+    def depth(self, tenant: str) -> int:
+        return len(self.per_tenant.get(tenant, ()))
+
+    def __len__(self):
+        return len(self._order)
+
+    def __bool__(self):
+        return bool(self._order)
+
+    def __iter__(self):
+        return iter(self._order)
 
 
 def _pow2_buckets(lo: int, hi: int) -> Tuple[int, ...]:
@@ -90,6 +133,12 @@ class EngineConfig:
                                               # the configured backend
     telemetry: bool = True               # collect FFF routing stats
     occupancy_ewma: float = 0.5
+    # online per-tenant routing profiles (serving/profiles.py): finished
+    # requests' occupancy EWMA promotes into a per-tenant footprint that
+    # seeds hint-less admissions — leaf_hint becomes optional/self-calibrating
+    learn_profiles: bool = True
+    profile_ewma: float = 0.3            # per-finished-request smoothing
+    profile_min_updates: int = 1         # finished requests before serving
     seed: int = 0
 
     def buckets(self) -> Tuple[int, ...]:
@@ -174,9 +223,22 @@ class ContinuousBatchingEngine:
         S, L = ecfg.num_slots, ecfg.max_len
         self.caches = lm.init_caches(cfg, S, L)
         self.slots: List[Optional[SlotState]] = [None] * S
-        self.queue: deque = deque()
+        self.queue = TenantQueues()
         self.results: List[RequestResult] = []
         self.occupancy = np.zeros((S, max(self.num_leaves, 1)), np.float64)
+        # whether a slot's occupancy row holds MEASURED telemetry (vs a
+        # seeded hint/profile prior): only measured rows may promote into
+        # the profile store — else telemetry-less serving would EWMA the
+        # store's own output (or the client's hint) back into itself and
+        # report "learned" profiles built from zero observations
+        self._measured = np.zeros((S,), bool)
+        # online per-tenant routing profiles, fed by _evict_finished
+        self.profiles: Optional[RoutingProfileStore] = (
+            RoutingProfileStore(self.num_leaves, ewma=ecfg.profile_ewma,
+                                min_updates=ecfg.profile_min_updates)
+            if ecfg.learn_profiles and self.num_leaves else None)
+        self._hint_mismatches = 0            # size-mismatched leaf_hints seen
+        self._hint_warned = False            # warn once per engine
         # what a FREE slot decodes: its last occupant's final token (distinct
         # per-slot ids before first use — a constant would concentrate
         # startup phantom load on one leaf).  Free rows' outputs are
@@ -271,6 +333,27 @@ class ContinuousBatchingEngine:
         ``Request.arrival_time`` offset is never mutated, so request lists
         can be replayed on a warm engine)."""
         self.validate(req)
+        if req.leaf_hint is not None and self.num_leaves and \
+                (req.leaf_hint.size != self.num_leaves
+                 or req.leaf_hint.sum() <= 0):
+            # advisory, so never reject — but a silently dropped hint looks
+            # exactly like a missing one, which hides client-side profile
+            # bugs: warn once and count every occurrence (the
+            # ``hint_mismatches`` metric).  Unusable = wrong width for this
+            # model's leaf count, or zero mass (nothing to normalize) —
+            # the same predicate the seeding/footprint paths discard by.
+            self._hint_mismatches += 1
+            if not self._hint_warned:
+                self._hint_warned = True
+                why = (f"size {req.leaf_hint.size} != num_leaves "
+                       f"{self.num_leaves}"
+                       if req.leaf_hint.size != self.num_leaves
+                       else "zero mass")
+                warnings.warn(
+                    f"request {req.rid} (tenant {req.tenant!r}): unusable "
+                    f"leaf_hint ({why}); ignoring it (counted in the "
+                    f"hint_mismatches metric; further unusable hints warn "
+                    f"only via the counter)", stacklevel=2)
         self._live_rids.add(req.rid)
         self._arrivals[id(req)] = (self.now() if arrival_time is None
                                    else arrival_time)
@@ -354,6 +437,7 @@ class ContinuousBatchingEngine:
             tot = counts[r].sum()
             if tot <= 0:
                 continue
+            self._measured[r] = True
             frac = counts[r] / tot
             prev = self.occupancy[r]
             self.occupancy[r] = frac if not prev.any() else \
@@ -396,7 +480,16 @@ class ContinuousBatchingEngine:
             if st is None or not st.done:
                 continue
             evict[i] = True
+            # promote the finished request's measured footprint into its
+            # tenant's online routing profile BEFORE the row resets — this
+            # is how leaf hints self-calibrate (ROADMAP: learn leaf hints
+            # online).  _measured gates out rows that only ever held a
+            # seeded prior (telemetry off / no FFF stats landed).
+            if self.profiles is not None and self._measured[i] and \
+                    self.occupancy[i].any():
+                self.profiles.update(st.request.tenant, self.occupancy[i])
             self.occupancy[i] = 0.0
+            self._measured[i] = False
             self._prefill_counts[i] = 0.0
             # what this freed slot will decode while idle: the occupant's
             # last NON-EOS token — replaying the EOS id itself would pile
@@ -413,7 +506,8 @@ class ContinuousBatchingEngine:
                 arrival_time=arrival,
                 admitted_time=st.admitted_time,
                 first_token_time=st.first_token_time,
-                finish_time=st.finish_time))
+                finish_time=st.finish_time,
+                tenant=st.request.tenant))
             self.slots[i] = None
         if evict.any():      # one dispatch frees the whole step's slots
             self.caches = self._evict_jit(self.caches, jnp.asarray(evict))
@@ -422,10 +516,20 @@ class ContinuousBatchingEngine:
         return next(b for b in self.ecfg.buckets() if b >= n)
 
     def _seed_hint(self, slot: int, req: Request) -> None:
-        if req.leaf_hint is not None and self.num_leaves and \
-                req.leaf_hint.size == self.num_leaves:
-            self.occupancy[slot] = req.leaf_hint / max(
-                req.leaf_hint.sum(), 1e-9)
+        """Seed the slot's occupancy row before any telemetry lands: the
+        request's own ``leaf_hint`` if usable, else the tenant's learned
+        routing profile (mismatched hints were counted at submit)."""
+        h = req.leaf_hint
+        if h is None or not self.num_leaves or h.size != self.num_leaves \
+                or h.sum() <= 0:
+            # same usability predicate as the schedulers' _footprint — a
+            # zero-mass hint must fall through identically on both sides,
+            # or admission and slot seeding would disagree on the footprint
+            h = (self.profiles.lookup(req.tenant)
+                 if self.profiles is not None else None)
+        if h is not None and self.num_leaves and h.size == self.num_leaves \
+                and h.sum() > 0:
+            self.occupancy[slot] = h / h.sum()
 
     def _admit(self) -> None:
         free = [i for i, s in enumerate(self.slots) if s is None]
@@ -441,7 +545,8 @@ class ContinuousBatchingEngine:
             num_slots=self.ecfg.num_slots,
             dispatch_shards=shards,
             prefilling=np.asarray([s is not None and s.prefilling
-                                   for s in self.slots]))
+                                   for s in self.slots]),
+            profiles=self.profiles)
         if self.ecfg.prefill_chunk:
             # the max_prefilling knob is chunked-only by contract (a
             # monolithic admission never *dwells* in the prefilling state,
@@ -484,7 +589,9 @@ class ContinuousBatchingEngine:
         counts = self._stats_rows(stats, "prefill")
         if counts is not None and counts[0].sum() > 0:
             self.occupancy[slot] = counts[0] / counts[0].sum()
+            self._measured[slot] = True
         else:
+            self._measured[slot] = False
             self._seed_hint(slot, req)
         self._record_token(st, self._sample(st, logits))
 
@@ -498,6 +605,7 @@ class ContinuousBatchingEngine:
                        prefill_pos=0)
         self.slots[slot] = st
         self._prefill_counts[slot] = 0.0
+        self._measured[slot] = False
         self._seed_hint(slot, req)     # prior until measured counts land
 
     def _chunk_prefill(self) -> None:
@@ -541,6 +649,7 @@ class ContinuousBatchingEngine:
                 tot = self._prefill_counts[i].sum()
                 if tot > 0:
                     self.occupancy[i] = self._prefill_counts[i] / tot
+                    self._measured[i] = True
                 st.total_len = len(st.request.prompt)
                 st.first_token_time = self.now()
                 self._record_token(st, self._sample(st, logits[i]))
@@ -618,6 +727,7 @@ class ContinuousBatchingEngine:
         n_results0, n_steps0 = len(self.results), self.n_steps
         n_prefills0, n_lat0 = self.n_prefills, len(self.decode_lat)
         n_chunks0, n_int0 = self.n_chunks, len(self.decode_interval_s)
+        hints0 = self._hint_mismatches
         ovf0 = {k: list(v) for k, v in self._overflow.items()}
         t_start = self.now()
         self._last_decode_end = None    # decode gaps don't span runs
@@ -656,7 +766,8 @@ class ContinuousBatchingEngine:
             overflow_mean=ovf_delta(list(self._overflow)),
             overflow_decode_mean=ovf_delta(["decode"]),
             n_chunks=self.n_chunks - n_chunks0,
-            decode_interval_s=intervals)
+            decode_interval_s=intervals,
+            hint_mismatches=self._hint_mismatches - hints0)
         return results, m
 
     def poll_metrics(self) -> metrics_lib.EngineMetrics:
@@ -675,11 +786,19 @@ class ContinuousBatchingEngine:
             overflow_mean=self.overflow_mean(),
             overflow_decode_mean=self.overflow_mean("decode"),
             n_chunks=self.n_chunks,
-            decode_interval_s=self.decode_interval_s)
+            decode_interval_s=self.decode_interval_s,
+            hint_mismatches=self._hint_mismatches)
         m.queue_depth = len(self.queue)
         m.active_slots = sum(s is not None for s in self.slots)
         m.prefilling_slots = sum(s is not None and s.prefilling
                                  for s in self.slots)
+        # live per-tenant queue depths on top of the finished-request
+        # breakdown (a tenant may be all-queued with nothing finished yet)
+        for t, q in self.queue.per_tenant.items():
+            m.tenants.setdefault(t, {})["queue_depth"] = len(q)
+        if self.profiles is not None:
+            for t, snap in self.profiles.as_dict().items():
+                m.tenants.setdefault(t, {})["profile"] = snap
         return m
 
     # -- fixed-shape accounting ----------------------------------------------

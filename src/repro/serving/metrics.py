@@ -6,7 +6,7 @@ All inputs are seconds; summaries render in milliseconds.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Dict, Iterable, Sequence
 
 import numpy as np
 
@@ -82,9 +82,13 @@ class EngineMetrics:
     overflow_fraction_mean: float = 0.0
     overflow_decode_mean: float = 0.0    # decode-phase only: the scheduler's
                                          # microbatch-composition signal
+    hint_mismatches: int = 0             # leaf_hints dropped for size mismatch
     queue_depth: int = 0                 # waiting requests (instantaneous)
     active_slots: int = 0                # occupied slots (instantaneous)
     prefilling_slots: int = 0            # slots mid-chunked-prefill
+    # per-tenant QoS breakdown over finished requests (tenant -> counters +
+    # latency summaries; poll_metrics adds live queue_depth / profile keys)
+    tenants: Dict[str, dict] = dataclasses.field(default_factory=dict)
 
     @property
     def throughput_tok_s(self) -> float:
@@ -105,6 +109,17 @@ class EngineMetrics:
             f"fff overflow_fraction mean {self.overflow_fraction_mean:.4f} "
             f"(decode-only {self.overflow_decode_mean:.4f})",
         ]
+        if self.hint_mismatches:
+            lines.append(f"leaf_hint size mismatches dropped: "
+                         f"{self.hint_mismatches}")
+        if set(self.tenants) - {"default"}:
+            for t, d in sorted(self.tenants.items()):
+                if "n_requests" not in d:
+                    continue
+                lines.append(
+                    f"tenant {t}: {d['n_requests']} requests, "
+                    f"{d['n_tokens']} tokens ({d['throughput_tok_s']:.1f} "
+                    f"tok/s), ttft p50 {d['ttft_ms']['p50_ms']:.2f}ms")
         return "\n".join(lines)
 
     def as_dict(self) -> dict:
@@ -122,10 +137,32 @@ class EngineMetrics:
             "decode_interval_ms": self.decode_interval.as_dict(),
             "overflow_fraction_mean": self.overflow_fraction_mean,
             "overflow_decode_mean": self.overflow_decode_mean,
+            "hint_mismatches": self.hint_mismatches,
             "queue_depth": self.queue_depth,
             "active_slots": self.active_slots,
             "prefilling_slots": self.prefilling_slots,
+            "tenants": self.tenants,
         }
+
+
+def tenant_breakdown(results: Iterable, elapsed_s: float) -> Dict[str, dict]:
+    """Per-tenant QoS slice of finished requests: request/token counts,
+    tokens/s over the shared wall clock (under saturation the ratios track
+    the configured admission weights — the fairness acceptance signal), and
+    TTFT/e2e summaries."""
+    rs = list(results)
+    out: Dict[str, dict] = {}
+    for t in sorted({r.tenant for r in rs}):
+        trs = [r for r in rs if r.tenant == t]
+        n_tok = sum(r.n_generated for r in trs)
+        out[t] = {
+            "n_requests": len(trs),
+            "n_tokens": n_tok,
+            "throughput_tok_s": tokens_per_second(n_tok, elapsed_s),
+            "ttft_ms": summarize([r.ttft for r in trs]).as_dict(),
+            "e2e_ms": summarize([r.e2e_latency for r in trs]).as_dict(),
+        }
+    return out
 
 
 def from_results(results: Iterable, *, elapsed_s: float, n_steps: int,
@@ -133,7 +170,8 @@ def from_results(results: Iterable, *, elapsed_s: float, n_steps: int,
                  overflow_mean: float,
                  overflow_decode_mean: float = 0.0,
                  n_chunks: int = 0,
-                 decode_interval_s: Sequence[float] = ()) -> EngineMetrics:
+                 decode_interval_s: Sequence[float] = (),
+                 hint_mismatches: int = 0) -> EngineMetrics:
     """Build an ``EngineMetrics`` from finished ``RequestResult`` records."""
     rs = list(results)
     return EngineMetrics(
@@ -147,4 +185,6 @@ def from_results(results: Iterable, *, elapsed_s: float, n_steps: int,
         decode_step=summarize(decode_lat_s),
         decode_interval=summarize(decode_interval_s),
         overflow_fraction_mean=overflow_mean,
-        overflow_decode_mean=overflow_decode_mean)
+        overflow_decode_mean=overflow_decode_mean,
+        hint_mismatches=hint_mismatches,
+        tenants=tenant_breakdown(rs, elapsed_s))

@@ -1,0 +1,109 @@
+"""Online per-tenant routing profiles (DESIGN.md §9).
+
+The FFF paper's conditionality is *noiseless*: a prompt's leaf footprint is
+a stable property of its content, so a tenant's traffic has a measurable,
+slowly-drifting routing signature.  ``RoutingProfileStore`` learns that
+signature online — every finished request's accumulated EWMA leaf occupancy
+(the engine's per-slot telemetry) folds into its tenant's profile — and
+serves it back as the admission prior for the tenant's *next* requests.
+``Request.leaf_hint`` thereby becomes optional and self-calibrating: the
+offline probe (``benchmarks/serving_load.py::calibrate_classes``) is still
+the ground-truth reference, but no longer a deployment prerequisite.
+
+Profiles are advisory exactly like hints: a stale or wrong profile costs
+scheduling quality, never correctness.  Pure host-side numpy, deterministic
+for a given update sequence (no wall-clock, no RNG).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TenantProfile:
+    """One tenant's learned leaf footprint: a normalized (E,) EWMA over the
+    occupancy rows of its finished requests, plus the update count that
+    gates serving it (``min_updates``)."""
+    footprint: np.ndarray
+    n_updates: int = 0
+
+
+class RoutingProfileStore:
+    """Per-tenant EWMA leaf-footprint store.
+
+    Args:
+        num_leaves:  E — telemetry width; rows of any other size are
+                     rejected by ``update`` (they came from a different
+                     model/site and would poison the profile).
+        ewma:        per-*request* smoothing weight of the newest finished
+                     request's footprint (the engine already EWMA-smooths
+                     per step within a request; this level tracks tenant
+                     drift across requests).
+        min_updates: how many finished requests a tenant needs before
+                     ``lookup`` serves its profile — below it the scheduler
+                     falls back to the request's own hint or the uniform
+                     prior (one request is already a usable signal; raise
+                     this for bursty tenants whose first request may be
+                     unrepresentative).
+    """
+
+    def __init__(self, num_leaves: int, ewma: float = 0.3,
+                 min_updates: int = 1):
+        if num_leaves <= 0:
+            raise ValueError(f"num_leaves must be positive, got {num_leaves}")
+        if not 0.0 < ewma <= 1.0:
+            raise ValueError(f"ewma must be in (0, 1], got {ewma}")
+        if min_updates < 1:
+            raise ValueError(f"min_updates must be >= 1, got {min_updates}")
+        self.num_leaves = num_leaves
+        self.ewma = ewma
+        self.min_updates = min_updates
+        self._profiles: Dict[str, TenantProfile] = {}
+
+    def update(self, tenant: str, occupancy_row: np.ndarray) -> None:
+        """Fold one finished request's (E,) leaf-occupancy row into the
+        tenant's profile.  Zero-mass or wrong-width rows are ignored (a
+        request that never produced telemetry carries no signal)."""
+        row = np.asarray(occupancy_row, np.float64).reshape(-1)
+        if row.size != self.num_leaves:
+            return
+        tot = row.sum()
+        if tot <= 0 or not np.isfinite(tot):
+            return
+        frac = row / tot
+        prof = self._profiles.get(tenant)
+        if prof is None:
+            self._profiles[tenant] = TenantProfile(footprint=frac.copy(),
+                                                   n_updates=1)
+        else:
+            a = self.ewma
+            prof.footprint = (1.0 - a) * prof.footprint + a * frac
+            prof.n_updates += 1
+
+    def lookup(self, tenant: str) -> Optional[np.ndarray]:
+        """The tenant's learned (E,) footprint (a copy — callers may
+        normalize/mutate), or None until ``min_updates`` requests have
+        reported."""
+        prof = self._profiles.get(tenant)
+        if prof is None or prof.n_updates < self.min_updates:
+            return None
+        return prof.footprint.copy()
+
+    def n_updates(self, tenant: str) -> int:
+        prof = self._profiles.get(tenant)
+        return 0 if prof is None else prof.n_updates
+
+    def tenants(self):
+        return sorted(self._profiles)
+
+    def as_dict(self) -> dict:
+        """JSON-ready snapshot: tenant -> {n_updates, footprint list,
+        dominant leaf} (exported under ``--metrics-json`` for operators
+        watching convergence)."""
+        return {t: {"n_updates": p.n_updates,
+                    "dominant_leaf": int(p.footprint.argmax()),
+                    "footprint": [round(float(x), 6) for x in p.footprint]}
+                for t, p in sorted(self._profiles.items())}

@@ -1,11 +1,16 @@
 """Serving request/result types (DESIGN.md §9).
 
 A ``Request`` is what enters the engine queue: prompt tokens plus sampling
-and stop parameters.  ``leaf_hint`` is an optional prior over the model's FFF
-leaves for this request's tokens (e.g. a per-tenant routing profile measured
-offline) — the ``leaf_aware`` scheduler uses it to predict how a candidate
-would load the grouped dispatch before the request has ever been prefilled;
-once admitted, live telemetry replaces the hint.
+and stop parameters.  ``tenant`` names the traffic class the request bills
+to — the engine keeps per-tenant queues, the ``weighted_leaf_aware``
+scheduler does weighted-fair admission across tenants, and the online
+routing-profile store (``serving/profiles.py``) learns each tenant's leaf
+footprint from its finished requests.  ``leaf_hint`` is an optional prior
+over the model's FFF leaves for this request's tokens (e.g. a per-tenant
+routing profile measured offline) — the leaf-aware schedulers use it to
+predict how a candidate would load the grouped dispatch before the request
+has ever been prefilled; without one they fall back to the tenant's learned
+profile, then uniform.  Once admitted, live telemetry replaces both.
 """
 from __future__ import annotations
 
@@ -27,11 +32,15 @@ class Request:
     eos_id: Optional[int] = None            # None = run the full budget
     arrival_time: float = 0.0               # engine-clock seconds
     leaf_hint: Optional[np.ndarray] = None  # (E,) nonnegative, any scale
+    tenant: str = "default"                 # traffic class (QoS accounting)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         if self.prompt.size == 0:
             raise ValueError(f"request {self.rid}: empty prompt")
+        if not self.tenant or not isinstance(self.tenant, str):
+            raise ValueError(f"request {self.rid}: tenant must be a "
+                             f"non-empty string")
         if self.max_new_tokens < 1:
             raise ValueError(f"request {self.rid}: max_new_tokens < 1")
         if self.leaf_hint is not None:
@@ -42,6 +51,12 @@ class Request:
                 # queue-jump every honest request
                 raise ValueError(f"request {self.rid}: leaf_hint must be "
                                  f"nonnegative")
+            if not np.isfinite(self.leaf_hint).all():
+                # NaN defeats every downstream usability predicate
+                # (sum() <= 0 is False for NaN) and would poison the
+                # scheduler's accumulated load for the whole admission round
+                raise ValueError(f"request {self.rid}: leaf_hint must be "
+                                 f"finite")
 
 
 @dataclasses.dataclass(eq=False)
@@ -56,6 +71,7 @@ class RequestResult:
     admitted_time: float
     first_token_time: float
     finish_time: float
+    tenant: str = "default"
 
     @property
     def n_generated(self) -> int:

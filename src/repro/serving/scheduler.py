@@ -13,10 +13,18 @@ Built-ins:
   microbatch decides that overflow (Fast Feedforward Networks, 2023; skewed
   leaf load is the failure mode the load-balancing follow-up targets).  The
   scheduler greedily admits, from a bounded look-ahead window, the candidate
-  whose predicted leaf footprint (its ``leaf_hint`` prior, or live EWMA
-  occupancy once measured) minimizes predicted capacity overflow of the
-  composed batch.  A hold counter bounds how often the queue head can be
-  bypassed, so no request starves.
+  whose predicted leaf footprint (its ``leaf_hint`` prior, the tenant's
+  learned routing profile, or live EWMA occupancy once measured) minimizes
+  predicted capacity overflow of the composed batch.  A hold counter bounds
+  how often the queue head can be bypassed, so no request starves.
+* ``weighted_leaf_aware`` — multi-tenant QoS on top of the same objective:
+  stride accounting (deterministic weighted round-robin — each admission
+  advances its tenant's virtual pass by 1/weight, the tenant with the
+  smallest pass admits next) apportions admission slots across tenants in
+  proportion to configured weights, and *within* the winning tenant the
+  leaf-aware pick composes the batch.  Weighted fairness holds under
+  overload by construction; starvation is impossible for any tenant with
+  positive weight.
 """
 from __future__ import annotations
 
@@ -47,6 +55,9 @@ class SchedulerView:
     prefilling: (num_slots,) bool — slots admitted but still mid-chunked-
                prefill (all False under monolithic prefill); the
                ``max_prefilling`` admission cap counts these
+    profiles:  the engine's online ``RoutingProfileStore`` (or None) —
+               leaf-aware schedulers fall back to ``profiles.lookup(
+               req.tenant)`` for candidates without a usable ``leaf_hint``
     """
     occupancy: np.ndarray
     active: np.ndarray
@@ -55,6 +66,7 @@ class SchedulerView:
     num_slots: int
     dispatch_shards: int = 1
     prefilling: Optional[np.ndarray] = None
+    profiles: Optional[object] = None    # serving.profiles.RoutingProfileStore
 
     def leaf_capacity(self) -> float:
         """Whole-batch per-leaf slot capacity of one decode dispatch: the
@@ -139,8 +151,12 @@ class LeafAwareScheduler(Scheduler):
         self.max_hold = max_hold
         self._holds: Dict[int, int] = {}
 
-    def _footprint(self, req: Request, E: int) -> np.ndarray:
+    def _footprint(self, req: Request, E: int,
+                   view: Optional[SchedulerView] = None) -> np.ndarray:
         h = req.leaf_hint
+        if (h is None or h.size != E or h.sum() <= 0) and view is not None \
+                and view.profiles is not None:
+            h = view.profiles.lookup(req.tenant)   # learned tenant profile
         if h is None or h.size != E or h.sum() <= 0:
             return np.full((E,), 1.0 / E)
         return h / h.sum()
@@ -148,6 +164,25 @@ class LeafAwareScheduler(Scheduler):
     @staticmethod
     def _overflow(load: np.ndarray, cap: float) -> float:
         return float(np.maximum(load - cap, 0.0).sum())
+
+    def _pick(self, pool: List[Request], load: np.ndarray, E: int,
+              cap: float, view: SchedulerView) -> int:
+        """Hold-guarded leaf-aware pick: index into ``pool`` (a FIFO window)
+        minimizing the lexicographic cost (predicted overflow, then
+        max-leaf load — balance below the capacity threshold too, headroom
+        — then arrival order, stable/deterministic).  The queue head is
+        force-picked once its hold count reaches ``max_hold`` (the
+        starvation guard).  Shared by ``leaf_aware`` and the within-tenant
+        pick of ``weighted_leaf_aware`` — one objective, two policies."""
+        if E <= 0 or len(pool) == 1:
+            return 0
+        if self._holds.get(pool[0].rid, 0) >= self.max_hold:
+            return 0
+        costs = []
+        for i, r in enumerate(pool):
+            nl = load + self._footprint(r, E, view)
+            costs.append((self._overflow(nl, cap), float(nl.max()), i))
+        return min(costs)[2]
 
     def select(self, waiting, n_free, view):
         if view.num_leaves <= 0 or not waiting:
@@ -163,20 +198,9 @@ class LeafAwareScheduler(Scheduler):
         for _ in range(min(n_free, len(waiting))):
             if not pool:
                 break
-            head = pool[0]
-            if self._holds.get(head.rid, 0) >= self.max_hold:
-                pick = 0                                  # starvation guard
-            else:
-                # lexicographic: predicted overflow, then max-leaf load
-                # (balance below the capacity threshold too — headroom),
-                # then arrival order (stable/deterministic)
-                costs = []
-                for i, r in enumerate(pool):
-                    nl = load + self._footprint(r, E)
-                    costs.append((self._overflow(nl, cap), float(nl.max()), i))
-                pick = min(costs)[2]
+            pick = self._pick(pool, load, E, cap, view)
             req = pool.pop(pick)
-            load = load + self._footprint(req, E)
+            load = load + self._footprint(req, E, view)
             chosen.append(req)
         chosen_ids = {r.rid for r in chosen}
         # bump hold counters for bypassed waiters ahead of any chosen one
@@ -190,9 +214,108 @@ class LeafAwareScheduler(Scheduler):
         return chosen
 
 
+class WeightedLeafAwareScheduler(LeafAwareScheduler):
+    """Multi-tenant weighted-fair admission with leaf-aware composition
+    (module docstring).
+
+    Tenant selection is STRIDE SCHEDULING: each tenant carries a virtual
+    ``pass``; every admission it wins advances its pass by ``1 / weight``,
+    and the waiting tenant with the smallest pass wins the next free slot.
+    Over any saturated interval each tenant's admission share converges to
+    ``weight_t / sum(weights of backlogged tenants)`` with bounded lag — the
+    deficit-round-robin guarantee, deterministically (name-ordered
+    tie-break, no RNG).  A tenant that rejoins after idling resumes at the
+    current virtual time, not its stale pass, so it cannot burst-catch-up
+    and monopolize the slots its peers were promised.
+
+    Within the winning tenant, the pick over its first ``window`` waiters is
+    the parent class's leaf-aware objective (predicted overflow, max-leaf
+    load, arrival order) against the composed batch, with the same
+    ``max_hold`` guard on the tenant's queue head — so QoS weights decide
+    *who* gets capacity while FFF telemetry still decides *which* of their
+    requests mix well.
+
+    weights:        tenant -> positive weight (admission-rate share; for
+                    similar request shapes this is also the slot-time and
+                    tokens/s share).  Tenants not listed get
+                    ``default_weight``.
+    default_weight: weight for unlisted tenants (> 0).
+    """
+    name = "weighted_leaf_aware"
+
+    def __init__(self, weights: Optional[Dict[str, float]] = None,
+                 default_weight: float = 1.0, window: int = 16,
+                 max_hold: int = 8, max_prefilling: int = 0):
+        super().__init__(window=window, max_hold=max_hold,
+                         max_prefilling=max_prefilling)
+        weights = dict(weights or {})
+        for t, w in weights.items():
+            # finite required: an inf weight makes the stride 0, freezing
+            # the tenant's pass at the virtual time — it would win every
+            # admission and starve all peers
+            if not (w > 0 and np.isfinite(w)):
+                raise ValueError(f"tenant {t!r}: weight must be positive "
+                                 f"and finite, got {w}")
+        if not (default_weight > 0 and np.isfinite(default_weight)):
+            raise ValueError(f"default_weight must be positive and finite, "
+                             f"got {default_weight}")
+        self.weights = weights
+        self.default_weight = default_weight
+        self._pass: Dict[str, float] = {}
+        self._vtime = 0.0                   # pass of the last admission
+
+    def weight(self, tenant: str) -> float:
+        return self.weights.get(tenant, self.default_weight)
+
+    def select(self, waiting, n_free, view):
+        if not waiting:
+            return []
+        E = view.num_leaves
+        cap = view.leaf_capacity()
+        load = (view.occupancy[view.active].sum(axis=0)
+                if E > 0 and view.active.any() else np.zeros((max(E, 1),)))
+        groups: Dict[str, List[Request]] = {}
+        for r in waiting:                    # insertion order = first arrival
+            groups.setdefault(r.tenant, []).append(r)
+        for t in groups:                     # rejoin at current virtual time
+            self._pass[t] = max(self._pass.get(t, self._vtime), self._vtime)
+        chosen: List[Request] = []
+        for _ in range(min(n_free, len(waiting))):
+            live = [t for t, g in groups.items() if g]
+            if not live:
+                break
+            t = min(live, key=lambda name: (self._pass[name], name))
+            pool = groups[t][: max(self.window, 1)]
+            pick = self._pick(pool, load, E, cap, view)
+            req = pool[pick]
+            groups[t].remove(req)
+            if pick > 0:                     # bypassed this tenant's head
+                head = pool[0]
+                self._holds[head.rid] = self._holds.get(head.rid, 0) + 1
+            self._holds.pop(req.rid, None)
+            if E > 0:
+                load = load + self._footprint(req, E, view)
+            chosen.append(req)
+            self._vtime = self._pass[t]
+            self._pass[t] += 1.0 / self.weight(t)
+        # bounded state under churning tenant names: drop pass entries for
+        # absent tenants ONLY once the virtual time has caught up to them —
+        # an absent tenant still ahead of vtime carries stride debt it just
+        # consumed, and deleting that would let a drip-feed tenant (queue
+        # drains every time it wins) rejoin debt-free each round and take
+        # ~every other slot regardless of weight.  Entries expire naturally:
+        # a pass exceeds vtime by at most one stride, and vtime advances
+        # every admission.
+        for t in [t for t in self._pass
+                  if t not in groups and self._pass[t] <= self._vtime]:
+            del self._pass[t]
+        return chosen
+
+
 SCHEDULERS = {
     "fcfs": FCFSScheduler,
     "leaf_aware": LeafAwareScheduler,
+    "weighted_leaf_aware": WeightedLeafAwareScheduler,
 }
 
 
@@ -201,8 +324,10 @@ def make_scheduler(name: str, **kw) -> Scheduler:
 
     ``kw`` is forwarded to the scheduler's constructor (``EngineConfig.
     scheduler_kw`` arrives here): ``fcfs`` takes ``max_prefilling``;
-    ``leaf_aware`` additionally takes ``window`` and ``max_hold``.  Unknown
-    names raise KeyError listing the registry."""
+    ``leaf_aware`` additionally takes ``window`` and ``max_hold``;
+    ``weighted_leaf_aware`` additionally takes ``weights`` (tenant -> weight
+    dict) and ``default_weight``.  Unknown names raise KeyError listing the
+    registry."""
     try:
         cls = SCHEDULERS[name]
     except KeyError:

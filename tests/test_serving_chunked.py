@@ -268,6 +268,23 @@ def test_scheduler_admission_cap_math():
                           max_prefilling=2).admission_cap(view) == 0
 
 
+def test_compile_bound(model):
+    """The documented compile contract, standalone: chunked serving runs on
+    EXACTLY decode 1 + chunk slab 1 + evict 1 compiled traces with zero
+    bucket prefills (docs/serving.md).  The CI serving job runs this single
+    node id as a dedicated gate step, so a contract regression fails loudly
+    on its own instead of somewhere inside the full suite."""
+    cfg, params = model
+    eng = _engine(cfg, params)
+    eng.run(_mixed_requests(5, np.random.default_rng(9)))
+    shapes = eng.compiled_shapes()
+    assert shapes["decode"] == 1, shapes
+    assert shapes["prefill_chunk"] == 1, shapes
+    assert shapes["evict"] == 1, shapes
+    assert all(v == 0 for k, v in shapes.items()
+               if k.startswith("prefill_") and k != "prefill_chunk"), shapes
+
+
 def test_chunk_config_validation(model):
     cfg, params = model
     with pytest.raises(ValueError, match="power of two"):

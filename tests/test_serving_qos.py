@@ -1,0 +1,474 @@
+"""Multi-tenant QoS properties (ISSUE 5; DESIGN.md §9).
+
+Host-only tier (pure numpy, no model): weighted-fair admission under
+saturation, no-starvation under extreme/arbitrary weights (hypothesis),
+stride determinism, routing-profile-store convergence determinism.
+
+Engine tier (reduced config): tenant isolation (a burst cannot evict
+another tenant's active slots), the hint-mismatch warn-once + counter fix,
+online profile learning end-to-end, and the per-tenant metrics schema.
+"""
+import numpy as np
+import pytest
+
+try:        # the property test is extra assurance where hypothesis exists
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                  # pragma: no cover - env-dependent
+    HAVE_HYPOTHESIS = False
+
+from repro.configs import registry
+from repro.models import lm
+from repro.serving import (ContinuousBatchingEngine, EngineConfig, Request,
+                           RoutingProfileStore, make_scheduler)
+from repro.serving.scheduler import SchedulerView
+
+import jax
+
+
+# ---------------------------------------------------------------------------
+# host-only tier: weighted scheduler properties
+# ---------------------------------------------------------------------------
+
+def _view(num_slots=8, E=4, occupancy=None, active=None, cf=2.0,
+          profiles=None):
+    return SchedulerView(
+        occupancy=(occupancy if occupancy is not None
+                   else np.zeros((num_slots, E))),
+        active=(active if active is not None
+                else np.zeros((num_slots,), bool)),
+        num_leaves=E, capacity_factor=cf, num_slots=num_slots,
+        profiles=profiles)
+
+
+def _req(rid, tenant="default", hint=None, L=4):
+    return Request(rid=rid, prompt=np.ones((L,), np.int32),
+                   max_new_tokens=4, leaf_hint=hint, tenant=tenant)
+
+
+def _drain(sched, waiting, n, view):
+    """n single-slot admission rounds; returns the admitted tenants."""
+    out = []
+    for _ in range(n):
+        got = sched.select(waiting, 1, view)
+        assert len(got) == 1, "scheduler must admit when a slot is free"
+        waiting.remove(got[0])
+        out.append(got[0].tenant)
+    return out
+
+def test_weighted_fairness_under_saturation():
+    """With both tenants backlogged throughout, admissions split in weight
+    proportion (stride scheduling is exact up to rounding per cycle)."""
+    s = make_scheduler("weighted_leaf_aware", weights={"a": 3.0, "b": 1.0})
+    waiting = [_req(i, tenant=("a" if i % 2 else "b")) for i in range(80)]
+    admitted = _drain(s, waiting, 40, _view())
+    assert admitted.count("a") == 30
+    assert admitted.count("b") == 10
+
+
+def test_weighted_share_tracks_weights_three_tenants():
+    w = {"a": 4.0, "b": 2.0, "c": 1.0}
+    s = make_scheduler("weighted_leaf_aware", weights=w)
+    waiting = [_req(i, tenant="abc"[i % 3]) for i in range(210)]
+    admitted = _drain(s, waiting, 70, _view())
+    assert admitted.count("a") == 40
+    assert admitted.count("b") == 20
+    assert admitted.count("c") == 10
+
+
+def test_weighted_fifo_within_tenant_without_telemetry():
+    """No telemetry (E=0): within each tenant, admissions stay FIFO."""
+    s = make_scheduler("weighted_leaf_aware", weights={"a": 2.0, "b": 1.0})
+    waiting = [_req(i, tenant=("a" if i < 5 else "b")) for i in range(10)]
+    order = {"a": [], "b": []}
+    for _ in range(10):
+        got = s.select(waiting, 1, _view(E=0))
+        waiting.remove(got[0])
+        order[got[0].tenant].append(got[0].rid)
+    assert order["a"] == sorted(order["a"])
+    assert order["b"] == sorted(order["b"])
+
+
+def test_weighted_unlisted_tenant_gets_default_weight():
+    s = make_scheduler("weighted_leaf_aware", weights={"vip": 3.0},
+                       default_weight=1.0)
+    waiting = [_req(i, tenant=("vip" if i % 2 else "anon"))
+               for i in range(40)]
+    admitted = _drain(s, waiting, 20, _view())
+    assert admitted.count("vip") == 15
+    assert admitted.count("anon") == 5
+
+
+def test_weighted_drip_feed_tenant_cannot_dodge_stride_debt():
+    """A tenant whose queue drains every time it wins (drip-feed, one
+    request in flight at a time) must still be held to its weight: the
+    stride debt it consumed survives the moments it has nothing waiting."""
+    s = make_scheduler("weighted_leaf_aware", weights={"gold": 3.0,
+                                                       "free": 1.0})
+    gold = [_req(i, tenant="gold") for i in range(60)]
+    admitted = []
+    next_free_rid = 1000
+    drip = [_req(next_free_rid, tenant="free")]
+    for _ in range(40):
+        waiting = gold + drip            # free offers at most one request
+        got = s.select(waiting, 1, _view())
+        assert len(got) == 1
+        admitted.append(got[0].tenant)
+        if got[0].tenant == "free":
+            next_free_rid += 1
+            drip = [_req(next_free_rid, tenant="free")]   # fresh drip
+        else:
+            gold.remove(got[0])
+    assert admitted.count("gold") == 30
+    assert admitted.count("free") == 10
+
+
+def test_weighted_idle_tenant_rejoins_without_burst_catchup():
+    """A tenant absent for many rounds must NOT monopolize admission on
+    return: it rejoins at the current virtual time, not its stale pass."""
+    s = make_scheduler("weighted_leaf_aware", weights={"a": 1.0, "b": 1.0})
+    waiting = [_req(i, tenant="a") for i in range(20)]
+    _drain(s, waiting, 10, _view())               # b idle for 10 rounds
+    waiting += [_req(100 + i, tenant="b") for i in range(20)]
+    admitted = _drain(s, waiting, 10, _view())
+    # equal weights -> the comeback tenant gets ~half, not everything
+    assert 4 <= admitted.count("b") <= 6
+
+
+def test_weighted_rejects_bad_weights():
+    with pytest.raises(ValueError, match="positive"):
+        make_scheduler("weighted_leaf_aware", weights={"a": 0.0})
+    with pytest.raises(ValueError, match="positive"):
+        make_scheduler("weighted_leaf_aware", default_weight=-1.0)
+    # inf would zero the stride: that tenant's pass never advances and it
+    # wins every admission — exactly the starvation the class forbids
+    with pytest.raises(ValueError, match="finite"):
+        make_scheduler("weighted_leaf_aware", weights={"a": float("inf")})
+    with pytest.raises(ValueError, match="finite"):
+        make_scheduler("weighted_leaf_aware", default_weight=float("nan"))
+
+
+def test_weighted_deterministic():
+    rng = np.random.default_rng(0)
+    ws = [_req(i, tenant="ab"[i % 2], hint=rng.dirichlet(np.ones(4)))
+          for i in range(12)]
+    picks = []
+    for _ in range(2):
+        s = make_scheduler("weighted_leaf_aware", weights={"a": 2.0})
+        picks.append([r.rid for r in s.select(list(ws), 6, _view(E=4))])
+    assert picks[0] == picks[1]
+
+
+def test_weighted_leaf_aware_composes_within_tenant():
+    """The winning tenant's pick is leaf-aware: with load on leaf 0 and the
+    tenant offering a hot and a cold candidate, the cold one admits first."""
+    E = 4
+    occ = np.zeros((8, E))
+    occ[0] = occ[1] = [1.0, 0, 0, 0]
+    active = np.zeros((8,), bool)
+    active[:2] = True
+    hot = np.array([1.0, 0, 0, 0])
+    cold = np.array([0, 1.0, 0, 0])
+    s = make_scheduler("weighted_leaf_aware", weights={"a": 1.0})
+    ws = [_req(0, "a", hot), _req(1, "a", hot), _req(2, "a", cold)]
+    view = _view(num_slots=8, E=E, occupancy=occ, active=active, cf=0.01)
+    assert [r.rid for r in s.select(ws, 1, view)] == [2]
+
+
+def test_weighted_footprint_falls_back_to_profile():
+    """Hint-less candidates draw their footprint from the tenant's learned
+    routing profile, steering composition exactly like a hint would."""
+    E = 4
+    occ = np.zeros((8, E))
+    occ[0] = occ[1] = [1.0, 0, 0, 0]
+    active = np.zeros((8,), bool)
+    active[:2] = True
+    profiles = RoutingProfileStore(E)
+    profiles.update("hot", np.array([1.0, 0, 0, 0]))
+    profiles.update("cold", np.array([0, 1.0, 0, 0]))
+    s = make_scheduler("weighted_leaf_aware")
+    ws = [_req(0, "hot"), _req(1, "hot"), _req(2, "cold")]   # no hints
+    view = _view(num_slots=8, E=E, occupancy=occ, active=active, cf=0.01,
+                 profiles=profiles)
+    assert [r.rid for r in s.select(ws, 1, view)] == [2]
+
+
+def _assert_no_starvation(w_a, w_b, order):
+    """Progress + eventual admission for any positive weights and arrival
+    pattern: extreme weight ratios skew shares, never liveness."""
+    s = make_scheduler("weighted_leaf_aware", weights={"a": w_a, "b": w_b})
+    waiting = [_req(i, tenant=t) for i, t in enumerate(order)]
+    view = _view()
+    seen = set()
+    for _ in range(len(order)):
+        got = s.select(waiting, 1, view)
+        assert len(got) == 1
+        seen.add(got[0].rid)
+        waiting.remove(got[0])
+    assert seen == set(range(len(order)))
+
+
+def test_weighted_no_starvation_extreme_weights_deterministic():
+    _assert_no_starvation(1000.0, 0.001, ["a", "b"] * 15)
+    _assert_no_starvation(0.001, 1000.0, ["a"] * 10 + ["b"] * 10)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(w_a=st.floats(0.001, 1000.0), w_b=st.floats(0.001, 1000.0),
+           order=st.lists(st.sampled_from(["a", "b"]), min_size=1,
+                          max_size=30))
+    def test_weighted_no_starvation_extreme_weights(w_a, w_b, order):
+        _assert_no_starvation(w_a, w_b, order)
+
+
+# ---------------------------------------------------------------------------
+# host-only tier: routing-profile store
+# ---------------------------------------------------------------------------
+
+def test_profile_store_convergence_determinism():
+    """Two stores fed the same update sequence are bit-identical, and a
+    stationary input converges to itself."""
+    rng = np.random.default_rng(0)
+    rows = [rng.dirichlet(np.ones(8)) for _ in range(50)]
+    stores = [RoutingProfileStore(8, ewma=0.3) for _ in range(2)]
+    for st_ in stores:
+        for r in rows:
+            st_.update("t", r)
+    np.testing.assert_array_equal(stores[0].lookup("t"),
+                                  stores[1].lookup("t"))
+    fixed = np.array([0.0, 0.25, 0.75, 0.0])
+    store = RoutingProfileStore(4, ewma=0.5)
+    for _ in range(30):
+        store.update("t", fixed * 10.0)         # any scale: normalized
+    np.testing.assert_allclose(store.lookup("t"), fixed, atol=1e-6)
+    assert store.n_updates("t") == 30
+
+
+def test_profile_store_gates_and_filters():
+    store = RoutingProfileStore(4, min_updates=2)
+    assert store.lookup("t") is None
+    store.update("t", np.zeros(4))              # zero mass: no signal
+    store.update("t", np.ones(8))               # wrong width: rejected
+    assert store.n_updates("t") == 0
+    store.update("t", np.array([1.0, 0, 0, 0]))
+    assert store.lookup("t") is None            # below min_updates
+    store.update("t", np.array([1.0, 0, 0, 0]))
+    np.testing.assert_allclose(store.lookup("t"), [1, 0, 0, 0])
+    assert store.tenants() == ["t"]
+    assert store.as_dict()["t"]["dominant_leaf"] == 0
+
+
+def test_profile_store_lookup_returns_copy():
+    store = RoutingProfileStore(2)
+    store.update("t", np.array([1.0, 1.0]))
+    got = store.lookup("t")
+    got[:] = 0.0
+    np.testing.assert_allclose(store.lookup("t"), [0.5, 0.5])
+
+
+def test_profile_store_validates_args():
+    with pytest.raises(ValueError, match="num_leaves"):
+        RoutingProfileStore(0)
+    with pytest.raises(ValueError, match="ewma"):
+        RoutingProfileStore(4, ewma=0.0)
+    with pytest.raises(ValueError, match="min_updates"):
+        RoutingProfileStore(4, min_updates=0)
+
+
+def test_request_validates_tenant():
+    with pytest.raises(ValueError, match="tenant"):
+        Request(rid=0, prompt=np.ones(4, np.int32), tenant="")
+
+
+def test_request_rejects_nonfinite_hint():
+    # NaN slips every sum()<=0 usability predicate and would poison the
+    # scheduler's accumulated load — reject at construction
+    for bad in (np.array([np.nan, 1.0]), np.array([np.inf, 0.0])):
+        with pytest.raises(ValueError, match="finite"):
+            Request(rid=0, prompt=np.ones(4, np.int32), leaf_hint=bad)
+
+
+def test_parse_tenant_weights_cli_boundary():
+    from repro.launch.serve import parse_tenant_weights
+    assert parse_tenant_weights("gold=3,free=1") == {"gold": 3.0, "free": 1.0}
+    assert parse_tenant_weights("") == {}
+    with pytest.raises(ValueError, match="not tenant=weight"):
+        parse_tenant_weights("gold")
+    with pytest.raises(ValueError, match="not a number"):
+        parse_tenant_weights("gold=abc")
+    with pytest.raises(ValueError, match="positive and finite"):
+        parse_tenant_weights("gold=0")
+    with pytest.raises(ValueError, match="positive and finite"):
+        parse_tenant_weights("gold=inf")
+    with pytest.raises(ValueError, match="twice"):
+        parse_tenant_weights("gold=3,free=1,gold=1")
+
+
+# ---------------------------------------------------------------------------
+# engine tier (reduced config)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = registry.get_config("internlm2-20b", ffn="fff").reduced()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    defaults = dict(num_slots=4, max_len=48, max_prompt_len=16, seed=0)
+    defaults.update(kw)
+    return ContinuousBatchingEngine(params, cfg, EngineConfig(**defaults))
+
+
+def test_tenant_isolation_burst_cannot_evict_active(model):
+    """One tenant's burst must not displace another tenant's ACTIVE slots:
+    the victim's in-flight requests keep their slot objects until they
+    finish on their own terms, and complete their full token budget."""
+    cfg, params = model
+    eng = _engine(cfg, params, num_slots=2,
+                  scheduler="weighted_leaf_aware",
+                  scheduler_kw={"weights": {"burst": 100.0, "victim": 1.0}})
+    rng = np.random.default_rng(0)
+    victims = [Request(rid=i, prompt=rng.integers(1, 256, 6),
+                       max_new_tokens=8, tenant="victim") for i in range(2)]
+    for r in victims:
+        eng.submit(r)
+    eng.step()                      # both victims admitted and decoding
+    active = [s for s in eng.slots if s is not None]
+    assert len(active) == 2
+    for j in range(10):             # the adversarial burst, huge weight
+        eng.submit(Request(rid=100 + j, prompt=rng.integers(1, 256, 6),
+                           max_new_tokens=1, tenant="burst"))
+    while not all(s.done for s in active):
+        # the victim slot objects stay installed until they finish
+        assert [s for s in eng.slots if s is not None
+                and s.request.tenant == "victim"] == active
+        eng.step()
+    while eng.has_work():
+        eng.step()
+    vres = [r for r in eng.results if r.tenant == "victim"]
+    assert len(vres) == 2
+    assert all(r.n_generated == 8 and r.finish_reason == "length"
+               for r in vres)
+
+
+def test_hint_mismatch_warns_once_and_counts(model):
+    """The ISSUE 5 fix for silent hint drops: first mismatched leaf_hint
+    warns, later ones only count; the counter lands in the metrics."""
+    cfg, params = model
+    eng = _engine(cfg, params)
+    E = eng.num_leaves
+    assert E > 0
+    bad = np.ones(E + 3)
+    with pytest.warns(UserWarning, match="leaf_hint"):
+        eng.submit(Request(rid=0, prompt=np.ones(4, np.int32),
+                           max_new_tokens=1, leaf_hint=bad))
+    import warnings as warnings_mod
+    with warnings_mod.catch_warnings(record=True) as record:
+        warnings_mod.simplefilter("always")
+        eng.submit(Request(rid=1, prompt=np.ones(4, np.int32),
+                           max_new_tokens=1, leaf_hint=bad.copy()))
+    assert not [w for w in record if issubclass(w.category, UserWarning)], \
+        "second mismatch must not warn again"
+    while eng.has_work():
+        eng.step()
+    assert eng.poll_metrics().hint_mismatches == 2
+    # zero-mass hints are just as unusable as wrong-sized ones — silently
+    # equivalent to "no hint" unless counted
+    eng.submit(Request(rid=10, prompt=np.ones(4, np.int32),
+                       max_new_tokens=1, leaf_hint=np.zeros(E)))
+    while eng.has_work():
+        eng.step()
+    assert eng.poll_metrics().hint_mismatches == 3
+    # a correctly sized hint does not count
+    good = np.ones(E)
+    eng.submit(Request(rid=2, prompt=np.ones(4, np.int32),
+                       max_new_tokens=1, leaf_hint=good))
+    while eng.has_work():
+        eng.step()
+    assert eng.poll_metrics().hint_mismatches == 3
+
+
+def test_profiles_learned_from_finished_requests(model):
+    """Hint-less requests teach the store: after serving, the tenant has a
+    normalized footprint with one update per finished request."""
+    cfg, params = model
+    eng = _engine(cfg, params)
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i, prompt=rng.integers(1, 256, 8),
+                    max_new_tokens=4, tenant="t0") for i in range(3)]
+    eng.run(reqs)
+    assert eng.profiles is not None
+    assert eng.profiles.n_updates("t0") == 3
+    fp = eng.profiles.lookup("t0")
+    assert fp is not None and fp.shape == (eng.num_leaves,)
+    assert fp.min() >= 0 and fp.sum() == pytest.approx(1.0)
+
+
+def test_learn_profiles_off(model):
+    cfg, params = model
+    eng = _engine(cfg, params, learn_profiles=False)
+    eng.run([Request(rid=0, prompt=np.ones(4, np.int32), max_new_tokens=1)])
+    assert eng.profiles is None
+
+
+def test_profiles_not_fed_by_seeded_priors(model):
+    """With telemetry off, occupancy rows only ever hold seeded priors —
+    the store must not EWMA hints (or its own output) back into itself."""
+    cfg, params = model
+    eng = _engine(cfg, params, telemetry=False)
+    E = eng.num_leaves
+    hint = np.zeros(E)
+    hint[0] = 1.0
+    eng.run([Request(rid=0, prompt=np.ones(4, np.int32), max_new_tokens=2,
+                     tenant="t0", leaf_hint=hint)])
+    assert eng.profiles is not None
+    assert eng.profiles.n_updates("t0") == 0, \
+        "seeded prior was promoted as if it were a measurement"
+
+
+def test_per_tenant_metrics_and_queue_depths(model):
+    """run() metrics carry the per-tenant breakdown; poll_metrics adds live
+    per-tenant queue depth for still-waiting tenants."""
+    cfg, params = model
+    eng = _engine(cfg, params)
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=i, prompt=rng.integers(1, 256, 5), max_new_tokens=2,
+                    tenant=("gold" if i % 2 else "free")) for i in range(6)]
+    _, m = eng.run(reqs)
+    assert set(m.tenants) == {"gold", "free"}
+    assert m.tenants["gold"]["n_requests"] == 3
+    assert m.tenants["free"]["n_tokens"] == 6
+    d = m.as_dict()
+    assert "tenants" in d and "hint_mismatches" in d
+    assert d["tenants"]["gold"]["ttft_ms"]["n"] == 3
+    # live depths: submit without stepping, then poll
+    for i in range(3):
+        eng.submit(Request(rid=100 + i, prompt=np.ones(4, np.int32),
+                           max_new_tokens=1, tenant="queued"))
+    live = eng.poll_metrics()
+    assert live.tenants["queued"]["queue_depth"] == 3
+    while eng.has_work():
+        eng.step()
+
+
+def test_weighted_engine_serves_all_and_matches_generate(model):
+    """The weighted scheduler only reorders admission: greedy outputs still
+    match the synchronous lm.generate path per request."""
+    import jax.numpy as jnp
+    cfg, params = model
+    eng = _engine(cfg, params, scheduler="weighted_leaf_aware",
+                  scheduler_kw={"weights": {"a": 2.0, "b": 1.0}})
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=rng.integers(1, 256, int(rng.integers(3, 17))),
+                    max_new_tokens=5, tenant="ab"[i % 2]) for i in range(6)]
+    results, m = eng.run(reqs)
+    assert sorted(r.rid for r in results) == list(range(6))
+    for r in results:
+        want = lm.generate(params, cfg, jnp.asarray(r.prompt[None]),
+                           steps=r.n_generated, max_len=48)
+        np.testing.assert_array_equal(
+            np.asarray(want)[0], np.concatenate([r.prompt, r.tokens]),
+            err_msg=f"rid {r.rid}")
