@@ -34,6 +34,9 @@ SCHEMAS = {
     "serving_qos": ({"bench", "quick", "slots", "classes", "fairness",
                      "profile_convergence", "overflow_decode", "runs"},
                     "runs"),
+    "serving_spec": ({"bench", "quick", "slots", "depth", "gen", "spec_k",
+                      "classes", "speedup", "speedup_gate", "speedup_ok",
+                      "overflow_ok", "runs"}, "runs"),
 }
 
 

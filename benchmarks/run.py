@@ -19,6 +19,10 @@
              profiles on a skewed two-tenant workload: fairness vs
              weights, profile convergence, overflow vs no-hint fcfs
              (DESIGN.md §9; writes BENCH_serving_qos.json)
+  serving_spec -> speculative decoding vs plain decode on a drafter-
+             consistent deep target: tokens/s speedup gate, acceptance,
+             verify-slab overflow vs baseline
+             (DESIGN.md §10; writes BENCH_serving_spec.json)
 
 ``python -m benchmarks.run`` runs the quick profile (CPU-sized, ~minutes);
 ``python -m benchmarks.run --full`` runs the paper-scale grids.
@@ -38,12 +42,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,fig2,table2,fig34,"
                          "table3,roofline,ep_dispatch,serving,"
-                         "serving_chunked,serving_qos")
+                         "serving_chunked,serving_qos,serving_spec")
     args = ap.parse_args()
 
     from benchmarks import (ep_dispatch, fig2, fig34, roofline_bench,
                             serving_chunked, serving_load, serving_qos,
-                            table1, table2, table3)
+                            serving_spec, table1, table2, table3)
     suites = {
         "table1": table1.main,
         "fig2": fig2.main,
@@ -55,6 +59,7 @@ def main() -> None:
         "serving": serving_load.main,
         "serving_chunked": serving_chunked.main,
         "serving_qos": serving_qos.main,
+        "serving_spec": serving_spec.main,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     failures = []

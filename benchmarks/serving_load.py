@@ -78,7 +78,7 @@ def calibrate_classes(params, cfg, n_classes: int, max_probe: int = 64):
 
 
 def make_workload(classes, *, n_requests: int, burst: int, rate: float,
-                  seed: int):
+                  seed: int, gen: int = GEN, prompt_len: int = PROMPT_LEN):
     """Per-class bursts of ``burst`` requests with Poisson arrivals at
     ``rate`` req/s (rate <= 0: everything arrives at t=0)."""
     from repro.serving import Request
@@ -90,8 +90,8 @@ def make_workload(classes, *, n_requests: int, burst: int, rate: float,
     for rid in range(n_requests):
         tok, fp = classes[(rid // burst) % len(classes)]
         reqs.append(Request(
-            rid=rid, prompt=np.full((PROMPT_LEN,), tok, np.int32),
-            max_new_tokens=GEN, arrival_time=float(arrivals[rid]),
+            rid=rid, prompt=np.full((prompt_len,), tok, np.int32),
+            max_new_tokens=gen, arrival_time=float(arrivals[rid]),
             leaf_hint=fp.copy()))
     return reqs
 

@@ -1,0 +1,174 @@
+"""Speculative-decoding benchmark: spec-k draft/verify rounds vs plain
+one-token decode on the continuous-batching engine (DESIGN.md §10).
+
+Model: a *drafter-consistent* deep target.  The serving model is the
+``serving`` bench's reduced config deepened to ``DEPTH`` periods, with the
+residual-writing output projections (attention ``wo``/``bo``, FFF leaf
+down-projections) of every period past the first zeroed.  Each tail block
+then contributes exactly 0 to the residual stream — the first-period
+self-slice (``--draft-config self:1``) reproduces the target distribution
+*bit-for-bit* — while the target still pays full ``DEPTH``-deep compute per
+decode/verify token and the tail routers still see real hidden states (so
+capacity/overflow telemetry stays live at every FFF site).  With untrained
+weights no shallow draft can otherwise agree with the target, so this
+construction is what lets the bench measure the serving mechanism at a
+*known* acceptance of ~1: k+1 sequential shallow draft steps plus ONE
+full-depth verify dispatch, against k+1 full-depth decode dispatches.
+
+Workload: the same calibrated *skewed-routing* per-class-burst mix as the
+``serving`` bench (classes probed against the period-0 slice — the only
+period that writes the residual) at saturating load, decode-bound
+(``GEN_SPEC`` generated tokens per request), under the capacity-bounded
+``grouped`` backend with ``leaf_aware`` admission.
+
+Rows:
+  * baseline  — plain decode, leaf_aware (the PR 3/5 serving configuration)
+  * spec      — ``SPEC_K`` draft tokens/slot/round from the exact ``self:1``
+    shallow slice (the headline: amortization *and* cheap drafting)
+  * full_self — same ``SPEC_K`` but a full-depth self-draft; acceptance is
+    also ~1 yet drafting costs as much as decoding, isolating how much of
+    the win needs the draft to actually be shallow
+
+Gates (printed + recorded in the artifact):
+  * spec tokens/s > 1.8x baseline tokens/s
+  * spec verify-step decode overflow <= baseline decode overflow (the
+    leaf-hint co-scheduling must absorb the (k+1)-token verify slabs)
+
+Emits CSV rows
+``serving_spec,<name>,<spec_k>,<tok_s>,<acceptance>,<ovf_decode>,<wasted>``
+and writes ``experiments/BENCH_serving_spec.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+ARTIFACT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "BENCH_serving_spec.json")
+
+DEPTH = 6       # periods in the deep target (draft = 1 of these)
+SPEC_K = 11     # draft tokens per slot per round
+GEN_SPEC = 60   # decode-bound: 5 full (k+1)-token rounds per request
+SPEEDUP_GATE = 1.8
+
+# residual-writing output projections: zeroing these for a period makes the
+# whole block contribute exactly +0 to the residual stream (pre-norm blocks
+# only touch x via `x = x + proj(...)`)
+_OUT_PROJ_KEYS = frozenset(
+    {"wo", "bo", "leaf_w2", "leaf_b2", "leaf_wd", "w2", "b2"})
+
+
+def drafter_consistent_model(seed: int, depth: int = DEPTH):
+    """Deep reduced model whose tail periods write exactly 0 to the residual
+    stream (see module docstring); returns ``(cfg, params)``."""
+    import jax
+    import jax.tree_util as jtu
+
+    from repro.configs import registry
+    from repro.models import lm
+
+    cfg = registry.get_config("internlm2-20b", ffn="fff").reduced()
+    cfg = dataclasses.replace(cfg, n_layers=depth * len(cfg.period))
+    params = lm.init(jax.random.PRNGKey(seed), cfg)
+
+    def zero_tail(path, a):
+        name = path[-1].key if hasattr(path[-1], "key") else None
+        return a.at[1:].set(0) if name in _OUT_PROJ_KEYS else a
+
+    params = dict(params)
+    params["stack"] = [jtu.tree_map_with_path(zero_tail, p)
+                       for p in params["stack"]]
+    return cfg, params
+
+
+def run_one(params, cfg, *, slots: int, reqs, seed: int, spec_k: int = 0,
+            draft_config=None, warmup_reqs=None):
+    from benchmarks.serving_load import PROMPT_LEN
+    from repro.serving import ContinuousBatchingEngine, EngineConfig
+    ecfg = EngineConfig(
+        num_slots=slots, max_len=PROMPT_LEN + GEN_SPEC + 1,
+        max_prompt_len=PROMPT_LEN, scheduler="leaf_aware",
+        scheduler_kw={"window": 4 * slots},
+        fff_backend="grouped",          # capacity-bounded dispatch: the
+        max_prefills_per_step=slots,    # regime where composition matters
+        spec_k=spec_k, draft_config=draft_config, seed=seed)
+    engine = ContinuousBatchingEngine(params, cfg, ecfg)
+    if warmup_reqs:
+        # burn every compile (decode or rollout/verify) outside the timed
+        # run — the two engine variants compile different trace sets, and
+        # the ratio below must compare steady-state serving, not XLA
+        engine.run(warmup_reqs)
+    _, m = engine.run(reqs)
+    return m
+
+
+def main(quick: bool = True) -> None:
+    from benchmarks.serving_load import (N_CLASSES, calibrate_classes,
+                                         make_workload)
+    from repro.serving import self_draft_config, slice_draft_params
+    seed = 0
+    slots = 16 if quick else 32
+    # keep all N_CLASSES in flight at once: leaf-balanced composition needs
+    # the scheduler's window to actually contain every class
+    n_requests = (8 if quick else 16) * slots // 2
+
+    cfg, params = drafter_consistent_model(seed)
+    # probe routing on the period-0 slice: the only period that writes the
+    # residual, hence the site the leaf_hint story is about
+    classes = calibrate_classes(slice_draft_params(params, cfg),
+                                self_draft_config(cfg), N_CLASSES)
+    print(f"# classes (token -> leaf): "
+          f"{[(t, int(f.argmax())) for t, f in classes]}")
+    print("# name,spec_k,tok_s,spec_acceptance,overflow_decode_mean,"
+          "wasted_tokens")
+
+    # saturating arrivals + long generations: throughput is decode/verify
+    # bound, the regime the speedup claim is about
+    def workload():
+        return make_workload(classes, n_requests=n_requests, burst=slots,
+                             rate=0.0, seed=seed + 1, gen=GEN_SPEC)
+
+    warm = make_workload(classes, n_requests=slots, burst=slots,
+                         rate=0.0, seed=seed + 2, gen=GEN_SPEC)
+
+    variants = [
+        ("baseline", 0, None),
+        ("spec", SPEC_K, "self:1"),
+        ("full_self", SPEC_K, f"self:{cfg.n_periods}"),
+    ]
+    runs = {}
+    for name, k, draft in variants:
+        m = run_one(params, cfg, slots=slots, reqs=workload(), seed=seed,
+                    spec_k=k, draft_config=draft, warmup_reqs=warm)
+        print(f"serving_spec,{name},{k},{m.throughput_tok_s:.1f},"
+              f"{m.spec_acceptance:.3f},{m.overflow_decode_mean:.4f},"
+              f"{m.wasted_tokens}", flush=True)
+        runs[name] = {"spec_k": k, "draft_config": draft, "slots": slots,
+                      "n_requests": n_requests, **m.as_dict()}
+
+    base, spec = runs["baseline"], runs["spec"]
+    speedup = spec["throughput_tok_s"] / max(base["throughput_tok_s"], 1e-9)
+    speedup_ok = speedup > SPEEDUP_GATE
+    overflow_ok = (spec["overflow_decode_mean"]
+                   <= base["overflow_decode_mean"] + 1e-9)
+    print(f"# spec {spec['throughput_tok_s']:.1f} tok/s vs baseline "
+          f"{base['throughput_tok_s']:.1f} -> {speedup:.2f}x "
+          f"({'PASS' if speedup_ok else 'FAIL'} vs {SPEEDUP_GATE}x gate)")
+    print(f"# verify decode overflow {spec['overflow_decode_mean']:.4f} vs "
+          f"baseline {base['overflow_decode_mean']:.4f} -> "
+          f"{'PASS' if overflow_ok else 'FAIL'} (must not exceed)")
+
+    with open(ARTIFACT, "w") as f:
+        json.dump({"bench": "serving_spec", "quick": quick, "slots": slots,
+                   "depth": DEPTH, "gen": GEN_SPEC,
+                   "spec_k": SPEC_K, "classes": [(int(t), int(fp.argmax()))
+                                                 for t, fp in classes],
+                   "speedup": speedup, "speedup_gate": SPEEDUP_GATE,
+                   "speedup_ok": speedup_ok, "overflow_ok": overflow_ok,
+                   "runs": runs}, f, indent=1)
+    print(f"# wrote {ARTIFACT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -92,6 +92,15 @@ class ExecutionSpec:
                      transposition); unused by inference backends
     interpret:       Pallas interpret-mode override (None = autodetect:
                      interpret everywhere but TPU)
+    valid:           optional boolean per-token validity mask, broadcastable
+                     to x's leading (batch, ...) shape.  Capacity-bounded
+                     backends route invalid tokens to the capacity-neutral
+                     sentinel leaf so phantom rows (e.g. a serving engine's
+                     free slots) never consume grouped-dispatch capacity or
+                     appear in routing telemetry, and exclude them from
+                     overflow accounting.  Exact backends (reference,
+                     pallas, and grouped_ep's overflow repair) ignore it —
+                     their outputs are per-token exact regardless.
     """
     mode: str = "infer"
     backend: str = "auto"
@@ -99,6 +108,7 @@ class ExecutionSpec:
     dense_levels: int = 8
     rng: Optional[jax.Array] = None
     interpret: Optional[bool] = None
+    valid: Optional[jax.Array] = None
 
     def validate(self) -> "ExecutionSpec":
         if self.mode not in MODES:
@@ -294,6 +304,32 @@ def use_backend(name: str, mode: Optional[str] = None):
         _thread_state.override = prev
 
 
+@contextlib.contextmanager
+def use_capacity_factor(cf: float):
+    """Override the capacity factor of every ``apply()`` in this thread whose
+    spec leaves ``capacity_factor`` unset, for the dynamic extent of a trace.
+
+    Same thread-local trace-time pattern as ``use_backend``; explicit
+    per-spec capacity factors win.  The motivating consumer is the serving
+    engine's speculative verify dispatch (DESIGN.md §10): a verify slab is
+    k+1 decode steps fused onto one token axis, so its per-leaf capacity
+    must scale with that axis — otherwise each verify token would see less
+    capacity than the identical token in plain decode (the ``max(8, ...)``
+    per-leaf floor in core/routing is generous to single-token steps), and
+    speculation would *change serving numerics* instead of just batching
+    them.  Capacity-free exact backends ignore capacity factors entirely,
+    so the override is harmless there."""
+    cf = float(cf)
+    if cf <= 0:
+        raise ValueError(f"capacity factor must be positive, got {cf}")
+    prev = getattr(_thread_state, "capacity_override", None)
+    _thread_state.capacity_override = cf
+    try:
+        yield
+    finally:
+        _thread_state.capacity_override = prev
+
+
 def _pallas_supported(params: dict, cfg: fff_lib.FFFConfig) -> bool:
     """The kernel path collapses the node net to one hyperplane and needs the
     zero-row padding invariant of bias-free leaves (kernels/leaf_gemm)."""
@@ -355,6 +391,9 @@ def apply(params: dict, cfg: fff_lib.FFFConfig, x: jax.Array,
 
     The only supported invocation of the layer outside ``repro.core``; the
     backend registry does the rest (module docstring has the map)."""
+    cf = getattr(_thread_state, "capacity_override", None)
+    if cf is not None and spec.capacity_factor is None:
+        spec = dataclasses.replace(spec, capacity_factor=cf)
     spec.validate()
     name = spec.backend
     if name == "auto":
@@ -399,7 +438,8 @@ def _infer_grouped(params, cfg, x, spec):
     cf = (spec.capacity_factor if spec.capacity_factor is not None
           else DEFAULT_CAPACITY_INFER)
     y, aux = fff_lib._forward_hard_grouped(
-        params, cfg, x, capacity_factor=cf, dense_levels=spec.dense_levels)
+        params, cfg, x, capacity_factor=cf, dense_levels=spec.dense_levels,
+        valid=spec.valid)
     return y, FFFOutput(leaf_idx=aux["leaf_idx"],
                         overflow_fraction=aux["overflow_fraction"])
 
@@ -415,7 +455,8 @@ def _infer_grouped_ep(params, cfg, x, spec):
     cf = (spec.capacity_factor if spec.capacity_factor is not None
           else DEFAULT_CAPACITY_EP)
     y, aux = fff_lib._forward_hard_ep(
-        params, cfg, x, capacity_factor=cf, dense_levels=spec.dense_levels)
+        params, cfg, x, capacity_factor=cf, dense_levels=spec.dense_levels,
+        valid=spec.valid)
     return y, FFFOutput(leaf_idx=aux["leaf_idx"],
                         overflow_fraction=aux["overflow_fraction"])
 

@@ -431,14 +431,50 @@ def _forward_st_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
     return utils.unflatten_leading(out[:B], lead), aux
 
 
+def _sentinel_invalid(leaf_idx: jax.Array, valid: Optional[jax.Array],
+                      lead: tuple, B: int, num_leaves: int
+                      ) -> tuple[jax.Array, Optional[jax.Array]]:
+    """Route caller-declared invalid tokens to the capacity-neutral sentinel
+    leaf, same mechanism as ``_sentinel_pads`` (DESIGN.md §9: a serving
+    engine's free-slot phantom rows must not consume grouped-dispatch
+    capacity or pollute routing telemetry).  ``valid`` is broadcastable to
+    the leading (batch, ...) shape; returns the masked (Bp, T) leaf_idx and
+    the flat (Bp,) validity (pads invalid) for overflow accounting, or
+    (leaf_idx, None) when no mask was given."""
+    if valid is None:
+        return leaf_idx, None
+    vf = jnp.broadcast_to(valid, lead).reshape(-1)
+    # zeros-buffer pad, not concatenate, for the same SPMD-lowering reason
+    # as _pad_for_dispatch
+    vfp = jnp.zeros((leaf_idx.shape[0],), bool).at[:B].set(vf)
+    return jnp.where(vfp[:, None], leaf_idx, num_leaves), vfp
+
+
+def _overflow_from_kept(kept_all: list, vfp: Optional[jax.Array], B: int,
+                        accum_dtype) -> jax.Array:
+    """Dropped fraction over REAL routed slots: invalid/sentinel rows are
+    never ``kept`` by construction, so they must be excluded from the
+    denominator or phantom rows would read as overflow."""
+    kept = jnp.stack(kept_all).astype(accum_dtype)        # (T, B)
+    if vfp is None:
+        return 1.0 - kept.mean()
+    w = vfp[:B].astype(accum_dtype)
+    denom = jnp.maximum(w.sum() * kept.shape[0], 1.0)
+    return 1.0 - (kept * w[None, :]).sum() / denom
+
+
 def _forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
                           capacity_factor: float = 2.0,
-                          dense_levels: int = 8) -> tuple[jax.Array, dict]:
+                          dense_levels: int = 8,
+                          valid: Optional[jax.Array] = None
+                          ) -> tuple[jax.Array, dict]:
     """FORWARD_I via capacity-bounded grouped dispatch (pure jnp, EP-shardable).
 
     The lowering-friendly twin of kernels/leaf_gemm.fff_infer: same dispatch
     structure, expressed in einsums so pjit/SPMD can partition it.  Used by
-    the serving path for MoE-scale FFF sites (DESIGN.md §3)."""
+    the serving path for MoE-scale FFF sites (DESIGN.md §3).  ``valid``
+    (broadcastable to x's leading shape) routes phantom tokens to the
+    sentinel leaf: zero capacity use, zero output, excluded from overflow."""
     xf, lead = utils.flatten_leading(x)
     xf = xf.astype(cfg.accum_dtype)
     xf, B = _pad_for_dispatch(xf, dist_act.data_shard_count())
@@ -446,6 +482,8 @@ def _forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
                           dense_levels=dense_levels).reshape(xf.shape[0],
                                                              cfg.trees)
     leaf_idx = _sentinel_pads(leaf_idx, B, cfg.num_leaves)
+    leaf_idx, vfp = _sentinel_invalid(leaf_idx, valid, lead, B,
+                                      cfg.num_leaves)
     out = None
     kept_all = []
     for t in range(cfg.trees):
@@ -457,7 +495,7 @@ def _forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
             serving=True, return_kept=True)
         out = y if out is None else out + y
         kept_all.append(kept[:B])
-    overflow = 1.0 - jnp.stack(kept_all).astype(cfg.accum_dtype).mean()
+    overflow = _overflow_from_kept(kept_all, vfp, B, cfg.accum_dtype)
     aux = {"leaf_idx": leaf_idx[:B].reshape(*lead, cfg.trees),
            "overflow_fraction": overflow}
     return utils.unflatten_leading(out[:B], lead), aux
@@ -465,7 +503,9 @@ def _forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
 
 def _forward_hard_ep(params: Params, cfg: FFFConfig, x: jax.Array,
                      capacity_factor: float = 1.25,
-                     dense_levels: int = 8) -> tuple[jax.Array, dict]:
+                     dense_levels: int = 8,
+                     valid: Optional[jax.Array] = None
+                     ) -> tuple[jax.Array, dict]:
     """FORWARD_I via expert-parallel all_to_all dispatch (EXACT).
 
     Routing runs data-parallel (node nets are replicated); leaf execution
@@ -482,6 +522,8 @@ def _forward_hard_ep(params: Params, cfg: FFFConfig, x: jax.Array,
                           dense_levels=dense_levels).reshape(xf.shape[0],
                                                              cfg.trees)
     leaf_idx = _sentinel_pads(leaf_idx, B, cfg.num_leaves)
+    leaf_idx, vfp = _sentinel_invalid(leaf_idx, valid, lead, B,
+                                      cfg.num_leaves)
     out = None
     kept_all = []
     for t in range(cfg.trees):
@@ -493,7 +535,7 @@ def _forward_hard_ep(params: Params, cfg: FFFConfig, x: jax.Array,
             return_kept=True)
         out = y if out is None else out + y
         kept_all.append(kept[:B])
-    overflow = 1.0 - jnp.stack(kept_all).astype(cfg.accum_dtype).mean()
+    overflow = _overflow_from_kept(kept_all, vfp, B, cfg.accum_dtype)
     aux = {"leaf_idx": leaf_idx[:B].reshape(*lead, cfg.trees),
            "overflow_fraction": overflow}
     return utils.unflatten_leading(out[:B], lead), aux

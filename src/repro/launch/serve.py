@@ -9,9 +9,13 @@ prefill/decode over fixed compiled shapes — requests of mixed lengths
 arrive, finish and free their slots independently (DESIGN.md §9).  ``--prefill-chunk N`` switches admission to
 chunked prefill: long prompts advance N tokens per step instead of running
 one monolithic prefill between decode steps (stall-free admission; tune with
-``--prefill-budget`` / ``--max-prefilling``).  ``--engine off`` keeps the
-original synchronous batched prefill + decode demo loop.  Operator guide:
-docs/serving.md.
+``--prefill-budget`` / ``--max-prefilling``).  ``--spec-k K`` turns on
+speculative decoding: a draft model (``--draft-config``, default the
+target's own first period) proposes K tokens per slot per round and the
+target verifies them in one slab dispatch, multiplying decode throughput by
+the acceptance-weighted emission rate (DESIGN.md §10).  ``--engine off``
+keeps the original synchronous batched prefill + decode demo loop.
+Operator guide: docs/serving.md.
 
 Both paths report p50/p90/p99 latency and tokens/s through
 ``repro.serving.metrics`` and steer every FFF site's execution strategy with
@@ -90,6 +94,19 @@ def build_parser() -> argparse.ArgumentParser:
                     help="scheduler: cap on slots concurrently mid-chunked-"
                          "prefill (0 = uncapped); the admission-side "
                          "TTFT-vs-p99 knob")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="engine: >0 = speculative decoding — a draft model "
+                         "proposes this many tokens per live slot per round; "
+                         "the target verifies the (slots, k+1) slab in one "
+                         "dispatch and host-side rejection sampling keeps "
+                         "the target distribution exact (DESIGN.md §10; "
+                         "0 = plain one-token decode)")
+    ap.add_argument("--draft-config", default="",
+                    help="engine: draft model for --spec-k — 'self' / "
+                         "'self:N' = the target's own first N periods "
+                         "(early-exit self-draft, shares weights; default "
+                         "'self'), or a registry arch id for an independent "
+                         "reduced draft (random init)")
     ap.add_argument("--metrics-json", default="",
                     help="engine: write the run's EngineMetrics (+ compiled-"
                          "shape counts) as JSON to this path — the "
@@ -182,6 +199,8 @@ def run_engine(args) -> None:
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget,
         fff_backend=args.fff_backend,
+        spec_k=args.spec_k,
+        draft_config=args.draft_config or None,
         seed=args.seed)
     engine = ContinuousBatchingEngine(params, cfg, ecfg, trace_ctx=mesh_ctx)
 
@@ -201,10 +220,12 @@ def run_engine(args) -> None:
             f"budget={args.prefill_budget})" if args.prefill_chunk
             else "monolithic prefill")
     qos = (f", tenants={{{args.tenant_weights}}}" if weights else "")
+    spec = (f", speculative (k={args.spec_k}, "
+            f"draft={args.draft_config or 'self'})" if args.spec_k else "")
     print(f"engine: {args.batch} slots, {n} requests, prompt lens "
           f"{min(len(r.prompt) for r in reqs)}-"
           f"{max(len(r.prompt) for r in reqs)}, scheduler={args.scheduler}"
-          f"{qos}, {mode}, fff backend={args.fff_backend} requested")
+          f"{qos}, {mode}{spec}, fff backend={args.fff_backend} requested")
     _, m = engine.run(reqs)
     print(m.report())
     print(f"compiled shapes: {engine.compiled_shapes()}")

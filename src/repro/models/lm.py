@@ -174,6 +174,7 @@ def prefill_padded(params: Params, cfg: ModelConfig, batch: dict,
 def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
                 caches: list[dict], pos_offset: jax.Array | int = 0,
                 *, write_mask: Optional[jax.Array] = None,
+                token_valid: Optional[jax.Array] = None,
                 with_stats: bool = False):
     """One serve step: token (B, 1) int32 -> logits (B, V), updated caches.
 
@@ -182,13 +183,20 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
     reads per-row positions off the KV cache lengths).  ``write_mask`` (B,)
     bool, optional: rows where it is False compute logits but neither write
     K/V nor advance their cache length — the engine decodes its full slot
-    batch while some slots are mid-chunked-prefill (DESIGN.md §9).  With
-    ``with_stats=True`` also returns the per-site routing-stats tuple from
-    the ``api.collect_routing`` tap (None when no tap is active)."""
+    batch while some slots are mid-chunked-prefill (DESIGN.md §9).
+    ``token_valid`` (B,) bool, optional: rows where it is False are phantom
+    (free slots) — capacity-bounded FFF backends route them to the sentinel
+    leaf so they never consume grouped-dispatch capacity or appear in
+    routing telemetry; deliberately separate from ``write_mask`` so the
+    fixed-shape KV-write contract is unaffected.  With ``with_stats=True``
+    also returns the per-site routing-stats tuple from the
+    ``api.collect_routing`` tap (None when no tap is active)."""
     x = _embed_inputs(params, cfg, {"tokens": token}, pos_offset=pos_offset)
+    tv = token_valid[:, None] if token_valid is not None else None
     x, caches, aux = transformer.stack_forward(params["stack"], cfg, x,
                                                mode="decode", caches=caches,
-                                               decode_mask=write_mask)
+                                               decode_mask=write_mask,
+                                               token_valid=tv)
     logits = _head(params, cfg, x)
     if with_stats:
         return logits[:, 0], caches, aux.get("routing")
@@ -302,6 +310,31 @@ def prefill_chunk(params: Params, cfg: ModelConfig, tokens: jax.Array,
     last = jnp.take_along_axis(x, last_idx, axis=1)               # (B, 1, D)
     logits = _head(params, cfg, last)
     return logits[:, 0], caches, aux.get("routing")
+
+
+def verify_chunk(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                 valid_len: jax.Array, caches: list[dict],
+                 pos_offset: jax.Array) -> tuple[jax.Array, list[dict], Any]:
+    """Speculative-decoding verify step (DESIGN.md §10): the same fixed-shape
+    (B, C) slab dispatch as ``prefill_chunk``, but returning the target
+    model's logits at EVERY slab position — ``logits[b, j]`` is the target's
+    next-token distribution after consuming ``tokens[b, :j+1]``, exactly
+    what host-side rejection sampling needs to accept/reject a draft run
+    ``tokens[b] = [pending, d_1 .. d_k]``.
+
+    K/V for all C positions (the pending token plus every draft token) are
+    appended optimistically; the caller rolls rejected suffixes back with
+    ``set_cache_lengths`` — stale rows beyond the new length are masked by
+    length and overwritten by later appends, the same mechanism as
+    ``prefill_padded``.  Rows with ``valid_len == 0`` (free slots) write
+    nothing, and the chunk-mode validity mask keeps their phantom tokens out
+    of FFF grouped-dispatch capacity.  Attention mixers only."""
+    x = _embed_inputs(params, cfg, {"tokens": tokens}, pos_offset=pos_offset)
+    x, caches, aux = transformer.stack_forward(
+        params["stack"], cfg, x, mode="chunk", caches=caches,
+        chunk_valid=valid_len)
+    logits = _head(params, cfg, x)                              # (B, C, V)
+    return logits, caches, aux.get("routing")
 
 
 def generate(params: Params, cfg: ModelConfig, prompt: jax.Array,

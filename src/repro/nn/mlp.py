@@ -62,8 +62,14 @@ def init(key: jax.Array, spec: FFNSpec, d_model: int, *, param_dtype,
 
 def forward(params: Params, spec: FFNSpec, d_model: int, x: jax.Array, *,
             param_dtype, accum_dtype, train: bool = True,
-            rng: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
-    """x (..., D) -> (..., D), aux {'hardening': scalar, 'moe_aux': scalar}."""
+            rng: Optional[jax.Array] = None,
+            valid: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
+    """x (..., D) -> (..., D), aux {'hardening': scalar, 'moe_aux': scalar}.
+
+    ``valid`` (broadcastable to x's leading shape) marks phantom tokens —
+    pad columns of a chunked-prefill slab, free slots of a serving decode
+    batch — that capacity-bounded FFF backends must keep out of
+    grouped-dispatch capacity and routing telemetry (ExecutionSpec.valid)."""
     kw = dict(param_dtype=param_dtype, accum_dtype=accum_dtype)
     zero = jnp.zeros((), jnp.float32)
     if spec.kind == "none":
@@ -77,7 +83,7 @@ def forward(params: Params, spec: FFNSpec, d_model: int, x: jax.Array, *,
         # platform/site (and the launch layer can steer it via
         # api.use_backend) — see core/api.py
         y, out = api.apply(params, cfg, x, api.ExecutionSpec(
-            mode="train" if train else "infer", rng=rng))
+            mode="train" if train else "infer", rng=rng, valid=valid))
         if train:
             harden = spec.hardening_scale * fff.hardening_loss(out.node_probs)
         aux = {"hardening": harden.astype(jnp.float32) if train else zero,

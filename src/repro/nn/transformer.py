@@ -119,7 +119,8 @@ def block_forward(params: Params, cfg: ModelConfig, spec: BlockSpec,
                   enc_out: Optional[jax.Array] = None,
                   causal: bool = True,
                   chunk_valid: Optional[jax.Array] = None,
-                  decode_mask: Optional[jax.Array] = None
+                  decode_mask: Optional[jax.Array] = None,
+                  token_valid: Optional[jax.Array] = None
                   ) -> tuple[jax.Array, Optional[Cache], dict]:
     """One block: pre-norm mixer + residual, [cross-attn], pre-norm FFN + residual.
 
@@ -128,7 +129,16 @@ def block_forward(params: Params, cfg: ModelConfig, spec: BlockSpec,
     gives each row's real token count.  ``decode_mask`` (B,) bool, decode
     mode only: rows where it is False do not write/advance their KV cache.
     Both are attention-mixer features — recurrent mixers have no
-    length-masked state to protect (the serving engine rejects them)."""
+    length-masked state to protect (the serving engine rejects them).
+
+    ``token_valid`` (bool, broadcastable to x's leading (B, S) shape) marks
+    phantom tokens for the FFN dispatch: capacity-bounded FFF backends route
+    them to the sentinel leaf so they never consume grouped capacity or
+    pollute routing telemetry (DESIGN.md §9).  In chunk mode it is derived
+    from ``chunk_valid`` when not given; it is deliberately separate from
+    ``decode_mask`` so a caller can keep KV writes on for every row (the
+    monolithic engine's fixed-shape contract) while still masking the FFF
+    dispatch."""
     new_cache: Cache = {} if cache is not None else None
     h = norms.norm_apply(cfg.norm, params["norm1"], x)
 
@@ -191,11 +201,14 @@ def block_forward(params: Params, cfg: ModelConfig, spec: BlockSpec,
     aux = {"hardening": jnp.zeros((), jnp.float32),
            "moe_aux": jnp.zeros((), jnp.float32)}
     if spec.ffn.kind != "none":
+        if token_valid is None and mode == "chunk" and chunk_valid is not None:
+            token_valid = (jnp.arange(x.shape[1]) < chunk_valid[:, None])
         h2 = norms.norm_apply(cfg.norm, params["norm2"], x)
         y2, aux = mlp.forward(params["ffn"], spec.ffn, cfg.d_model, h2,
                               param_dtype=cfg.param_dtype,
                               accum_dtype=cfg.accum_dtype,
-                              train=(mode == "train"), rng=rng)
+                              train=(mode == "train"), rng=rng,
+                              valid=token_valid)
         x = x + y2
         x = act.shard(x, act.ACT_BSD)
     return x, new_cache, aux
@@ -245,11 +258,13 @@ def stack_forward(params: list[Params], cfg: ModelConfig, x: jax.Array, *,
                   causal: bool = True,
                   period: tuple[BlockSpec, ...] | None = None,
                   chunk_valid: Optional[jax.Array] = None,
-                  decode_mask: Optional[jax.Array] = None
+                  decode_mask: Optional[jax.Array] = None,
+                  token_valid: Optional[jax.Array] = None
                   ) -> tuple[jax.Array, Optional[list[Cache]], dict]:
     """Run the whole stack (scan over periods).  ``chunk_valid`` /
-    ``decode_mask`` ride through to every block (see ``block_forward``);
-    they are loop-invariant, so the scan closes over them."""
+    ``decode_mask`` / ``token_valid`` ride through to every block (see
+    ``block_forward``); they are loop-invariant, so the scan closes over
+    them."""
     period = period or cfg.period
     n_periods = jax.tree_util.tree_leaves(params[0])[0].shape[0]
     use_rng = rng is not None
@@ -270,7 +285,7 @@ def stack_forward(params: list[Params], cfg: ModelConfig, x: jax.Array, *,
             x, nc, aux = block_forward(
                 per_params[pos], cfg, spec, x, mode=mode, cache=c, rng=r,
                 enc_out=enc_out, causal=causal, chunk_valid=chunk_valid,
-                decode_mask=decode_mask)
+                decode_mask=decode_mask, token_valid=token_valid)
             new_caches.append(nc)
             aux_h = aux_h + aux["hardening"]
             aux_m = aux_m + aux["moe_aux"]

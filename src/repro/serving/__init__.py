@@ -1,6 +1,6 @@
 """Continuous-batching serving engine with FFF leaf-occupancy-aware
-scheduling, multi-tenant QoS admission and online per-tenant routing
-profiles (DESIGN.md §9)."""
+scheduling, multi-tenant QoS admission, online per-tenant routing profiles
+and speculative decoding (DESIGN.md §9, §10)."""
 from repro.serving.engine import ContinuousBatchingEngine, EngineConfig, \
     TenantQueues
 from repro.serving.metrics import EngineMetrics, LatencySummary, summarize, \
@@ -10,6 +10,8 @@ from repro.serving.request import Request, RequestResult
 from repro.serving.scheduler import SCHEDULERS, FCFSScheduler, \
     LeafAwareScheduler, Scheduler, SchedulerView, \
     WeightedLeafAwareScheduler, make_scheduler
+from repro.serving.spec import build_draft, rejection_sample, \
+    self_draft_config, slice_draft_params
 
 __all__ = [
     "ContinuousBatchingEngine", "EngineConfig", "EngineMetrics",
@@ -18,4 +20,6 @@ __all__ = [
     "TenantQueues",
     "SCHEDULERS", "FCFSScheduler", "LeafAwareScheduler", "Scheduler",
     "SchedulerView", "WeightedLeafAwareScheduler", "make_scheduler",
+    "build_draft", "rejection_sample", "self_draft_config",
+    "slice_draft_params",
 ]

@@ -19,6 +19,15 @@ allocator and interleaved prefill/decode over FIXED compiled shapes:
 * Requests enter with prompt + sampling/stop params, decode together until
   EOS/max-tokens, then free their slot for waiting requests
   (``lm.cache_evict`` zeroes the row's attention lengths).
+* With ``EngineConfig.spec_k > 0`` the decode step becomes a SPECULATIVE
+  draft/verify round (DESIGN.md §10): ONE fused dispatch rolls out
+  ``spec_k`` draft proposals per live slot (default draft: the target's own
+  first period — ``serving/spec.py``) and verifies the ``(num_slots,
+  spec_k + 1)`` slab with the target, then host-side rejection sampling
+  emits 1..spec_k + 1 tokens with the target distribution preserved
+  exactly.  Draft KV lives in a second pooled cache tree alongside the
+  target's; both trees prefill/evict/truncate in the same dispatches as
+  the target's.
 
 Admission policy is pluggable (``serving/scheduler.py``); ``leaf_aware``
 consumes the per-step FFF leaf-occupancy telemetry the engine collects via
@@ -51,6 +60,7 @@ import numpy as np
 from repro.core import api
 from repro.models import lm
 from repro.serving import metrics as metrics_lib
+from repro.serving import spec as spec_lib
 from repro.serving.profiles import RoutingProfileStore
 from repro.serving.request import Request, RequestResult, SlotState
 from repro.serving.scheduler import Scheduler, SchedulerView, make_scheduler
@@ -139,6 +149,17 @@ class EngineConfig:
     learn_profiles: bool = True
     profile_ewma: float = 0.3            # per-finished-request smoothing
     profile_min_updates: int = 1         # finished requests before serving
+    # speculative decoding (DESIGN.md §10): spec_k > 0 replaces the decode
+    # step with a draft/verify round — a draft model proposes spec_k tokens
+    # per live slot in ONE fused rollout dispatch, the target verifies the
+    # (num_slots, spec_k + 1) slab in one chunk dispatch, host-side
+    # rejection sampling keeps the target distribution exact.
+    # ``draft_config``: "self" / "self:N" = the target's own first N periods
+    # (early-exit self-draft, shares params); a registry arch id = an
+    # independent reduced draft (random init — correctness testing / a slot
+    # for trained drafts); None = "self" (see serving/spec.build_draft).
+    spec_k: int = 0
+    draft_config: Optional[str] = None
     seed: int = 0
 
     def buckets(self) -> Tuple[int, ...]:
@@ -168,7 +189,8 @@ class ContinuousBatchingEngine:
 
     def __init__(self, params, cfg, ecfg: EngineConfig,
                  scheduler: Optional[Scheduler] = None,
-                 trace_ctx: Optional[Callable] = None):
+                 trace_ctx: Optional[Callable] = None,
+                 draft: Optional[Tuple[dict, object]] = None):
         if cfg.encoder is not None or cfg.frontend != "none":
             raise ValueError("serving engine supports decoder-only token LMs")
         if any(b.mixer != "attn" for b in cfg.period):
@@ -201,6 +223,12 @@ class ContinuousBatchingEngine:
             if ecfg.prefill_budget < 1:
                 raise ValueError("prefill_budget must be >= 1 when chunked "
                                  "prefill is on")
+        if ecfg.spec_k < 0:
+            raise ValueError(f"spec_k {ecfg.spec_k} must be >= 0")
+        if ecfg.draft_config is not None and not ecfg.spec_k:
+            raise ValueError("draft_config is set but spec_k == 0 — "
+                             "speculation is off, the draft would be dead "
+                             "weight (set spec_k > 0 or drop draft_config)")
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
@@ -222,6 +250,36 @@ class ContinuousBatchingEngine:
 
         S, L = ecfg.num_slots, ecfg.max_len
         self.caches = lm.init_caches(cfg, S, L)
+        # speculative decoding state (spec_k > 0): the draft model's pooled
+        # caches live ALONGSIDE the target's, slot-indexed identically, so
+        # admission/eviction treat the pair as one unit.  _tlen/_dlen are
+        # the host-authoritative cache lengths: verify appends k+1 positions
+        # optimistically, host rejection decides how many survive, and the
+        # NEXT rollout dispatch rolls both trees back to these (lengths are
+        # metadata — the truncate costs no extra dispatch).
+        self.spec = ecfg.spec_k > 0
+        self.draft_params = self.draft_cfg = None
+        self.draft_caches = None
+        if self.spec:
+            if draft is not None:
+                self.draft_params, self.draft_cfg = draft
+            else:
+                self.draft_params, self.draft_cfg = spec_lib.build_draft(
+                    ecfg.draft_config, params, cfg, seed=ecfg.seed)
+            if any(b.mixer != "attn" for b in self.draft_cfg.period):
+                raise ValueError("draft model requires attention mixers "
+                                 "(same pooled-cache contract as the target)")
+            if self.draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {self.draft_cfg.vocab_size} != target "
+                    f"vocab {cfg.vocab_size}: rejection sampling compares "
+                    f"the two distributions token-for-token")
+            self.draft_caches = lm.init_caches(self.draft_cfg, S, L)
+            self._tlen = np.zeros((S,), np.int32)   # target cache lengths
+            self._dlen = np.zeros((S,), np.int32)   # draft cache lengths
+        self._spec_rounds = 0
+        self.n_draft_tokens = 0
+        self.n_accepted_tokens = 0
         self.slots: List[Optional[SlotState]] = [None] * S
         self.queue = TenantQueues()
         self.results: List[RequestResult] = []
@@ -256,26 +314,64 @@ class ContinuousBatchingEngine:
         # updates them in place instead of copying the full KV pool per
         # token (the caller always rebinds self.caches to the result); CPU
         # has no donation support and would warn per compile
-        def _don(i):
+        def _don(*i):
             return {} if jax.default_backend() == "cpu" \
-                else {"donate_argnums": (i,)}
+                else {"donate_argnums": i}
         self._decode_jit = jax.jit(
-            lambda p, t, c, off, wm: lm.decode_step(p, cfg, t, c, off,
-                                                    write_mask=wm,
-                                                    with_stats=True),
+            lambda p, t, c, off, wm, lv: lm.decode_step(p, cfg, t, c, off,
+                                                        write_mask=wm,
+                                                        token_valid=lv,
+                                                        with_stats=True),
             **_don(2))
-        self._prefill_jits = {
-            b: jax.jit(
-                lambda p, t, n, c, s: lm.prefill_slot(p, cfg, t, n, c, L, s),
-                **_don(3))
-            for b in ecfg.buckets()}
-        self._chunk_jit = None
-        if ecfg.prefill_chunk:
-            self._chunk_jit = jax.jit(
-                lambda p, t, v, c, off: lm.prefill_chunk(p, cfg, t, v, c,
-                                                         off), **_don(3))
-        self._evict_jit = jax.jit(lambda c, ev: lm.cache_evict_rows(c, ev),
-                                  **_don(0))
+        if self.spec:
+            dcfg = self.draft_cfg
+            # every spec-mode entry point that touches caches touches BOTH
+            # trees in the SAME dispatch — prefill, chunk, evict, round —
+            # so speculation adds zero dispatch overhead over plain serving
+            # anywhere except the round itself (where it replaces k+1
+            # decode dispatches with one)
+            self._prefill_jits = {
+                b: jax.jit(
+                    lambda p, dp, t, n, c, dc, s: spec_lib.prefill_both(
+                        p, cfg, dp, dcfg, t, n, c, dc, L, s),
+                    **_don(4, 5))
+                for b in ecfg.buckets()}
+            self._chunk_jit = None
+            if ecfg.prefill_chunk:
+                self._chunk_jit = jax.jit(
+                    lambda p, dp, t, v, c, dc, off: spec_lib.chunk_both(
+                        p, cfg, dp, dcfg, t, v, c, dc, off), **_don(4, 5))
+            self._evict_jit = jax.jit(
+                lambda c, dc, ev: (lm.cache_evict_rows(c, ev),
+                                   lm.cache_evict_rows(dc, ev)),
+                **_don(0, 1))
+            # the whole round — both trees' length rollback, k+1 scanned
+            # draft decode steps with on-device sampling, and the target's
+            # (num_slots, k+1) verify — in one compiled shape.  The
+            # per-round PRNG key derives inside the trace from a traced
+            # round counter, so the jit compiles once.
+            self._spec_jit = jax.jit(
+                lambda p, dp, t0, c, dc, tl, dl, p0, wm, vl, lv, tp, rnd:
+                spec_lib.spec_round(
+                    p, cfg, dp, dcfg, t0, c, dc, tl, dl, p0, wm, vl, lv, tp,
+                    jax.random.fold_in(jax.random.PRNGKey(ecfg.seed), rnd),
+                    verify_cf=self._verify_cf()),
+                **_don(3, 4))
+        else:
+            self._prefill_jits = {
+                b: jax.jit(
+                    lambda p, t, n, c, s: lm.prefill_slot(p, cfg, t, n, c,
+                                                          L, s),
+                    **_don(3))
+                for b in ecfg.buckets()}
+            self._chunk_jit = None
+            if ecfg.prefill_chunk:
+                self._chunk_jit = jax.jit(
+                    lambda p, t, v, c, off: lm.prefill_chunk(p, cfg, t, v,
+                                                             c, off),
+                    **_don(3))
+            self._evict_jit = jax.jit(
+                lambda c, ev: lm.cache_evict_rows(c, ev), **_don(0))
         # per-slot raw leaf counts accumulated across a request's prefill
         # chunks; normalized into self.occupancy when its prefill completes
         self._prefill_counts = np.zeros((S, max(self.num_leaves, 1)),
@@ -293,10 +389,13 @@ class ContinuousBatchingEngine:
         self._last_decode_end: Optional[float] = None
         # slot-weighted overflow accumulators, split by phase: admission
         # composes the *decode* batch, so decode overflow is the scheduler's
-        # signal; prefill overflow is per-request and composition-free under
-        # monolithic prefill (chunked slabs DO mix requests + filler rows —
-        # their weight is scaled to the real-token fraction, _stats_rows)
-        self._overflow = {"prefill": [0.0, 0.0], "decode": [0.0, 0.0]}
+        # signal (spec verify dispatches land there too — they ARE the
+        # target's decode); "draft" keeps the draft model's own routing out
+        # of the target's numbers; prefill overflow is per-request.  Filler
+        # rows cost nothing anywhere: the per-row validity mask routes them
+        # to the FFF sentinel leaf, outside capacity and telemetry.
+        self._overflow = {"prefill": [0.0, 0.0], "decode": [0.0, 0.0],
+                          "draft": [0.0, 0.0]}
 
     # -- clock ---------------------------------------------------------------
 
@@ -400,6 +499,18 @@ class ContinuousBatchingEngine:
                 self._topology = (shards, cf)
         return self._topology
 
+    def _verify_cf(self) -> Optional[float]:
+        """Capacity factor for the speculative verify dispatch: the decode
+        capacity factor scaled by the slab width ``k + 1``.  A verify slab
+        is k+1 decode steps fused onto one token axis, so per-leaf capacity
+        must scale with that axis — otherwise each verify token would see
+        LESS capacity than the same token in plain decode (the per-leaf
+        capacity floor is generous to small batches) and speculation would
+        change serving numerics instead of just batching them.  None for
+        exact backends (no capacity bound)."""
+        _, cf = self._dispatch_topology()
+        return None if cf is None else float(cf) * (self.ecfg.spec_k + 1)
+
     # -- telemetry -----------------------------------------------------------
 
     def _stats_rows(self, stats, phase: str,
@@ -408,11 +519,11 @@ class ContinuousBatchingEngine:
         counts (B, E) for sites matching the engine's telemetry width, and
         fold the slot-weighted overflow into the running per-phase mean.
 
-        ``weight_scale`` discounts a dispatch whose batch is partly filler:
-        the chunk slab always carries num_slots rows but only the
-        mid-prefill rows' tokens belong to requests, so its overflow weight
-        is scaled to the real-token fraction — otherwise the exported
-        overflow_fraction_mean would mostly reflect filler routing."""
+        ``RoutingStats.slots`` counts VALID tokens only — the per-row
+        validity mask routes filler rows to the sentinel leaf, which
+        ``bincount`` drops — so slab dispatches self-weight by real-token
+        count and ``weight_scale`` stays 1.0 for them (it remains as an
+        explicit discount hook for callers with out-of-band knowledge)."""
         if stats is None or self.num_leaves == 0:
             return None
         counts = None
@@ -429,7 +540,13 @@ class ContinuousBatchingEngine:
         return counts
 
     def _update_occupancy(self, slot_rows: Sequence[int],
-                          counts: Optional[np.ndarray]) -> None:
+                          counts: Optional[np.ndarray],
+                          measured: bool = True) -> None:
+        """Fold per-row leaf counts into the occupancy EWMA.  ``measured``
+        False (the draft model's histograms — a PRIOR on where the target's
+        verify tokens will route, DESIGN.md §10) refines the footprint the
+        schedulers read without promoting the row into profile-store
+        eligibility: profiles must hold target-measured telemetry only."""
         if counts is None:
             return
         a = self.ecfg.occupancy_ewma
@@ -437,7 +554,8 @@ class ContinuousBatchingEngine:
             tot = counts[r].sum()
             if tot <= 0:
                 continue
-            self._measured[r] = True
+            if measured:
+                self._measured[r] = True
             frac = counts[r] / tot
             prev = self.occupancy[r]
             self.occupancy[r] = frac if not prev.any() else \
@@ -445,7 +563,7 @@ class ContinuousBatchingEngine:
 
     def overflow_mean(self, phase: Optional[str] = None) -> float:
         """Slot-weighted mean overflow_fraction; ``phase`` in
-        {"prefill", "decode", None = both}."""
+        {"prefill", "decode", "draft", None = all}."""
         keys = [phase] if phase else list(self._overflow)
         w = sum(self._overflow[k][0] for k in keys)
         n = sum(self._overflow[k][1] for k in keys)
@@ -491,6 +609,9 @@ class ContinuousBatchingEngine:
             self.occupancy[i] = 0.0
             self._measured[i] = False
             self._prefill_counts[i] = 0.0
+            if self.spec:
+                self._tlen[i] = 0
+                self._dlen[i] = 0
             # what this freed slot will decode while idle: the occupant's
             # last NON-EOS token — replaying the EOS id itself would pile
             # every freed slot's phantom routing onto the EOS token's leaf
@@ -507,10 +628,17 @@ class ContinuousBatchingEngine:
                 admitted_time=st.admitted_time,
                 first_token_time=st.first_token_time,
                 finish_time=st.finish_time,
-                tenant=st.request.tenant))
+                tenant=st.request.tenant,
+                n_drafted=st.n_drafted,
+                n_accepted=st.n_accepted))
             self.slots[i] = None
         if evict.any():      # one dispatch frees the whole step's slots
-            self.caches = self._evict_jit(self.caches, jnp.asarray(evict))
+            if self.spec:
+                self.caches, self.draft_caches = self._evict_jit(
+                    self.caches, self.draft_caches, jnp.asarray(evict))
+            else:
+                self.caches = self._evict_jit(self.caches,
+                                              jnp.asarray(evict))
 
     def _bucket_for(self, n: int) -> int:
         return next(b for b in self.ecfg.buckets() if b >= n)
@@ -546,7 +674,12 @@ class ContinuousBatchingEngine:
             dispatch_shards=shards,
             prefilling=np.asarray([s is not None and s.prefilling
                                    for s in self.slots]),
-            profiles=self.profiles)
+            profiles=self.profiles,
+            # spec verify dispatches spec_k + 1 tokens per slot: the
+            # scheduler's per-leaf capacity proxy must be normalized by the
+            # same factor or it would predict overflow against a bound k+1
+            # times too tight (see SchedulerView.leaf_capacity)
+            tokens_per_slot=(self.ecfg.spec_k + 1) if self.spec else 1)
         if self.ecfg.prefill_chunk:
             # the max_prefilling knob is chunked-only by contract (a
             # monolithic admission never *dwells* in the prefilling state,
@@ -575,9 +708,20 @@ class ContinuousBatchingEngine:
         toks = np.full((1, bucket), req.prompt[-1], np.int32)
         toks[0, :L] = req.prompt
         with self._ctx():
-            logits, self.caches, stats = self._prefill_jits[bucket](
-                self.params, jnp.asarray(toks), jnp.int32(L),
-                self.caches, jnp.int32(slot))
+            if self.spec:
+                # one dispatch prefills the prompt into BOTH cache trees
+                logits, self.caches, self.draft_caches, stats, dstats = \
+                    self._prefill_jits[bucket](
+                        self.params, self.draft_params, jnp.asarray(toks),
+                        jnp.int32(L), self.caches, self.draft_caches,
+                        jnp.int32(slot))
+                self._stats_rows(dstats, "draft")
+                self._tlen[slot] = L
+                self._dlen[slot] = L
+            else:
+                logits, self.caches, stats = self._prefill_jits[bucket](
+                    self.params, jnp.asarray(toks), jnp.int32(L),
+                    self.caches, jnp.int32(slot))
         logits = np.asarray(jax.block_until_ready(logits))
         self.n_prefills += 1
         t = self.now()
@@ -604,6 +748,9 @@ class ContinuousBatchingEngine:
                        first_token_time=0.0, tokens=[], total_len=0,
                        prefill_pos=0)
         self.slots[slot] = st
+        if self.spec:
+            self._tlen[slot] = 0
+            self._dlen[slot] = 0
         self._prefill_counts[slot] = 0.0
         self._measured[slot] = False
         self._seed_hint(slot, req)     # prior until measured counts land
@@ -631,17 +778,30 @@ class ContinuousBatchingEngine:
             valid[i] = n
             offs[i] = st.prefill_pos
         with self._ctx():
-            logits, self.caches, stats = self._chunk_jit(
-                self.params, jnp.asarray(toks), jnp.asarray(valid),
-                self.caches, jnp.asarray(offs))
+            if self.spec:
+                # one slab dispatch advances every prefill in BOTH trees
+                logits, self.caches, self.draft_caches, stats, dstats = \
+                    self._chunk_jit(
+                        self.params, self.draft_params, jnp.asarray(toks),
+                        jnp.asarray(valid), self.caches, self.draft_caches,
+                        jnp.asarray(offs))
+                self._stats_rows(dstats, "draft")
+            else:
+                logits, self.caches, stats = self._chunk_jit(
+                    self.params, jnp.asarray(toks), jnp.asarray(valid),
+                    self.caches, jnp.asarray(offs))
         logits = np.asarray(jax.block_until_ready(logits))
         self.n_chunks += 1
-        # overflow weight ~ real prompt tokens in the slab, not slab size
-        counts = self._stats_rows(stats, "prefill",
-                                  weight_scale=float(valid.sum()) / (S * C))
+        # slab overflow self-weights by real-token count now: the chunk-mode
+        # validity mask routes filler positions to the sentinel leaf, so
+        # RoutingStats.slots already counts only the valid prompt tokens
+        counts = self._stats_rows(stats, "prefill")
         for i in prefilling:
             st = self.slots[i]
             st.prefill_pos += int(valid[i])
+            if self.spec:
+                self._tlen[i] += int(valid[i])
+                self._dlen[i] += int(valid[i])
             if counts is not None:
                 self._prefill_counts[i] += counts[i]
             if not st.prefilling:          # prompt fully consumed this chunk
@@ -676,11 +836,17 @@ class ContinuousBatchingEngine:
             # masked and wholesale-replaced by cache_insert on admission) —
             # the pre-chunking behavior, preserved bit-for-bit
             wm = np.ones((self.ecfg.num_slots,), bool)
+        # free/mid-prefill rows are phantom tokens: the validity mask routes
+        # them to the FFF sentinel leaf so they never consume grouped-
+        # dispatch capacity or pollute routing telemetry (DESIGN.md §9 —
+        # deliberately separate from wm, which guards KV writes)
+        lv = np.zeros((self.ecfg.num_slots,), bool)
+        lv[live] = True
         t0 = time.monotonic()
         with self._ctx():
             logits, self.caches, stats = self._decode_jit(
                 self.params, jnp.asarray(toks), self.caches,
-                jnp.asarray(offs), jnp.asarray(wm))
+                jnp.asarray(offs), jnp.asarray(wm), jnp.asarray(lv))
         logits = np.asarray(jax.block_until_ready(logits))
         t1 = time.monotonic()
         self.decode_lat.append(t1 - t0)
@@ -693,16 +859,122 @@ class ContinuousBatchingEngine:
             self._record_token(self.slots[i], self._sample(self.slots[i],
                                                            logits[i]))
 
+    def _spec_round(self) -> None:
+        """One speculative draft/verify round (DESIGN.md §10), replacing
+        ``_decode`` when ``spec_k > 0``.  ONE fixed-shape dispatch
+        (``_spec_jit``) runs, in order:
+
+        1. rollback — both cache trees to the host-authoritative lengths
+           (undoing the previous round's rejected optimistic appends);
+        2. draft rollout — ``spec_k + 1`` scanned draft decode steps with
+           on-device sampling, yielding proposals + draft logits + per-slot
+           draft leaf histograms;
+        3. verify — the target scores the ``(num_slots, k + 1)`` slab
+           ``[pending, d_1 .. d_k]`` through the chunk machinery, appending
+           K/V optimistically (per-row offsets; free rows masked out of
+           capacity by the validity mask, writes dropped by valid_len = 0).
+
+        Host-side rejection sampling then emits 1 .. k + 1 tokens per live
+        slot — the accepted prefix plus the corrected/bonus token — with the
+        target distribution preserved exactly (greedy: the target argmax
+        chain, token for token).  Draft histograms fold into the occupancy
+        EWMA as an unmeasured prior, so the leaf-aware schedulers compose
+        verify batches against predicted — not just trailing — leaf load.
+        """
+        live = [i for i, s in enumerate(self.slots)
+                if s is not None and not s.done and not s.prefilling]
+        if not live:
+            return
+        S, k = self.ecfg.num_slots, self.ecfg.spec_k
+        toks = self._free_tok[:, None].copy()
+        pos0 = np.zeros((S,), np.int32)
+        temps = np.zeros((S,), np.float32)
+        lv = np.zeros((S,), bool)
+        vlen = np.zeros((S,), np.int32)
+        for i in live:
+            st = self.slots[i]
+            toks[i, 0] = st.tokens[-1]
+            n = st.total_len - 1             # position of the pending token
+            pos0[i] = n
+            temps[i] = max(st.request.temperature, 0.0)
+            lv[i] = True
+            vlen[i] = min(k + 1, self.ecfg.max_len - n)
+        # per-step draft KV-write guards: step j appends at pos0 + j; rows
+        # at the cache edge stop writing (their later drafts go unverified —
+        # vlen clips the verify slab identically)
+        wm = lv[None, :] & ((pos0[None, :] + np.arange(k + 1)[:, None])
+                            < self.ecfg.max_len)
+        t0 = time.monotonic()
+        with self._ctx():
+            (drafts, q_logits, p_logits, self.caches, self.draft_caches,
+             dstats, vstats) = self._spec_jit(
+                self.params, self.draft_params, jnp.asarray(toks),
+                self.caches, self.draft_caches, jnp.asarray(self._tlen),
+                jnp.asarray(self._dlen), jnp.asarray(pos0), jnp.asarray(wm),
+                jnp.asarray(vlen), jnp.asarray(lv), jnp.asarray(temps),
+                jnp.int32(self._spec_rounds))
+        self._spec_rounds += 1
+        p_logits = np.asarray(jax.block_until_ready(p_logits))  # (S,k+1,V)
+        drafts = np.asarray(drafts)                             # (k, S)
+        q_logits = np.asarray(q_logits)                         # (k+1,S,V)
+        # draft leaf histograms: the verify step's occupancy PRIOR.  Width-
+        # mismatched drafts contribute overflow telemetry only (_stats_rows
+        # drops their counts); self-drafts share the target's leaf space.
+        self._update_occupancy(live, self._stats_rows(dstats, "draft"),
+                               measured=False)
+        t1 = time.monotonic()
+        self.decode_lat.append(t1 - t0)
+        if self._last_decode_end is not None:
+            self.decode_interval_s.append(t1 - self._last_decode_end)
+        self._last_decode_end = t1
+        self.n_steps += 1
+        # verify IS the target's decode: same phase, measured occupancy
+        self._update_occupancy(live, self._stats_rows(vstats, "decode"))
+
+        for i in live:
+            st = self.slots[i]
+            vl = int(vlen[i])
+            m = vl - 1                        # drafts actually verified
+            rng = None
+            if st.request.temperature > 0.0:
+                # 4-tuple stream: disjoint from the non-spec sampler's
+                # (seed, rid, len) 3-tuples by construction
+                rng = np.random.default_rng(
+                    (self.ecfg.seed, st.request.rid, len(st.tokens), 2))
+            emitted, n_acc = spec_lib.rejection_sample(
+                p_logits[i, :vl], q_logits[:m, i], drafts[:m, i],
+                st.request.temperature, rng)
+            st.n_drafted += m
+            st.n_accepted += n_acc
+            self.n_draft_tokens += m
+            self.n_accepted_tokens += n_acc
+            emitted_n = 0
+            for tok in emitted:
+                self._record_token(st, int(tok))
+                emitted_n += 1
+                if st.done:   # EOS/length mid-run: later tokens never exist
+                    break
+            # both trees sit at pos0 + vl (optimistic appends); the slot's
+            # true history is pos0 + emitted_n tokens.  Record the desired
+            # lengths — the next rollout's set_cache_lengths applies them.
+            self._tlen[i] = int(pos0[i]) + emitted_n
+            self._dlen[i] = int(pos0[i]) + emitted_n
+
     def step(self) -> None:
         """One engine iteration: evict finished slots, admit from the queue,
         advance chunked prefills (up to ``prefill_budget`` slab dispatches),
-        decode every active non-prefilling slot together."""
+        then decode every active non-prefilling slot together — one plain
+        decode step, or one speculative draft/verify round when spec_k >
+        0."""
         self._evict_finished()
         self._admit()
         if self.ecfg.prefill_chunk:
             for _ in range(self.ecfg.prefill_budget):
                 self._chunk_prefill()
-        self._decode()
+        if self.spec:
+            self._spec_round()
+        else:
+            self._decode()
 
     def has_work(self) -> bool:
         """True while anything is queued or occupying a slot (the manual
@@ -728,6 +1000,7 @@ class ContinuousBatchingEngine:
         n_prefills0, n_lat0 = self.n_prefills, len(self.decode_lat)
         n_chunks0, n_int0 = self.n_chunks, len(self.decode_interval_s)
         hints0 = self._hint_mismatches
+        draft0, acc0 = self.n_draft_tokens, self.n_accepted_tokens
         ovf0 = {k: list(v) for k, v in self._overflow.items()}
         t_start = self.now()
         self._last_decode_end = None    # decode gaps don't span runs
@@ -767,7 +1040,9 @@ class ContinuousBatchingEngine:
             overflow_decode_mean=ovf_delta(["decode"]),
             n_chunks=self.n_chunks - n_chunks0,
             decode_interval_s=intervals,
-            hint_mismatches=self._hint_mismatches - hints0)
+            hint_mismatches=self._hint_mismatches - hints0,
+            draft_tokens=self.n_draft_tokens - draft0,
+            accepted_tokens=self.n_accepted_tokens - acc0)
         return results, m
 
     def poll_metrics(self) -> metrics_lib.EngineMetrics:
@@ -787,7 +1062,9 @@ class ContinuousBatchingEngine:
             overflow_decode_mean=self.overflow_mean("decode"),
             n_chunks=self.n_chunks,
             decode_interval_s=self.decode_interval_s,
-            hint_mismatches=self._hint_mismatches)
+            hint_mismatches=self._hint_mismatches,
+            draft_tokens=self.n_draft_tokens,
+            accepted_tokens=self.n_accepted_tokens)
         m.queue_depth = len(self.queue)
         m.active_slots = sum(s is not None for s in self.slots)
         m.prefilling_slots = sum(s is not None and s.prefilling
@@ -817,4 +1094,6 @@ class ContinuousBatchingEngine:
             out[f"prefill_{b}"] = n(fn)
         if self._chunk_jit is not None:
             out["prefill_chunk"] = n(self._chunk_jit)
+        if self.spec:
+            out["spec_round"] = n(self._spec_jit)
         return out

@@ -83,6 +83,11 @@ class EngineMetrics:
     overflow_decode_mean: float = 0.0    # decode-phase only: the scheduler's
                                          # microbatch-composition signal
     hint_mismatches: int = 0             # leaf_hints dropped for size mismatch
+    # speculative decoding (DESIGN.md §10): draft tokens proposed, accepted,
+    # and wasted (= drafted - accepted, the verify compute thrown away);
+    # spec_acceptance = accepted / drafted (0 when speculation is off)
+    draft_tokens: int = 0
+    accepted_tokens: int = 0
     queue_depth: int = 0                 # waiting requests (instantaneous)
     active_slots: int = 0                # occupied slots (instantaneous)
     prefilling_slots: int = 0            # slots mid-chunked-prefill
@@ -93,6 +98,14 @@ class EngineMetrics:
     @property
     def throughput_tok_s(self) -> float:
         return tokens_per_second(self.n_tokens, self.elapsed_s)
+
+    @property
+    def spec_acceptance(self) -> float:
+        return self.accepted_tokens / max(self.draft_tokens, 1)
+
+    @property
+    def wasted_tokens(self) -> int:
+        return self.draft_tokens - self.accepted_tokens
 
     def report(self) -> str:
         lines = [
@@ -109,6 +122,12 @@ class EngineMetrics:
             f"fff overflow_fraction mean {self.overflow_fraction_mean:.4f} "
             f"(decode-only {self.overflow_decode_mean:.4f})",
         ]
+        if self.draft_tokens:
+            lines.append(
+                f"speculative: {self.draft_tokens} drafted, "
+                f"{self.accepted_tokens} accepted "
+                f"(acceptance {self.spec_acceptance:.3f}, "
+                f"{self.wasted_tokens} wasted)")
         if self.hint_mismatches:
             lines.append(f"leaf_hint size mismatches dropped: "
                          f"{self.hint_mismatches}")
@@ -138,6 +157,10 @@ class EngineMetrics:
             "overflow_fraction_mean": self.overflow_fraction_mean,
             "overflow_decode_mean": self.overflow_decode_mean,
             "hint_mismatches": self.hint_mismatches,
+            "spec_acceptance": self.spec_acceptance,
+            "draft_tokens": self.draft_tokens,
+            "accepted_tokens": self.accepted_tokens,
+            "wasted_tokens": self.wasted_tokens,
             "queue_depth": self.queue_depth,
             "active_slots": self.active_slots,
             "prefilling_slots": self.prefilling_slots,
@@ -155,12 +178,17 @@ def tenant_breakdown(results: Iterable, elapsed_s: float) -> Dict[str, dict]:
     for t in sorted({r.tenant for r in rs}):
         trs = [r for r in rs if r.tenant == t]
         n_tok = sum(r.n_generated for r in trs)
+        drafted = sum(r.n_drafted for r in trs)
+        accepted = sum(r.n_accepted for r in trs)
         out[t] = {
             "n_requests": len(trs),
             "n_tokens": n_tok,
             "throughput_tok_s": tokens_per_second(n_tok, elapsed_s),
             "ttft_ms": summarize([r.ttft for r in trs]).as_dict(),
             "e2e_ms": summarize([r.e2e_latency for r in trs]).as_dict(),
+            "draft_tokens": drafted,
+            "accepted_tokens": accepted,
+            "spec_acceptance": accepted / max(drafted, 1),
         }
     return out
 
@@ -171,7 +199,9 @@ def from_results(results: Iterable, *, elapsed_s: float, n_steps: int,
                  overflow_decode_mean: float = 0.0,
                  n_chunks: int = 0,
                  decode_interval_s: Sequence[float] = (),
-                 hint_mismatches: int = 0) -> EngineMetrics:
+                 hint_mismatches: int = 0,
+                 draft_tokens: int = 0,
+                 accepted_tokens: int = 0) -> EngineMetrics:
     """Build an ``EngineMetrics`` from finished ``RequestResult`` records."""
     rs = list(results)
     return EngineMetrics(
@@ -187,4 +217,6 @@ def from_results(results: Iterable, *, elapsed_s: float, n_steps: int,
         overflow_fraction_mean=overflow_mean,
         overflow_decode_mean=overflow_decode_mean,
         hint_mismatches=hint_mismatches,
+        draft_tokens=draft_tokens,
+        accepted_tokens=accepted_tokens,
         tenants=tenant_breakdown(rs, elapsed_s))

@@ -72,6 +72,10 @@ class RequestResult:
     first_token_time: float
     finish_time: float
     tenant: str = "default"
+    # speculative decoding (DESIGN.md §10): draft tokens proposed/accepted
+    # for this request — 0/0 when the engine runs without speculation
+    n_drafted: int = 0
+    n_accepted: int = 0
 
     @property
     def n_generated(self) -> int:
@@ -111,6 +115,8 @@ class SlotState:
     done: bool = False
     finish_reason: str = ""
     finish_time: float = 0.0
+    n_drafted: int = 0                      # spec decoding: proposed drafts
+    n_accepted: int = 0                     # spec decoding: accepted drafts
 
     @property
     def prefilling(self) -> bool:

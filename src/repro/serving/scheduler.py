@@ -58,6 +58,12 @@ class SchedulerView:
     profiles:  the engine's online ``RoutingProfileStore`` (or None) —
                leaf-aware schedulers fall back to ``profiles.lookup(
                req.tenant)`` for candidates without a usable ``leaf_hint``
+    tokens_per_slot: tokens each active slot contributes to one decode-side
+               dispatch — 1 for plain decode, ``spec_k + 1`` for a
+               speculative verify slab (DESIGN.md §10): the capacity the
+               overflow proxy predicts against scales with the slab width,
+               and the occupancy fractions are per-token so the load side
+               scales identically
     """
     occupancy: np.ndarray
     active: np.ndarray
@@ -67,21 +73,29 @@ class SchedulerView:
     dispatch_shards: int = 1
     prefilling: Optional[np.ndarray] = None
     profiles: Optional[object] = None    # serving.profiles.RoutingProfileStore
+    tokens_per_slot: int = 1
 
     def leaf_capacity(self) -> float:
-        """Whole-batch per-leaf slot capacity of one decode dispatch: the
-        dispatch layer's own per-(shard, leaf) law (``dispatch.ep_capacity``,
-        shared by ``grouped_leaf_apply``) times the shard count — with
-        tokens split roughly evenly, the per-shard floor multiplies.
-        Infinite for exact (capacity-unbounded) backends: the leaf_aware
-        objective then reduces to its max-load balancing term."""
+        """Whole-batch per-leaf capacity of one decode-side dispatch, in
+        units of slot-footprints (occupancy rows summing to ~1 per slot):
+        the dispatch layer's own per-(shard, leaf) law
+        (``dispatch.ep_capacity``, shared by ``grouped_leaf_apply``) on the
+        per-shard token count, times the shard count — with tokens split
+        roughly evenly, the per-shard floor multiplies.  The dispatch
+        carries ``num_slots * tokens_per_slot`` tokens (a speculative
+        verify slab is ``(num_slots, spec_k + 1)``); dividing back by
+        ``tokens_per_slot`` converts token capacity into the per-slot
+        footprint units the leaf_aware load side uses.  Infinite for exact
+        (capacity-unbounded) backends: the leaf_aware objective then
+        reduces to its max-load balancing term."""
         if self.num_leaves <= 0 or self.capacity_factor is None:
             return float("inf")
         from repro.distributed import dispatch as dispatch_lib
         shards = max(self.dispatch_shards, 1)
-        per_shard = -(-self.num_slots // shards)             # ceil
+        tps = max(self.tokens_per_slot, 1)
+        per_shard = -(-self.num_slots * tps // shards)       # ceil
         return float(dispatch_lib.ep_capacity(
-            per_shard, self.num_leaves, self.capacity_factor) * shards)
+            per_shard, self.num_leaves, self.capacity_factor) * shards) / tps
 
 
 class Scheduler:

@@ -1,0 +1,333 @@
+"""Speculative-decoding tests (DESIGN.md §10).
+
+Three tiers, mirroring tests/test_serving.py:
+* host-only — rejection sampling (greedy chain + exact-distribution
+  property), draft construction/slicing, the capacity-factor override;
+* engine tier on the reduced config — greedy parity with ``lm.generate``
+  in both prefill modes, the one-compile spec_round contract, acceptance
+  telemetry, sampling determinism, the free-slot validity-mask regression,
+  and config validation;
+* a subprocess tier driving ``launch/serve.py --spec-k`` under a
+  ``--model-parallel`` mesh with the ``grouped_ep`` backend.
+
+The reduced target has one period, so the default ``self`` draft is the
+full target sharing parameters — acceptance is ~1 by construction, which
+is what makes greedy parity and the telemetry bounds deterministic."""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import api, fff
+from repro.models import lm
+from repro.serving import (ContinuousBatchingEngine, EngineConfig, Request,
+                           build_draft, rejection_sample, self_draft_config,
+                           slice_draft_params)
+
+from test_sharding import run_with_fake_devices
+
+
+# ---------------------------------------------------------------------------
+# host-only tier: rejection sampling
+# ---------------------------------------------------------------------------
+
+def _softmax(z):
+    z = np.asarray(z, np.float64)
+    e = np.exp(z - z.max())
+    return e / e.sum()
+
+
+def test_rejection_sample_greedy_is_target_argmax_chain():
+    """Greedy: accepted prefix + correction = the target argmax at every
+    position, token for token — agreement beyond the first mismatch is
+    irrelevant."""
+    rng = np.random.default_rng(0)
+    V, m = 11, 4
+    p = rng.normal(size=(m + 1, V))
+    argmax = p.argmax(1)
+    # drafts agree on the first two positions, diverge at the third
+    drafts = argmax[:m].copy()
+    drafts[2] = (drafts[2] + 1) % V
+    emitted, n_acc = rejection_sample(p, rng.normal(size=(m, V)), drafts, 0.0)
+    assert n_acc == 2
+    assert emitted == [int(a) for a in argmax[:3]]
+    # full agreement: all m accepted plus the bonus token
+    emitted, n_acc = rejection_sample(p, rng.normal(size=(m, V)),
+                                      argmax[:m], 0.0)
+    assert n_acc == m
+    assert emitted == [int(a) for a in argmax]
+
+
+def test_rejection_sample_preserves_target_distribution():
+    """The Leviathan guarantee: whatever the draft proposes, the first
+    emitted token is distributed exactly as the target's softmax.  Checked
+    empirically against a deliberately mismatched draft."""
+    rng = np.random.default_rng(1)
+    V, temp, n = 6, 0.7, 4000
+    p_logits = rng.normal(size=(2, V))
+    q_logits = rng.normal(size=(1, V)) * 2.0       # badly calibrated draft
+    q = _softmax(q_logits[0] / temp)
+    counts = np.zeros(V)
+    for i in range(n):
+        r = np.random.default_rng(1000 + i)
+        d = np.array([r.choice(V, p=q)])           # draft samples from q
+        emitted, _ = rejection_sample(p_logits, q_logits, d, temp, r)
+        counts[emitted[0]] += 1
+    want = _softmax(p_logits[0] / temp)
+    np.testing.assert_allclose(counts / n, want, atol=0.03)
+
+
+def test_rejection_sample_accept_rate_matches_overlap():
+    """When draft == target the acceptance probability is 1 exactly (the
+    min(1, p/q) ratio is 1 for every token)."""
+    rng = np.random.default_rng(2)
+    V = 8
+    logits = rng.normal(size=(3, V))
+    p = np.concatenate([logits, rng.normal(size=(1, V))])
+    for i in range(50):
+        r = np.random.default_rng(i)
+        drafts = np.array([np.random.default_rng(7 + j).choice(
+            V, p=_softmax(logits[j])) for j in range(3)])
+        _, n_acc = rejection_sample(p, logits, drafts, 1.0, r)
+        assert n_acc == 3
+
+
+# ---------------------------------------------------------------------------
+# host-only tier: draft construction
+# ---------------------------------------------------------------------------
+
+def test_self_draft_slices_share_target_leaves():
+    cfg = registry.get_config("internlm2-20b", ffn="fff").reduced()
+    cfg2 = self_draft_config(cfg, 1)
+    assert cfg2.n_layers == len(cfg.period)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    sliced = slice_draft_params(params, cfg, 1)
+    assert sliced["embed"] is params["embed"]          # shared, not copied
+    for p in sliced["stack"]:
+        assert all(a.shape[0] == 1
+                   for a in jax.tree_util.tree_leaves(p))
+    with pytest.raises(ValueError, match="out of range"):
+        self_draft_config(cfg, cfg.n_periods + 1)
+    with pytest.raises(ValueError, match="out of range"):
+        slice_draft_params(params, cfg, 0)
+
+
+def test_build_draft_specs():
+    cfg = registry.get_config("internlm2-20b", ffn="fff").reduced()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    dp, dcfg = build_draft(None, params, cfg)          # None = "self"
+    assert dcfg.n_layers == len(cfg.period)
+    dp2, dcfg2 = build_draft("starcoder2-15b", params, cfg, seed=3)
+    assert dcfg2.vocab_size == cfg.vocab_size
+    assert dp2["embed"] is not params["embed"]         # independent init
+    with pytest.raises(KeyError):
+        build_draft("no-such-arch", params, cfg)
+
+
+# ---------------------------------------------------------------------------
+# host-only tier: the capacity-factor override (core/api)
+# ---------------------------------------------------------------------------
+
+def test_use_capacity_factor_scales_grouped_dispatch():
+    """All tokens routed to one leaf: the default capacity drops half the
+    batch; under the override the dispatch becomes loss-free and matches
+    the exact reference output (the spec verify-slab contract)."""
+    cfg = fff.FFFConfig(dim_in=8, dim_out=8, depth=2, leaf_width=4,
+                        leaf_bias=False)
+    params = fff.init(jax.random.PRNGKey(0), cfg)
+    x = jnp.tile(jax.random.normal(jax.random.PRNGKey(1), (1, 8)), (64, 1))
+    spec = api.ExecutionSpec(mode="infer", backend="grouped")
+    _, out = api.apply(params, cfg, x, spec)
+    assert float(out.overflow_fraction) == pytest.approx(0.5)
+    with api.use_capacity_factor(16.0):
+        y, out = api.apply(params, cfg, x, spec)
+    assert float(out.overflow_fraction) == 0.0
+    want, _ = api.apply(params, cfg, x, api.ExecutionSpec(
+        mode="infer", backend="reference"))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # an explicit per-spec capacity factor wins over the context
+    with api.use_capacity_factor(16.0):
+        _, out = api.apply(params, cfg, x, api.ExecutionSpec(
+            mode="infer", backend="grouped", capacity_factor=2.0))
+    assert float(out.overflow_fraction) == pytest.approx(0.5)
+    with pytest.raises(ValueError, match="positive"):
+        with api.use_capacity_factor(0.0):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# engine tier (reduced config, single device)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = registry.get_config("internlm2-20b", ffn="fff").reduced()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, **kw):
+    defaults = dict(num_slots=4, max_len=48, max_prompt_len=16, spec_k=4,
+                    seed=0)
+    defaults.update(kw)
+    return ContinuousBatchingEngine(params, cfg, EngineConfig(**defaults))
+
+
+def _mixed_requests(n, rng, max_new=6):
+    return [Request(rid=i,
+                    prompt=rng.integers(1, 256, int(rng.integers(3, 17))),
+                    max_new_tokens=max_new + int(rng.integers(0, 3)))
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("chunk", [0, 8], ids=["monolithic", "chunked"])
+def test_spec_engine_matches_lm_generate(model, chunk):
+    """Greedy speculative serving must emit exactly the target argmax chain
+    — the same tokens as the synchronous lm.generate oracle — in both
+    prefill modes, whatever the per-round acceptance pattern was."""
+    cfg, params = model
+    eng = _engine(cfg, params, prefill_chunk=chunk)
+    results, m = eng.run(_mixed_requests(6, np.random.default_rng(2)))
+    assert m.draft_tokens > 0
+    for r in results:
+        want = lm.generate(params, cfg, jnp.asarray(r.prompt[None]),
+                           steps=r.n_generated, max_len=48)
+        np.testing.assert_array_equal(
+            np.asarray(want)[0], np.concatenate([r.prompt, r.tokens]),
+            err_msg=f"rid {r.rid}")
+
+
+def test_spec_fixed_compiled_shapes(model):
+    """The spec-mode compile contract: two waves of mixed requests compile
+    exactly ONE fused spec_round (and no plain decode at all) — wired into
+    the PR 5 compile-count gate in CI."""
+    cfg, params = model
+    eng = _engine(cfg, params, prefill_buckets=(8, 16))
+    eng.run(_mixed_requests(5, np.random.default_rng(4)))
+    warm = eng.compiled_shapes()
+    eng.run(_mixed_requests(7, np.random.default_rng(5)))
+    after = eng.compiled_shapes()
+    assert after == warm, "recompilation after warmup"
+    assert after["spec_round"] == 1
+    assert after["decode"] == 0                       # replaced by the round
+    assert after["evict"] == 1
+    assert all(v <= 1 for k, v in after.items() if k.startswith("prefill_"))
+
+
+def test_spec_acceptance_telemetry(model):
+    """Self-draft on the one-period reduced target IS the target: greedy
+    acceptance must be ~1, and the per-request counters must reconcile with
+    the run totals."""
+    cfg, params = model
+    eng = _engine(cfg, params)
+    results, m = eng.run(_mixed_requests(6, np.random.default_rng(6)))
+    assert m.draft_tokens > 0
+    assert m.spec_acceptance >= 0.9
+    assert m.accepted_tokens + m.wasted_tokens == m.draft_tokens
+    assert sum(r.n_drafted for r in results) == m.draft_tokens
+    assert sum(r.n_accepted for r in results) == m.accepted_tokens
+    snap = eng.poll_metrics()
+    assert snap.draft_tokens == m.draft_tokens
+    assert snap.spec_acceptance == pytest.approx(m.spec_acceptance)
+
+
+def test_spec_sampling_deterministic(model):
+    """Stochastic spec serving is a function of (seed, rid, position): two
+    fresh engines produce identical outputs, and the draft PRNG stream must
+    not alias the rejection stream."""
+    cfg, params = model
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, 256, 7) for _ in range(4)]
+
+    def run():
+        eng = _engine(cfg, params)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=5, temperature=0.8)
+                for i, p in enumerate(prompts)]
+        results, _ = eng.run(reqs)
+        return [r.tokens.tolist() for r in results]
+
+    assert run() == run()
+
+
+def test_spec_free_slots_stay_phantom(model):
+    """Validity-mask regression: one live request on a 4-slot spec engine
+    must produce the exact same tokens AND the exact same per-phase overflow
+    telemetry as a 1-slot engine — the three free rows route to the FFF
+    sentinel leaf, outside capacity and outside the counters."""
+    cfg, params = model
+
+    def run(slots):
+        eng = _engine(cfg, params, num_slots=slots, scheduler="leaf_aware",
+                      fff_backend="grouped")
+        rng = np.random.default_rng(8)
+        reqs = [Request(rid=0, prompt=rng.integers(1, 256, 9),
+                        max_new_tokens=6)]
+        results, m = eng.run(reqs)
+        return results[0], m, {k: tuple(v) for k, v in eng._overflow.items()}
+
+    r4, m4, ovf4 = run(4)                             # 1 live row, 3 free
+    r1, m1, ovf1 = run(1)                             # no free rows at all
+    np.testing.assert_array_equal(r4.tokens, r1.tokens)
+    assert ovf4 == ovf1
+    assert m4.overflow_decode_mean == 0.0
+    want = lm.generate(params, cfg, jnp.asarray(r4.prompt[None]),
+                       steps=r4.n_generated, max_len=48)
+    np.testing.assert_array_equal(np.asarray(want)[0],
+                                  np.concatenate([r4.prompt, r4.tokens]))
+
+
+def test_spec_config_validation(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="spec_k"):
+        _engine(cfg, params, spec_k=-1)
+    with pytest.raises(ValueError, match="draft_config"):
+        _engine(cfg, params, spec_k=0, draft_config="self")
+    bad_cfg = registry.get_config("internlm2-20b", ffn="fff").reduced(
+        vocab=128)
+    bad = lm.init(jax.random.PRNGKey(0), bad_cfg)
+    with pytest.raises(ValueError, match="vocab"):
+        ContinuousBatchingEngine(params, cfg, EngineConfig(
+            num_slots=4, max_len=48, max_prompt_len=16, spec_k=2, seed=0),
+            draft=(bad, bad_cfg))
+
+
+def test_spec_draft_histograms_feed_scheduler_occupancy(model):
+    """The FFF co-scheduling hook: draft rollouts must land leaf histograms
+    in the engine's occupancy EWMA (phase "draft"), marked unmeasured so
+    they never promote into persistent tenant profiles."""
+    cfg, params = model
+    eng = _engine(cfg, params)
+    eng.run(_mixed_requests(3, np.random.default_rng(9)))
+    assert eng._overflow["draft"][1] > 0               # draft phase recorded
+    assert eng.overflow_mean("draft") >= 0.0
+    # decode-phase telemetry (the scheduler's feedback signal) must not be
+    # polluted by draft-model dispatches
+    assert eng._overflow["decode"][1] > 0
+
+
+# ---------------------------------------------------------------------------
+# subprocess tier: spec e2e under the expert-parallel mesh
+# ---------------------------------------------------------------------------
+
+def test_spec_e2e_model_parallel_grouped_ep():
+    """serve --engine continuous --spec-k 4 --model-parallel 4
+    --fff-backend grouped_ep: the fused spec round traces under the
+    (data, model) mesh; the self-draft keeps acceptance at ~1."""
+    code = textwrap.dedent("""
+        import sys
+        sys.argv = ["serve", "--arch", "internlm2-20b", "--reduced",
+                    "--engine", "continuous", "--scheduler", "leaf_aware",
+                    "--batch", "4", "--requests", "6", "--prompt-len", "16",
+                    "--gen", "4", "--fff-backend", "grouped_ep",
+                    "--model-parallel", "4", "--spec-k", "4"]
+        from repro.launch import serve
+        serve.main()
+    """)
+    out = run_with_fake_devices(code)
+    assert "speculative" in out
+    assert "served 6 requests" in out
+    assert "acceptance" in out
