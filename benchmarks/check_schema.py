@@ -22,6 +22,9 @@ METRICS_KEYS = {
     "ttft_ms", "per_token_ms", "e2e_ms", "decode_step_ms",
     "decode_interval_ms", "overflow_fraction_mean", "overflow_decode_mean",
     "hint_mismatches", "tenants",
+    # paged KV cache / prefix sharing (DESIGN.md §11)
+    "prefill_tokens", "prefix_hit_tokens", "cow_copies", "pages_in_use",
+    "pages_free",
 }
 SUMMARY_KEYS = {"n", "mean_ms", "p50_ms", "p90_ms", "p99_ms", "max_ms"}
 
@@ -37,6 +40,10 @@ SCHEMAS = {
     "serving_spec": ({"bench", "quick", "slots", "depth", "gen", "spec_k",
                       "classes", "speedup", "speedup_gate", "speedup_ok",
                       "overflow_ok", "runs"}, "runs"),
+    "serving_paged": ({"bench", "quick", "slots", "page_size", "shared_len",
+                       "gen", "prefill_ratio", "prefill_gate", "prefill_ok",
+                       "ttft_ok", "parity_checked", "compile_ok",
+                       "compiled_shapes", "runs"}, "runs"),
 }
 
 

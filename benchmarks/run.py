@@ -23,6 +23,10 @@
              consistent deep target: tokens/s speedup gate, acceptance,
              verify-slab overflow vs baseline
              (DESIGN.md §10; writes BENCH_serving_spec.json)
+  serving_paged -> paged KV cache + cross-request prefix sharing vs the
+             contiguous cache on a shared-system-prompt workload:
+             prefill-token ratio gate, TTFT, exact parity, compile contract
+             (DESIGN.md §11; writes BENCH_serving_paged.json)
 
 ``python -m benchmarks.run`` runs the quick profile (CPU-sized, ~minutes);
 ``python -m benchmarks.run --full`` runs the paper-scale grids.
@@ -42,12 +46,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,fig2,table2,fig34,"
                          "table3,roofline,ep_dispatch,serving,"
-                         "serving_chunked,serving_qos,serving_spec")
+                         "serving_chunked,serving_qos,serving_spec,"
+                         "serving_paged")
     args = ap.parse_args()
 
     from benchmarks import (ep_dispatch, fig2, fig34, roofline_bench,
-                            serving_chunked, serving_load, serving_qos,
-                            serving_spec, table1, table2, table3)
+                            serving_chunked, serving_load, serving_paged,
+                            serving_qos, serving_spec, table1, table2,
+                            table3)
     suites = {
         "table1": table1.main,
         "fig2": fig2.main,
@@ -60,6 +66,7 @@ def main() -> None:
         "serving_chunked": serving_chunked.main,
         "serving_qos": serving_qos.main,
         "serving_spec": serving_spec.main,
+        "serving_paged": serving_paged.main,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     failures = []

@@ -1,0 +1,169 @@
+"""Paged-KV / prefix-sharing benchmark: page-pool cache with cross-request
+prefix sharing vs the contiguous per-slot cache (DESIGN.md §11).
+
+Workload: the shared-system-prompt pattern paging exists for — every
+request opens with the same ``SHARED_LEN``-token system prompt and adds a
+short unique suffix.  Under the contiguous cache each admission re-prefills
+the whole prompt; under paging the first admission publishes the system
+prompt's pages into the prefix index and every later admission maps them
+(refcounted, copy-on-write past the shared boundary) and prefills only its
+suffix.
+
+Rows (same model, same requests, same seed):
+  * contiguous — ``page_size=0``: the degenerate one-page-per-slot layout,
+    numerically the PR 2 slot-pooled cache
+  * paged      — ``page_size=PAGE``: pool + page tables + prefix index
+
+Gates (printed + recorded in the artifact):
+  * paged prefills >= ``PREFILL_GATE``x fewer tokens than contiguous
+    (``prefill_tokens`` telemetry; the compute the prefix index avoids)
+  * paged mean TTFT < contiguous mean TTFT (less prefill work before the
+    first token, measured compile-free via a warmup run)
+  * parity — greedy paged-engine output must equal ``lm.generate`` exactly
+    for every request (sharing pages must not change a single token)
+  * compile contract — decode 1 / admit 1 / <= 1 shape per prefill bucket
+    after the timed run (paging adds no retracing)
+
+Emits CSV rows
+``serving_paged,<name>,<page>,<prefill_tokens>,<prefix_hit_tokens>,
+<ttft_mean_ms>,<tok_s>`` and writes
+``experiments/BENCH_serving_paged.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ARTIFACT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "BENCH_serving_paged.json")
+
+PAGE = 16           # tokens per page in the paged row
+SHARED_LEN = 48     # shared system prompt (3 full pages)
+SUFFIX_MAX = 8      # unique per-request tail: 1..SUFFIX_MAX tokens
+GEN = 8             # short generations: the bench is prefill-bound
+PREFILL_GATE = 5.0  # paged must prefill >= this factor fewer tokens
+
+
+def make_workload(cfg, n_requests: int, seed: int):
+    """Shared-system-prompt requests: SHARED_LEN common tokens + a unique
+    1..SUFFIX_MAX-token suffix each."""
+    import numpy as np
+
+    from repro.data import tokens as tokens_lib
+    from repro.serving import Request
+
+    src = tokens_lib.MarkovTokenSource(cfg.vocab_size, seed=seed)
+    system = src.sample(1, SHARED_LEN, seed=seed)[0, :SHARED_LEN]
+    rng = np.random.default_rng(seed + 1)
+    reqs = []
+    for i in range(n_requests):
+        s = int(rng.integers(1, SUFFIX_MAX + 1))
+        suffix = src.sample(1, s, seed=seed + 10 + i)[0, :s]
+        reqs.append(Request(rid=i,
+                            prompt=np.concatenate([system, suffix]),
+                            max_new_tokens=GEN))
+    return reqs
+
+
+def run_one(params, cfg, *, slots: int, reqs, seed: int, page_size: int,
+            warmup_reqs=None):
+    from repro.serving import ContinuousBatchingEngine, EngineConfig
+    max_prompt = SHARED_LEN + SUFFIX_MAX
+    ecfg = EngineConfig(
+        num_slots=slots, max_len=max_prompt + GEN + 1,
+        max_prompt_len=max_prompt, page_size=page_size, seed=seed)
+    engine = ContinuousBatchingEngine(params, cfg, ecfg)
+    if warmup_reqs:
+        # burn every compile (and, for the paged row, seed the prefix index
+        # with the system prompt) outside the timed run: the TTFT gate
+        # compares steady-state admission, not XLA
+        engine.run(warmup_reqs)
+    _, m = engine.run(reqs)
+    return engine, m
+
+
+def check_parity(params, cfg, results) -> int:
+    """Greedy paged-engine output vs the synchronous ``lm.generate`` path —
+    exact, token for token.  Returns requests checked."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import lm
+    max_len = SHARED_LEN + SUFFIX_MAX + GEN + 1
+    for r in results:
+        want = lm.generate(params, cfg, jnp.asarray(r.prompt[None]),
+                           steps=r.n_generated, max_len=max_len)
+        np.testing.assert_array_equal(
+            np.asarray(want)[0], np.concatenate([r.prompt, r.tokens]),
+            err_msg=f"rid {r.rid}")
+    return len(results)
+
+
+def main(quick: bool = True) -> None:
+    import jax
+
+    from repro.configs import registry
+    from repro.models import lm
+
+    seed = 0
+    slots = 8 if quick else 16
+    n_requests = 2 * slots
+    cfg = registry.get_config("internlm2-20b", ffn="fff").reduced(
+        seq=SHARED_LEN + SUFFIX_MAX + GEN + 1)
+    params = lm.init(jax.random.PRNGKey(seed), cfg)
+
+    print("# name,page,prefill_tokens,prefix_hit_tokens,ttft_mean_ms,tok_s")
+    reqs = make_workload(cfg, n_requests, seed + 1)
+    warm = make_workload(cfg, slots, seed + 2)
+    runs = {}
+    engines = {}
+    for name, page in [("contiguous", 0), ("paged", PAGE)]:
+        engine, m = run_one(params, cfg, slots=slots, reqs=list(reqs),
+                            seed=seed, page_size=page, warmup_reqs=warm)
+        print(f"serving_paged,{name},{page},{m.prefill_tokens},"
+              f"{m.prefix_hit_tokens},{m.ttft.mean_ms:.2f},"
+              f"{m.throughput_tok_s:.1f}", flush=True)
+        runs[name] = {"page_size": page, "slots": slots,
+                      "n_requests": n_requests, **m.as_dict()}
+        engines[name] = engine
+
+    base, paged = runs["contiguous"], runs["paged"]
+    prefill_ratio = base["prefill_tokens"] / max(paged["prefill_tokens"], 1)
+    prefill_ok = prefill_ratio >= PREFILL_GATE
+    ttft_ok = (paged["ttft_ms"]["mean_ms"] < base["ttft_ms"]["mean_ms"])
+    print(f"# prefill tokens {base['prefill_tokens']} -> "
+          f"{paged['prefill_tokens']} = {prefill_ratio:.1f}x fewer "
+          f"({'PASS' if prefill_ok else 'FAIL'} vs {PREFILL_GATE}x gate)")
+    print(f"# ttft mean {base['ttft_ms']['mean_ms']:.2f}ms -> "
+          f"{paged['ttft_ms']['mean_ms']:.2f}ms "
+          f"({'PASS' if ttft_ok else 'FAIL'}: paged must improve)")
+
+    # parity: sharing pages must not change one token of one request
+    results, _ = engines["paged"].run(make_workload(cfg, slots, seed + 3))
+    n_parity = check_parity(params, cfg, results)
+    print(f"# parity: {n_parity} paged requests match lm.generate exactly")
+
+    shapes = engines["paged"].compiled_shapes()
+    compile_ok = (shapes["decode"] == 1 and shapes["admit"] == 1 and all(
+        v <= 1 for k, v in shapes.items() if k.startswith("prefill_")))
+    print(f"# compiled shapes {shapes} -> "
+          f"{'PASS' if compile_ok else 'FAIL'} (decode 1 / admit 1 / <=1 "
+          f"per bucket)")
+
+    with open(ARTIFACT, "w") as f:
+        json.dump({"bench": "serving_paged", "quick": quick, "slots": slots,
+                   "page_size": PAGE, "shared_len": SHARED_LEN, "gen": GEN,
+                   "prefill_ratio": prefill_ratio,
+                   "prefill_gate": PREFILL_GATE, "prefill_ok": prefill_ok,
+                   "ttft_ok": ttft_ok, "parity_checked": n_parity,
+                   "compile_ok": compile_ok, "compiled_shapes": shapes,
+                   "runs": runs}, f, indent=1)
+    print(f"# wrote {ARTIFACT}")
+    if not (prefill_ok and ttft_ok and compile_ok):
+        raise AssertionError(
+            f"serving_paged gates failed: prefill_ok={prefill_ok} "
+            f"ttft_ok={ttft_ok} compile_ok={compile_ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,8 +10,7 @@ from repro.core import api, ff, fff, moe, regions, routing
 from repro.core.api import (ExecutionSpec, FFFOutput, apply, get_backend,
                             list_backends, register_backend, use_backend)
 from repro.core.fff import (FFFConfig, bernoulli_entropy, decisive_fraction,
-                            forward_hard, forward_train, hardening_loss,
-                            mixture_weights, route_hard)
+                            hardening_loss, mixture_weights, route_hard)
 
 __all__ = [
     "api", "ff", "fff", "moe", "regions", "routing",
@@ -22,6 +21,4 @@ __all__ = [
     "FFFConfig", "route_hard",
     "mixture_weights", "hardening_loss", "bernoulli_entropy",
     "decisive_fraction",
-    # deprecated shims (kept importable for one release)
-    "forward_train", "forward_hard",
 ]

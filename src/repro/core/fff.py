@@ -26,8 +26,6 @@ The single entry point for both is :func:`repro.core.api.apply`::
 for the registry contract and DESIGN.md §2 for the layering.  This module
 holds the layer math itself — config, init, node/leaf forward primitives —
 plus the pure-jnp reference/grouped implementations the registry wraps.
-``forward_train`` / ``forward_hard`` / ``forward_hard_grouped`` remain as
-deprecated shims over ``apply()``.
 
 Node/leaf numbering follows the paper: the children of node ``N[m, k]`` are
 ``N[m+1, 2k]`` (left, taken with weight ``1 - c``) and ``N[m+1, 2k+1]``
@@ -46,7 +44,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from functools import partial
 from typing import Any, Optional
 
@@ -586,51 +583,6 @@ def _forward_hard_gather(params: Params, cfg: FFFConfig, x: jax.Array,
     y = _leaf_forward_gather(params, cfg, xf, leaf_idx).sum(axis=1)
     return utils.unflatten_leading(y, lead), {"leaf_idx":
                                               leaf_idx.reshape(*lead, cfg.trees)}
-
-
-# ---------------------------------------------------------------------------
-# deprecated entry points — thin shims over repro.core.api.apply()
-# ---------------------------------------------------------------------------
-
-def _warn_deprecated(old: str, spec: str) -> None:
-    warnings.warn(
-        f"fff.{old}() is deprecated; call repro.core.api.apply(params, cfg, x,"
-        f" ExecutionSpec({spec})) instead", DeprecationWarning, stacklevel=3)
-
-
-def forward_train(params: Params, cfg: FFFConfig, x: jax.Array,
-                  rng: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
-    """Deprecated: use ``api.apply(..., ExecutionSpec(mode="train"))``."""
-    from repro.core import api  # shim-only: api is the layer above this one
-    _warn_deprecated("forward_train", 'mode="train"')
-    y, out = api.apply(params, cfg, x,
-                       api.ExecutionSpec(mode="train", rng=rng))
-    return y, out.as_dict()
-
-
-def forward_hard(params: Params, cfg: FFFConfig, x: jax.Array
-                 ) -> tuple[jax.Array, dict]:
-    """Deprecated: use ``api.apply(..., ExecutionSpec(mode="infer",
-    backend="reference"))``."""
-    from repro.core import api  # shim-only: api is the layer above this one
-    _warn_deprecated("forward_hard", 'mode="infer", backend="reference"')
-    y, out = api.apply(params, cfg, x,
-                       api.ExecutionSpec(mode="infer", backend="reference"))
-    return y, out.as_dict()
-
-
-def forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
-                         capacity_factor: float = 2.0
-                         ) -> tuple[jax.Array, dict]:
-    """Deprecated: use ``api.apply(..., ExecutionSpec(mode="infer",
-    backend="grouped"))``."""
-    from repro.core import api  # shim-only: api is the layer above this one
-    _warn_deprecated("forward_hard_grouped",
-                     'mode="infer", backend="grouped"')
-    y, out = api.apply(params, cfg, x,
-                       api.ExecutionSpec(mode="infer", backend="grouped",
-                                         capacity_factor=capacity_factor))
-    return y, out.as_dict()
 
 
 # ---------------------------------------------------------------------------

@@ -217,19 +217,23 @@ def cache_specs(caches: PyTree, mesh: Mesh, batch: int, *,
         path = path_of(kp)
         is_kv = ("kv/" in path) or path.endswith(("/k", "/v")) \
             or ("cross_" in path)
-        if is_kv and nd == 5:                       # (n_periods, B, S, K, hd)
-            # the model axis carries KV heads when they divide it (olmoe's
-            # MHA), otherwise the SEQUENCE dim (context parallelism): decode
-            # softmax over a sharded S lowers to tiny (B,K,G) stat psums and
-            # the cache never replicates across the model axis — replication
-            # both OOMs and wastes cache bandwidth (§Perf iter 2).
+        if is_kv and nd == 5:            # (n_periods, num_pages, page, K, hd)
+            # the paged pool's page axis plays the role the batch axis used
+            # to: pages are independent, so the data axes shard dim 1 when
+            # the page count divides them (the degenerate page_size=max_len
+            # pool is exactly the old per-slot layout, num_pages == B).  The
+            # model axis carries KV heads when they divide it (olmoe's MHA),
+            # otherwise the within-page sequence dim (context parallelism):
+            # decode softmax over a sharded S lowers to tiny (B,K,G) stat
+            # psums and the cache never replicates across the model axis —
+            # replication both OOMs and wastes cache bandwidth (§Perf iter 2).
             m_k = m_s = None
             if "model" in mesh.axis_names:
                 if shape[3] % model_size == 0 and shape[3] >= model_size:
                     m_k = "model"
                 elif shape[2] % model_size == 0 and shape[2] >= model_size:
                     m_s = "model"
-            if batch % fsdp_size == 0 and batch >= fsdp_size:
+            if shape[1] % fsdp_size == 0 and shape[1] >= fsdp_size:
                 return P(None, dp, m_s, m_k, None)
             if seq_shard_below_batch and shape[2] % fsdp_size == 0 \
                     and shape[2] >= fsdp_size:

@@ -13,9 +13,13 @@ one monolithic prefill between decode steps (stall-free admission; tune with
 speculative decoding: a draft model (``--draft-config``, default the
 target's own first period) proposes K tokens per slot per round and the
 target verifies them in one slab dispatch, multiplying decode throughput by
-the acceptance-weighted emission rate (DESIGN.md §10).  ``--engine off``
-keeps the original synchronous batched prefill + decode demo loop.
-Operator guide: docs/serving.md.
+the acceptance-weighted emission rate (DESIGN.md §10).  ``--page-size N``
+switches the KV cache from contiguous per-slot rows to a paged pool with
+cross-request prefix sharing — admissions whose prompts share a leading
+prefix map the same pages and only prefill their novel suffix (DESIGN.md
+§11); ``--shared-prefix M`` synthesizes the matching shared-system-prompt
+workload.  ``--engine off`` keeps the original synchronous batched
+prefill + decode demo loop.  Operator guide: docs/serving.md.
 
 Both paths report p50/p90/p99 latency and tokens/s through
 ``repro.serving.metrics`` and steer every FFF site's execution strategy with
@@ -107,6 +111,18 @@ def build_parser() -> argparse.ArgumentParser:
                          "(early-exit self-draft, shares weights; default "
                          "'self'), or a registry arch id for an independent "
                          "reduced draft (random init)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="engine: >0 = paged KV cache — the cache becomes a "
+                         "page pool of this many tokens per page with per-"
+                         "slot page tables, and admissions sharing a prompt "
+                         "prefix map the same pages instead of re-prefilling "
+                         "them (DESIGN.md §11; 0 = contiguous per-slot "
+                         "cache, the degenerate one-page-per-slot layout)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="workload: >0 = every synthetic request starts with "
+                         "the same this-many-token system prompt (the cross-"
+                         "request prefix-sharing workload; 0 = fully "
+                         "independent prompts)")
     ap.add_argument("--metrics-json", default="",
                     help="engine: write the run's EngineMetrics (+ compiled-"
                          "shape counts) as JSON to this path — the "
@@ -146,7 +162,7 @@ def _setup(args):
         from repro.distributed import sharding
         params = sharding.shard_params(params, mesh, fsdp=False)
         print(f"mesh: {dict(mesh.shape)} (expert-parallel serving)")
-    return cfg, params, mesh_ctx
+    return cfg, params, mesh, mesh_ctx
 
 
 def parse_tenant_weights(spec: str) -> dict:
@@ -176,7 +192,7 @@ def parse_tenant_weights(spec: str) -> dict:
 
 
 def run_engine(args) -> None:
-    cfg, params, mesh_ctx = _setup(args)
+    cfg, params, mesh, mesh_ctx = _setup(args)
     eos = args.eos_id if args.eos_id >= 0 else None
     weights = parse_tenant_weights(args.tenant_weights)
     sched_kw = ({"max_prefilling": args.max_prefilling}
@@ -201,19 +217,31 @@ def run_engine(args) -> None:
         fff_backend=args.fff_backend,
         spec_k=args.spec_k,
         draft_config=args.draft_config or None,
+        page_size=args.page_size,
         seed=args.seed)
-    engine = ContinuousBatchingEngine(params, cfg, ecfg, trace_ctx=mesh_ctx)
+    engine = ContinuousBatchingEngine(params, cfg, ecfg, trace_ctx=mesh_ctx,
+                                      mesh=mesh)
 
     n = args.requests or 2 * args.batch
     src = tokens_lib.MarkovTokenSource(cfg.vocab_size, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     tenants = sorted(weights) or ["default"]
+    if args.shared_prefix >= args.prompt_len:
+        raise ValueError(f"--shared-prefix ({args.shared_prefix}) must be "
+                         f"< --prompt-len ({args.prompt_len}): every request "
+                         f"needs at least one token of its own")
+    sp = max(args.shared_prefix, 0)
+    system = src.sample(1, sp, seed=args.seed)[0, :sp] if sp else None
     reqs = []
     for i in range(n):
         # mixed lengths: the engine's reason to exist
-        lo = min(max(4, args.prompt_len // 4), args.prompt_len)
+        lo = min(max(sp + 1, 4, args.prompt_len // 4), args.prompt_len)
         L = int(rng.integers(lo, args.prompt_len + 1))
         prompt = src.sample(1, L, seed=args.seed + 1 + i)[0, :L]
+        if system is not None:
+            # shared-system-prompt workload: identical leading tokens, so a
+            # paged engine prefills the prefix once and shares the pages
+            prompt = np.concatenate([system, prompt[sp:]])
         reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=args.gen,
                             eos_id=eos, tenant=tenants[i % len(tenants)]))
     mode = (f"chunked prefill (chunk={args.prefill_chunk}, "
@@ -222,10 +250,13 @@ def run_engine(args) -> None:
     qos = (f", tenants={{{args.tenant_weights}}}" if weights else "")
     spec = (f", speculative (k={args.spec_k}, "
             f"draft={args.draft_config or 'self'})" if args.spec_k else "")
+    paged = (f", paged kv (page={args.page_size})" if args.page_size else "")
+    shared = f", shared prefix {sp} tokens" if sp else ""
     print(f"engine: {args.batch} slots, {n} requests, prompt lens "
           f"{min(len(r.prompt) for r in reqs)}-"
           f"{max(len(r.prompt) for r in reqs)}, scheduler={args.scheduler}"
-          f"{qos}, {mode}{spec}, fff backend={args.fff_backend} requested")
+          f"{qos}, {mode}{spec}{paged}{shared}, "
+          f"fff backend={args.fff_backend} requested")
     _, m = engine.run(reqs)
     print(m.report())
     print(f"compiled shapes: {engine.compiled_shapes()}")
@@ -243,7 +274,7 @@ def run_engine(args) -> None:
 
 
 def run_legacy(args) -> None:
-    cfg, params, mesh_ctx = _setup(args)
+    cfg, params, _mesh, mesh_ctx = _setup(args)
     src = tokens_lib.MarkovTokenSource(cfg.vocab_size, seed=args.seed)
     prompt = jnp.asarray(src.sample(args.batch, args.prompt_len, seed=1)
                          [:, :args.prompt_len])

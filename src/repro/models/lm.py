@@ -123,10 +123,12 @@ def loss_fn(params: Params, cfg: ModelConfig, batch: dict,
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int,
-                dtype=None) -> list[dict]:
+                dtype=None, *, page_size: int = 0, num_pages: int = 0,
+                prealloc: bool = True) -> list[dict]:
     enc_len = cfg.encoder.seq_len if cfg.encoder is not None else 0
     return transformer.init_caches(cfg, batch, max_len, enc_len=enc_len,
-                                   dtype=dtype)
+                                   dtype=dtype, page_size=page_size,
+                                   num_pages=num_pages, prealloc=prealloc)
 
 
 def prefill(params: Params, cfg: ModelConfig, batch: dict,
@@ -204,7 +206,7 @@ def decode_step(params: Params, cfg: ModelConfig, token: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# slot-indexed cache surgery (continuous-batching serving, DESIGN.md §9)
+# paged-cache surgery (continuous-batching serving, DESIGN.md §9/§11)
 # ---------------------------------------------------------------------------
 
 def set_cache_lengths(caches: list[dict], lengths: jax.Array) -> list[dict]:
@@ -221,62 +223,41 @@ def set_cache_lengths(caches: list[dict], lengths: jax.Array) -> list[dict]:
     return out
 
 
-def cache_insert(big: list[dict], small: list[dict], slot: jax.Array
-                 ) -> list[dict]:
-    """Insert a 1-row cache tree into row ``slot`` of a pooled cache tree.
+def cache_admit(caches: list[dict], admit: jax.Array, tables: jax.Array,
+                lengths: jax.Array, cow_src: jax.Array, cow_dst: jax.Array
+                ) -> list[dict]:
+    """Install admitted rows' page tables in ONE batched dispatch
+    (DESIGN.md §11).
 
-    Every cache leaf is (n_periods, B, ...); ``small`` carries B = 1 with the
-    same trailing shape (same max_len), so the insert is one dynamic update
-    per leaf at batch index ``slot`` (traced — one compiled shape serves all
-    slots)."""
-    def ins(b, s):
-        start = (jnp.zeros((), jnp.int32), jnp.asarray(slot, jnp.int32)
-                 ) + (jnp.zeros((), jnp.int32),) * (b.ndim - 2)
-        return jax.lax.dynamic_update_slice(b, s.astype(b.dtype), start)
-    return jax.tree_util.tree_map(ins, big, small)
+    ``admit`` (B,) bool marks rows being (re)admitted this step; their page
+    tables are overwritten with ``tables`` (B, ppr) and their cache lengths
+    with ``lengths`` (B,) — the shared-prefix boundary, so prefill resumes
+    at the first novel token.  ``cow_src``/``cow_dst`` (B,) are page ids
+    for the copy-on-write case (a prompt fully covered by shared pages must
+    recompute its last token for first-token logits): the source page's K/V
+    are copied into the row's private ``cow_dst`` page before the table
+    swap.  Rows without a copy pass the ``num_pages`` sentinel as
+    ``cow_dst`` (the scatter drops it).
 
-
-def cache_evict_rows(caches: list[dict], evict: jax.Array) -> list[dict]:
-    """Free every cache row where ``evict`` (B,) bool is True, in ONE pass:
-    zero their attention lengths (stale K/V rows are masked by length and
-    overwritten on re-admission) and zero any recurrent / cross-attention
-    state.  The engine evicts a whole step's finished slots with a single
-    dispatch instead of one cache-threading call per slot."""
-    def zero_rows(leaf):
-        m = evict.reshape((1, -1) + (1,) * (leaf.ndim - 2))
-        return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
-
+    Eviction needs no dispatch at all: freeing pages is host-side refcount
+    bookkeeping, and a freed row's stale device table is harmless because
+    every decode/chunk write is masked to live rows."""
     out = []
     for c in caches:
-        nc = {}
-        for k, v in c.items():
-            if k == "kv":
-                nc[k] = v._replace(length=jnp.where(evict[None, :], 0,
-                                                    v.length))
-            else:
-                nc[k] = jax.tree_util.tree_map(zero_rows, v)
-        out.append(nc)
+        c = dict(c)
+        kv = c["kv"]                       # leaves stacked (n_periods, ...)
+        num_pages = kv.k.shape[1]
+        src = jnp.minimum(cow_src, num_pages - 1)
+        new_k = kv.k.at[:, cow_dst].set(kv.k[:, src], mode="drop")
+        new_v = kv.v.at[:, cow_dst].set(kv.v[:, src], mode="drop")
+        new_table = jnp.where(admit[None, :, None],
+                              tables[None].astype(kv.table.dtype), kv.table)
+        new_len = jnp.where(admit[None, :],
+                            lengths[None].astype(kv.length.dtype), kv.length)
+        c["kv"] = kv._replace(k=new_k, v=new_v, table=new_table,
+                              length=new_len)
+        out.append(c)
     return out
-
-
-def cache_evict(caches: list[dict], slot: jax.Array) -> list[dict]:
-    """Free cache row ``slot`` (the single-row view of ``cache_evict_rows``)."""
-    n = jax.tree_util.tree_leaves(caches)[0].shape[1]
-    return cache_evict_rows(caches, jnp.arange(n) == slot)
-
-
-def prefill_slot(params: Params, cfg: ModelConfig, tokens: jax.Array,
-                 true_len: jax.Array, caches: list[dict], max_len: int,
-                 slot: jax.Array) -> tuple[jax.Array, list[dict], Any]:
-    """Admit one request into pooled caches: prefill the right-padded prompt
-    ``tokens`` (1, S_pad) with real length ``true_len`` into a fresh 1-row
-    cache, then insert it at row ``slot``.  Returns (next-token logits (V,),
-    updated pooled caches, routing stats)."""
-    small = init_caches(cfg, 1, max_len)
-    logits, small, stats = prefill_padded(
-        params, cfg, {"tokens": tokens}, small,
-        jnp.reshape(jnp.asarray(true_len, jnp.int32), (1,)))
-    return logits[0], cache_insert(caches, small, slot), stats
 
 
 def prefill_chunk(params: Params, cfg: ModelConfig, tokens: jax.Array,
@@ -340,15 +321,20 @@ def verify_chunk(params: Params, cfg: ModelConfig, tokens: jax.Array,
 def generate(params: Params, cfg: ModelConfig, prompt: jax.Array,
              steps: int, max_len: int, rng: Optional[jax.Array] = None,
              temperature: float = 0.0,
-             eos_id: Optional[int] = None) -> jax.Array:
+             eos_id: Optional[int] = None, caches=None) -> jax.Array:
     """Greedy/temperature sampling loop (host-driven example path).
 
     With ``eos_id`` set, rows that emit it stop: their subsequent tokens are
     pinned to ``eos_id`` (pad), and the loop exits once every row has
     finished — so the result may have fewer than ``steps`` generated columns.
+    ``caches`` substitutes a caller-built cache set (e.g. a preallocated
+    *paged* one from ``init_caches(..., page_size=N)``) for the default
+    contiguous allocation; it must be fresh (zero lengths) and sized
+    ``(B, max_len)``.
     """
     B = prompt.shape[0]
-    caches = init_caches(cfg, B, max_len)
+    if caches is None:
+        caches = init_caches(cfg, B, max_len)
     logits, caches = prefill(params, cfg, {"tokens": prompt}, caches)
     out = [prompt]
     tok = logits.argmax(-1)[:, None].astype(jnp.int32)

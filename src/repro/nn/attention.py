@@ -232,25 +232,72 @@ def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 class KVCache(NamedTuple):
-    k: jax.Array          # (B, S_max, K, hd)
-    v: jax.Array          # (B, S_max, K, hd)
+    """Paged KV cache: a fixed page pool indexed through per-row page tables.
+
+    ``k``/``v`` are pools of ``num_pages`` fixed-size pages shared by all
+    rows; row b's logical positions ``p`` live at
+    ``pool[table[b, p // page_size], p % page_size]``.  Unmapped table
+    entries hold the sentinel ``num_pages`` — writes through them are
+    dropped and reads clamp to an arbitrary page whose values are masked
+    out by the ``length`` check.  Two rows may map the same page (shared
+    prompt prefix, DESIGN.md §11); the host-side allocator guarantees a
+    shared page is never written.
+
+    The contiguous cache of earlier revisions is the degenerate case
+    ``page_size == max_len`` with an identity table (row b owns page b) —
+    ``init_cache``'s default — and is bit-for-bit unchanged.
+    """
+    k: jax.Array          # (num_pages, page_size, K, hd) page pool
+    v: jax.Array          # (num_pages, page_size, K, hd)
+    table: jax.Array      # (B, pages_per_row) int32 page ids
     length: jax.Array     # (B,) int32 filled positions
 
 
-def init_cache(batch: int, max_len: int, cfg: AttnConfig,
-               dtype=None) -> KVCache:
+def init_cache(batch: int, max_len: int, cfg: AttnConfig, dtype=None, *,
+               page_size: int = 0, num_pages: int = 0,
+               prealloc: bool = True) -> KVCache:
+    """``page_size <= 0`` selects the degenerate contiguous layout (one
+    ``max_len``-sized page per row).  ``prealloc`` maps row b to pages
+    ``[b*ppr, (b+1)*ppr)`` identity-style — standalone callers (generate,
+    tests) need a ready-to-write table; the serving engine passes
+    ``prealloc=False`` and installs allocator-managed tables per admission."""
     dtype = dtype or cfg.param_dtype
-    shp = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
-    return KVCache(jnp.zeros(shp, dtype), jnp.zeros(shp, dtype),
+    if page_size <= 0:
+        page_size = max_len
+    ppr = utils.cdiv(max_len, page_size)                 # pages per row
+    if num_pages <= 0:
+        num_pages = batch * ppr
+    if prealloc:
+        if num_pages < batch * ppr:
+            raise ValueError(f"prealloc needs {batch * ppr} pages, "
+                             f"pool has {num_pages}")
+        table = (jnp.arange(batch, dtype=jnp.int32)[:, None] * ppr
+                 + jnp.arange(ppr, dtype=jnp.int32)[None, :])
+    else:
+        table = jnp.full((batch, ppr), num_pages, jnp.int32)
+    shp = (num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shp, dtype), jnp.zeros(shp, dtype), table,
                    jnp.zeros((batch,), jnp.int32))
+
+
+def gather_cache_kv(cache: KVCache) -> tuple[jax.Array, jax.Array]:
+    """Materialize per-row K/V views (B, ppr*page, K, hd) from the pool.
+
+    Sentinel table entries clamp to the last page; the garbage they gather
+    is finite (pools are zero-initialized) and always masked by the
+    caller's ``pos < length`` check."""
+    num_pages, page = cache.k.shape[:2]
+    tbl = jnp.minimum(cache.table, num_pages - 1)
+    B, ppr = tbl.shape
+    shp = (B, ppr * page) + cache.k.shape[2:]
+    return cache.k[tbl].reshape(shp), cache.v[tbl].reshape(shp)
 
 
 def prefill_into_cache(cache: KVCache, k: jax.Array, v: jax.Array) -> KVCache:
     """Write a full prefix (B, S, K, hd) at position 0."""
     S = k.shape[1]
-    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, axis=1)
-    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, axis=1)
-    return KVCache(new_k, new_v, jnp.full_like(cache.length, S))
+    zeroed = cache._replace(length=jnp.zeros_like(cache.length))
+    return chunk_into_cache(zeroed, k, v, jnp.full_like(cache.length, S))
 
 
 def append_to_cache(cache: KVCache, k1: jax.Array, v1: jax.Array,
@@ -277,21 +324,29 @@ def chunk_into_cache(cache: KVCache, k: jax.Array, v: jax.Array,
     """Write a chunk (B, C, K, hd) at each row's current length (chunked
     prefill, DESIGN.md §9).
 
-    Row b's first ``valid_len[b]`` positions land at
-    ``length[b] .. length[b] + valid_len[b] - 1``; the rest of the chunk is
-    padding whose write indices are pushed out of bounds and dropped, so
-    rows with no prefill work this step (``valid_len == 0``) are untouched.
+    Row b's first ``valid_len[b]`` positions land at logical positions
+    ``length[b] .. length[b] + valid_len[b] - 1``, scattered through the
+    row's page table into the pool; the rest of the chunk is padding whose
+    page ids are pushed to the ``num_pages`` sentinel and dropped, so rows
+    with no prefill work this step (``valid_len == 0``) are untouched.
+    Positions past the row's mapped pages are likewise dropped (second
+    line of defense — unmapped table entries already hold the sentinel).
     ``length`` advances by ``valid_len``."""
     B, C = k.shape[:2]
-    S = cache.k.shape[1]
+    num_pages, page = cache.k.shape[:2]
+    ppr = cache.table.shape[1]
     col = jnp.arange(C)[None, :]                                  # (1, C)
-    idx = cache.length[:, None] + col                             # (B, C)
-    idx = jnp.where(col < valid_len[:, None], idx, S)  # pad/inactive: drop
-    bidx = jnp.arange(B)[:, None]
-    new_k = cache.k.at[bidx, idx].set(k.astype(cache.k.dtype), mode="drop")
-    new_v = cache.v.at[bidx, idx].set(v.astype(cache.v.dtype), mode="drop")
-    return KVCache(new_k, new_v,
-                   cache.length + valid_len.astype(cache.length.dtype))
+    pos = cache.length[:, None] + col                             # (B, C)
+    pg = pos // page                                              # (B, C)
+    pid = jnp.take_along_axis(cache.table, jnp.minimum(pg, ppr - 1), axis=1)
+    ok = (col < valid_len[:, None]) & (pg < ppr)
+    pid = jnp.where(ok, pid, num_pages)                # pad/inactive: drop
+    off = pos % page
+    new_k = cache.k.at[pid, off].set(k.astype(cache.k.dtype), mode="drop")
+    new_v = cache.v.at[pid, off].set(v.astype(cache.v.dtype), mode="drop")
+    return cache._replace(
+        k=new_k, v=new_v,
+        length=cache.length + valid_len.astype(cache.length.dtype))
 
 
 def decode_attend(q1: jax.Array, cache: KVCache, *, sliding_window: int = 0
@@ -307,9 +362,10 @@ def decode_attend(q1: jax.Array, cache: KVCache, *, sliding_window: int = 0
     B, _, H, hd = q1.shape
     K = cache.k.shape[2]
     G = H // K
-    S = cache.k.shape[1]
+    kc, vc = gather_cache_kv(cache)                    # (B, ppr*page, K, hd)
+    S = kc.shape[1]
     qg = q1.reshape(B, K, G, hd).astype(jnp.float32)
-    s = jnp.einsum("bkgd,bpkd->bkgp", qg, cache.k.astype(jnp.float32))
+    s = jnp.einsum("bkgd,bpkd->bkgp", qg, kc.astype(jnp.float32))
     s = s / math.sqrt(hd)
     pos = jnp.arange(S)[None, :]                                  # (1, S)
     valid = pos < cache.length[:, None]
@@ -317,7 +373,7 @@ def decode_attend(q1: jax.Array, cache: KVCache, *, sliding_window: int = 0
         valid &= pos >= (cache.length[:, None] - sliding_window)
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgp,bpkd->bkgd", p, cache.v.astype(jnp.float32))
+    o = jnp.einsum("bkgp,bpkd->bkgd", p, vc.astype(jnp.float32))
     return o.reshape(B, 1, H, hd).astype(q1.dtype)
 
 
@@ -335,9 +391,10 @@ def chunk_attend(q: jax.Array, cache: KVCache, start: jax.Array, *,
     B, C, H, hd = q.shape
     K = cache.k.shape[2]
     G = H // K
-    S = cache.k.shape[1]
+    kc, vc = gather_cache_kv(cache)                    # (B, ppr*page, K, hd)
+    S = kc.shape[1]
     qg = q.reshape(B, C, K, G, hd).astype(jnp.float32)
-    s = jnp.einsum("bckgd,bpkd->bkgcp", qg, cache.k.astype(jnp.float32))
+    s = jnp.einsum("bckgd,bpkd->bkgcp", qg, kc.astype(jnp.float32))
     s = s / math.sqrt(hd)
     qpos = start[:, None] + jnp.arange(C)[None, :]                # (B, C)
     kpos = jnp.arange(S)[None, None, :]                           # (1, 1, S)
@@ -346,7 +403,7 @@ def chunk_attend(q: jax.Array, cache: KVCache, start: jax.Array, *,
         valid &= kpos > qpos[:, :, None] - sliding_window
     s = jnp.where(valid[:, None, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgcp,bpkd->bckgd", p, cache.v.astype(jnp.float32))
+    o = jnp.einsum("bkgcp,bpkd->bckgd", p, vc.astype(jnp.float32))
     return o.reshape(B, C, H, hd).astype(q.dtype)
 
 

@@ -92,12 +92,16 @@ def block_init(key: jax.Array, cfg: ModelConfig, spec: BlockSpec, *,
 
 
 def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int,
-                     max_len: int, enc_len: int = 0, dtype=None) -> Cache:
+                     max_len: int, enc_len: int = 0, dtype=None, *,
+                     page_size: int = 0, num_pages: int = 0,
+                     prealloc: bool = True) -> Cache:
     dtype = dtype or cfg.param_dtype
     c: Cache = {}
     if spec.mixer == "attn":
         c["kv"] = attention.init_cache(batch, max_len,
-                                       make_attn_config(cfg, spec), dtype)
+                                       make_attn_config(cfg, spec), dtype,
+                                       page_size=page_size,
+                                       num_pages=num_pages, prealloc=prealloc)
     elif spec.mixer == "mamba":
         c["mamba"] = mamba.init_state(batch, make_mamba_config(cfg), cfg.accum_dtype)
     elif spec.mixer == "mlstm":
@@ -238,14 +242,17 @@ def stack_init(key: jax.Array, cfg: ModelConfig, *, causal: bool = True,
 def init_caches(cfg: ModelConfig, batch: int, max_len: int, *,
                 period: tuple[BlockSpec, ...] | None = None,
                 n_layers: int | None = None, enc_len: int = 0,
-                dtype=None) -> list[Cache]:
+                dtype=None, page_size: int = 0, num_pages: int = 0,
+                prealloc: bool = True) -> list[Cache]:
     """Stacked caches, mirroring stack_init's layout."""
     period = period or cfg.period
     n_layers = n_layers or cfg.n_layers
     n_periods = n_layers // len(period)
     out = []
     for spec in period:
-        one = init_block_cache(cfg, spec, batch, max_len, enc_len, dtype)
+        one = init_block_cache(cfg, spec, batch, max_len, enc_len, dtype,
+                               page_size=page_size, num_pages=num_pages,
+                               prealloc=prealloc)
         out.append(jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (n_periods,) + x.shape), one))
     return out

@@ -1,14 +1,26 @@
-"""Continuous-batching serving engine (DESIGN.md §9).
+"""Continuous-batching serving engine (DESIGN.md §9, §11).
 
-Owns a request queue, an admission scheduler, a slot-pooled KV-cache
-allocator and interleaved prefill/decode over FIXED compiled shapes:
+Owns a request queue, an admission scheduler, a PAGED KV-cache pool with a
+host-side page allocator + prefix index (``serving/paging.py``), and
+interleaved prefill/decode over FIXED compiled shapes:
 
+* KV state lives in a fixed page pool (``EngineConfig.page_size`` tokens
+  per page) indexed through per-slot page tables; admission installs a
+  slot's table in one batched dispatch (``lm.cache_admit``) and eviction is
+  pure host-side refcount bookkeeping — no device work at all.
+* Admissions consult a radix prefix index over token ids: a prompt whose
+  leading full pages are already cached maps them read-only (refcounted,
+  shared across slots) and prefills ONLY the novel suffix — the
+  shared-system-prompt workload prefill drops from O(prompt) to O(suffix).
+  A prompt fully covered by shared pages copy-on-writes its last matched
+  page so the final token re-prefills privately (first-token logits need
+  it, and shared pages are never written).
 * The decode batch is always ``(num_slots, 1)`` — free slots decode a dummy
-  token whose output is ignored — so the decode step compiles exactly once.
-* Prompts prefill one request at a time, right-padded to a small static set
-  of *buckets* (powers of two up to ``max_prompt_len``), each bucket
-  compiling once; the prefilled 1-row cache is inserted into the pooled
-  caches at the assigned slot (``models/lm.cache_insert``).
+  token whose output is ignored and never written — so the decode step
+  compiles exactly once.
+* Prompts prefill as chunk slabs right-padded to a small static set of
+  *buckets* (powers of two up to ``max_prompt_len``), each bucket compiling
+  once; only the admitted row of the ``(num_slots, bucket)`` slab is valid.
 * With ``EngineConfig.prefill_chunk > 0`` prefill is CHUNKED instead: every
   in-flight prefill advances together through one fixed
   ``(num_slots, prefill_chunk)`` slab per dispatch (``lm.prefill_chunk`` —
@@ -17,8 +29,9 @@ allocator and interleaved prefill/decode over FIXED compiled shapes:
   stalls in-flight decode latency by more than the budgeted chunk work
   (DESIGN.md §9).  Decode steps mask cache writes for mid-prefill slots.
 * Requests enter with prompt + sampling/stop params, decode together until
-  EOS/max-tokens, then free their slot for waiting requests
-  (``lm.cache_evict`` zeroes the row's attention lengths).
+  EOS/max-tokens, then free their slot for waiting requests (their pages'
+  refcounts drop; pages the prefix index still holds stay warm for future
+  admissions until ``PrefixIndex.reclaim`` evicts them under pressure).
 * With ``EngineConfig.spec_k > 0`` the decode step becomes a SPECULATIVE
   draft/verify round (DESIGN.md §10): ONE fused dispatch rolls out
   ``spec_k`` draft proposals per live slot (default draft: the target's own
@@ -60,6 +73,7 @@ import numpy as np
 from repro.core import api
 from repro.models import lm
 from repro.serving import metrics as metrics_lib
+from repro.serving import paging
 from repro.serving import spec as spec_lib
 from repro.serving.profiles import RoutingProfileStore
 from repro.serving.request import Request, RequestResult, SlotState
@@ -160,6 +174,21 @@ class EngineConfig:
     # for trained drafts); None = "self" (see serving/spec.build_draft).
     spec_k: int = 0
     draft_config: Optional[str] = None
+    # paged KV cache (DESIGN.md §11): page_size 0 = one max_len-sized page
+    # per slot (the contiguous layout, bit-for-bit) — prefix sharing is
+    # structurally off there (no prompt ever fills a max_len page).
+    # page_size > 0 carves the pool into fixed pages; num_pages 0 = auto
+    # (num_slots * ceil(max_len / page_size), the contiguous footprint).
+    # prefix_sharing gates the radix index — admission-time page REUSE —
+    # independently of the paged layout itself.
+    page_size: int = 0
+    num_pages: int = 0
+    prefix_sharing: bool = True
+    # LRU cap on the per-tenant routing-profile store: an open multi-tenant
+    # endpoint sees unbounded distinct tenant ids, and each profile row is
+    # O(num_leaves) forever — cap generously and evict least-recently-
+    # updated (warn-once on first eviction)
+    profile_max_tenants: int = 1024
     seed: int = 0
 
     def buckets(self) -> Tuple[int, ...]:
@@ -190,7 +219,8 @@ class ContinuousBatchingEngine:
     def __init__(self, params, cfg, ecfg: EngineConfig,
                  scheduler: Optional[Scheduler] = None,
                  trace_ctx: Optional[Callable] = None,
-                 draft: Optional[Tuple[dict, object]] = None):
+                 draft: Optional[Tuple[dict, object]] = None,
+                 mesh=None):
         if cfg.encoder is not None or cfg.frontend != "none":
             raise ValueError("serving engine supports decoder-only token LMs")
         if any(b.mixer != "attn" for b in cfg.period):
@@ -225,6 +255,15 @@ class ContinuousBatchingEngine:
                                  "prefill is on")
         if ecfg.spec_k < 0:
             raise ValueError(f"spec_k {ecfg.spec_k} must be >= 0")
+        if ecfg.page_size < 0 or ecfg.page_size > ecfg.max_len:
+            raise ValueError(f"page_size {ecfg.page_size} must be in "
+                             f"[0, max_len {ecfg.max_len}]")
+        _page = ecfg.page_size or ecfg.max_len
+        _ppr = -(-ecfg.max_len // _page)          # pages per slot, max
+        if ecfg.num_pages and ecfg.num_pages < _ppr:
+            raise ValueError(
+                f"num_pages {ecfg.num_pages} cannot cover even one "
+                f"max-length slot ({_ppr} pages of {_page} tokens)")
         if ecfg.draft_config is not None and not ecfg.spec_k:
             raise ValueError("draft_config is set but spec_k == 0 — "
                              "speculation is off, the draft would be dead "
@@ -249,7 +288,30 @@ class ContinuousBatchingEngine:
         self._topology: Optional[Tuple[int, float]] = None
 
         S, L = ecfg.num_slots, ecfg.max_len
-        self.caches = lm.init_caches(cfg, S, L)
+        # the page pool (DESIGN.md §11): device side is a dumb pool + per-
+        # slot tables (prealloc=False — all entries start at the unmapped
+        # sentinel); the host-side allocator + prefix index own the mapping
+        self._page = _page
+        self._ppr = _ppr
+        self._num_pages = ecfg.num_pages or S * _ppr
+        self.pool = paging.PagePool(self._num_pages, self._page)
+        self.prefix = paging.PrefixIndex(self.pool)
+        self._slot_pages: List[list] = [[] for _ in range(S)]
+        self._alloc_len = np.zeros((S,), np.int32)   # pages * page_size
+        self._shared_len = np.zeros((S,), np.int32)  # prefix-hit boundary
+        self.n_prefix_hit_tokens = 0
+        self.n_cow_copies = 0
+        self.n_prefill_tokens = 0
+        self.caches = lm.init_caches(cfg, S, L, page_size=self._page,
+                                     num_pages=self._num_pages,
+                                     prealloc=False)
+        # pin the pool's shardings ONCE, at allocation, under the serving
+        # mesh (subsumes re-deriving cache placement per dispatch): jitted
+        # cache-threading calls then see committed inputs and keep the
+        # layout stable across donation round-trips
+        self._mesh = mesh
+        if mesh is not None:
+            self.caches = self._pin_caches(self.caches, mesh)
         # speculative decoding state (spec_k > 0): the draft model's pooled
         # caches live ALONGSIDE the target's, slot-indexed identically, so
         # admission/eviction treat the pair as one unit.  _tlen/_dlen are
@@ -274,7 +336,16 @@ class ContinuousBatchingEngine:
                     f"draft vocab {self.draft_cfg.vocab_size} != target "
                     f"vocab {cfg.vocab_size}: rejection sampling compares "
                     f"the two distributions token-for-token")
-            self.draft_caches = lm.init_caches(self.draft_cfg, S, L)
+            # the draft's pool mirrors the target's page geometry (same
+            # allocator, same tables): draft K/V for a token is as
+            # deterministic as the target's, so shared prompt pages are
+            # valid for both trees
+            self.draft_caches = lm.init_caches(self.draft_cfg, S, L,
+                                               page_size=self._page,
+                                               num_pages=self._num_pages,
+                                               prealloc=False)
+            if mesh is not None:
+                self.draft_caches = self._pin_caches(self.draft_caches, mesh)
             self._tlen = np.zeros((S,), np.int32)   # target cache lengths
             self._dlen = np.zeros((S,), np.int32)   # draft cache lengths
         self._spec_rounds = 0
@@ -293,7 +364,8 @@ class ContinuousBatchingEngine:
         # online per-tenant routing profiles, fed by _evict_finished
         self.profiles: Optional[RoutingProfileStore] = (
             RoutingProfileStore(self.num_leaves, ewma=ecfg.profile_ewma,
-                                min_updates=ecfg.profile_min_updates)
+                                min_updates=ecfg.profile_min_updates,
+                                max_tenants=ecfg.profile_max_tenants)
             if ecfg.learn_profiles and self.num_leaves else None)
         self._hint_mismatches = 0            # size-mismatched leaf_hints seen
         self._hint_warned = False            # warn once per engine
@@ -326,24 +398,26 @@ class ContinuousBatchingEngine:
         if self.spec:
             dcfg = self.draft_cfg
             # every spec-mode entry point that touches caches touches BOTH
-            # trees in the SAME dispatch — prefill, chunk, evict, round —
+            # trees in the SAME dispatch — prefill, chunk, admit, round —
             # so speculation adds zero dispatch overhead over plain serving
             # anywhere except the round itself (where it replaces k+1
-            # decode dispatches with one)
+            # decode dispatches with one).  Monolithic prefill is a chunk
+            # slab at bucket width: only the admitted row is valid, and its
+            # offset starts at the shared-prefix boundary (DESIGN.md §11).
             self._prefill_jits = {
                 b: jax.jit(
-                    lambda p, dp, t, n, c, dc, s: spec_lib.prefill_both(
-                        p, cfg, dp, dcfg, t, n, c, dc, L, s),
-                    **_don(4, 5))
+                    lambda p, dp, t, v, c, dc, off: spec_lib.chunk_both(
+                        p, cfg, dp, dcfg, t, v, c, dc, off), **_don(4, 5))
                 for b in ecfg.buckets()}
             self._chunk_jit = None
             if ecfg.prefill_chunk:
                 self._chunk_jit = jax.jit(
                     lambda p, dp, t, v, c, dc, off: spec_lib.chunk_both(
                         p, cfg, dp, dcfg, t, v, c, dc, off), **_don(4, 5))
-            self._evict_jit = jax.jit(
-                lambda c, dc, ev: (lm.cache_evict_rows(c, ev),
-                                   lm.cache_evict_rows(dc, ev)),
+            self._admit_jit = jax.jit(
+                lambda c, dc, ad, tb, ln, cs, cd: (
+                    lm.cache_admit(c, ad, tb, ln, cs, cd),
+                    lm.cache_admit(dc, ad, tb, ln, cs, cd)),
                 **_don(0, 1))
             # the whole round — both trees' length rollback, k+1 scanned
             # draft decode steps with on-device sampling, and the target's
@@ -360,8 +434,8 @@ class ContinuousBatchingEngine:
         else:
             self._prefill_jits = {
                 b: jax.jit(
-                    lambda p, t, n, c, s: lm.prefill_slot(p, cfg, t, n, c,
-                                                          L, s),
+                    lambda p, t, v, c, off: lm.prefill_chunk(p, cfg, t, v,
+                                                             c, off),
                     **_don(3))
                 for b in ecfg.buckets()}
             self._chunk_jit = None
@@ -370,8 +444,9 @@ class ContinuousBatchingEngine:
                     lambda p, t, v, c, off: lm.prefill_chunk(p, cfg, t, v,
                                                              c, off),
                     **_don(3))
-            self._evict_jit = jax.jit(
-                lambda c, ev: lm.cache_evict_rows(c, ev), **_don(0))
+            self._admit_jit = jax.jit(
+                lambda c, ad, tb, ln, cs, cd: lm.cache_admit(
+                    c, ad, tb, ln, cs, cd), **_don(0))
         # per-slot raw leaf counts accumulated across a request's prefill
         # chunks; normalized into self.occupancy when its prefill completes
         self._prefill_counts = np.zeros((S, max(self.num_leaves, 1)),
@@ -396,6 +471,19 @@ class ContinuousBatchingEngine:
         # to the FFF sentinel leaf, outside capacity and telemetry.
         self._overflow = {"prefill": [0.0, 0.0], "decode": [0.0, 0.0],
                           "draft": [0.0, 0.0]}
+
+    # -- cache placement -----------------------------------------------------
+
+    def _pin_caches(self, caches, mesh):
+        """Commit the page pool to its serving-mesh placement once, at
+        allocation (ROADMAP: pin cache shardings under the EP mesh).  Every
+        later jitted call donates the pinned buffers, so the layout derived
+        here is the layout for the engine's lifetime."""
+        from repro.distributed import sharding as shard_lib
+        specs = shard_lib.cache_specs(caches, mesh, self.ecfg.num_slots)
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(
+                x, jax.sharding.NamedSharding(mesh, s)), caches, specs)
 
     # -- clock ---------------------------------------------------------------
 
@@ -593,11 +681,18 @@ class ContinuousBatchingEngine:
     # -- the loop ------------------------------------------------------------
 
     def _evict_finished(self) -> None:
-        evict = np.zeros((self.ecfg.num_slots,), bool)
         for i, st in enumerate(self.slots):
             if st is None or not st.done:
                 continue
-            evict[i] = True
+            # free the slot's pages on the host: refcounts drop, and pages
+            # nobody else holds (no other slot, not the prefix index) return
+            # to the free list.  NO device dispatch — the slot's stale table
+            # and length rows are harmless because every decode/chunk write
+            # is masked to live rows, and re-admission overwrites both.
+            self.pool.decref(self._slot_pages[i])
+            self._slot_pages[i] = []
+            self._alloc_len[i] = 0
+            self._shared_len[i] = 0
             # promote the finished request's measured footprint into its
             # tenant's online routing profile BEFORE the row resets — this
             # is how leaf hints self-calibrate (ROADMAP: learn leaf hints
@@ -632,13 +727,6 @@ class ContinuousBatchingEngine:
                 n_drafted=st.n_drafted,
                 n_accepted=st.n_accepted))
             self.slots[i] = None
-        if evict.any():      # one dispatch frees the whole step's slots
-            if self.spec:
-                self.caches, self.draft_caches = self._evict_jit(
-                    self.caches, self.draft_caches, jnp.asarray(evict))
-            else:
-                self.caches = self._evict_jit(self.caches,
-                                              jnp.asarray(evict))
 
     def _bucket_for(self, n: int) -> int:
         return next(b for b in self.ecfg.buckets() if b >= n)
@@ -658,6 +746,90 @@ class ContinuousBatchingEngine:
         if h is not None and self.num_leaves and h.size == self.num_leaves \
                 and h.sum() > 0:
             self.occupancy[slot] = h / h.sum()
+
+    # -- paged admission (DESIGN.md §11) -------------------------------------
+
+    def _plan_pages(self, req: Request) -> Optional[dict]:
+        """Page plan for admitting ``req``: the longest indexed full-page
+        prefix maps read-only shared pages; fresh pages cover the rest of
+        ``len(prompt) + max_new_tokens``.  A fully-covered prompt
+        copy-on-writes its last matched page (the final token must
+        re-prefill privately: first-token logits, and shared pages are
+        never written).  Returns None — request stays queued — when the
+        pool can't cover the fresh pages even after reclaiming LRU index
+        entries (OOM-of-pages is scheduler back-pressure, not an error)."""
+        page = self._page
+        L = len(req.prompt)
+        n_total = -(-(L + req.max_new_tokens) // page)
+        matched = (self.prefix.match(req.prompt) if self.ecfg.prefix_sharing
+                   else [])
+        shared = min(len(matched) * page, L - 1)   # >= 1 novel token always
+        n_shared = shared // page
+        shared_pages = list(matched[:n_shared])
+        cow_src = matched[n_shared] if shared % page else None
+        n_fresh = n_total - n_shared
+        # hold the mapped + COW-source pages through reclaim/alloc — the
+        # reclaim below must not free what this very admission depends on
+        self.pool.incref(shared_pages)
+        if cow_src is not None:
+            self.pool.incref([cow_src])
+        if self.pool.pages_free < n_fresh:
+            self.prefix.reclaim(n_fresh)
+        fresh = self.pool.alloc(n_fresh)
+        if fresh is None:
+            self.pool.decref(shared_pages)
+            if cow_src is not None:
+                self.pool.decref([cow_src])
+            return None
+        return {"pages": shared_pages + fresh, "shared_len": shared,
+                "cow_src": cow_src,
+                "cow_dst": fresh[0] if cow_src is not None else None}
+
+    def _apply_admit(self, slot: int, plan: dict) -> None:
+        """Install the plan's page table + shared-prefix length at ``slot``
+        in one dispatch (``lm.cache_admit``; spec mode: both trees)."""
+        S, sentinel = self.ecfg.num_slots, self._num_pages
+        admit = np.zeros((S,), bool)
+        admit[slot] = True
+        tables = np.full((S, self._ppr), sentinel, np.int32)
+        tables[slot, :len(plan["pages"])] = plan["pages"]
+        lengths = np.zeros((S,), np.int32)
+        lengths[slot] = plan["shared_len"]
+        cow_src = np.full((S,), sentinel, np.int32)
+        cow_dst = np.full((S,), sentinel, np.int32)
+        if plan["cow_src"] is not None:
+            cow_src[slot] = plan["cow_src"]
+            cow_dst[slot] = plan["cow_dst"]
+            self.n_cow_copies += 1
+        args = (jnp.asarray(admit), jnp.asarray(tables),
+                jnp.asarray(lengths), jnp.asarray(cow_src),
+                jnp.asarray(cow_dst))
+        with self._ctx():
+            if self.spec:
+                self.caches, self.draft_caches = self._admit_jit(
+                    self.caches, self.draft_caches, *args)
+            else:
+                self.caches = self._admit_jit(self.caches, *args)
+        if plan["cow_src"] is not None:
+            # the COW copy is dispatched (device order protects it from any
+            # later reuse of the source page) — drop the temporary hold
+            self.pool.decref([plan["cow_src"]])
+        self._slot_pages[slot] = list(plan["pages"])
+        self._alloc_len[slot] = len(plan["pages"]) * self._page
+        self._shared_len[slot] = plan["shared_len"]
+        self.n_prefix_hit_tokens += plan["shared_len"]
+
+    def _publish_prefix(self, slot: int) -> None:
+        """Index the slot's full prompt pages for cross-request sharing —
+        only now, at prefill COMPLETION: publishing at admission would let
+        a racing request attend to pages whose K/V aren't written yet
+        (racing admissions simply miss and prefill themselves)."""
+        if not self.ecfg.prefix_sharing:
+            return
+        prompt = self.slots[slot].request.prompt
+        n_full = len(prompt) // self._page
+        if n_full:
+            self.prefix.insert(prompt, self._slot_pages[slot][:n_full])
 
     def _admit(self) -> None:
         free = [i for i, s in enumerate(self.slots) if s is None]
@@ -679,7 +851,8 @@ class ContinuousBatchingEngine:
             # scheduler's per-leaf capacity proxy must be normalized by the
             # same factor or it would predict overflow against a bound k+1
             # times too tight (see SchedulerView.leaf_capacity)
-            tokens_per_slot=(self.ecfg.spec_k + 1) if self.spec else 1)
+            tokens_per_slot=(self.ecfg.spec_k + 1) if self.spec else 1,
+            pages_free=self.pool.pages_free)
         if self.ecfg.prefill_chunk:
             # the max_prefilling knob is chunked-only by contract (a
             # monolithic admission never *dwells* in the prefilling state,
@@ -689,68 +862,93 @@ class ContinuousBatchingEngine:
             return
         chosen = self.scheduler.select(list(self.queue), n, view)
         for req in chosen:
+            plan = self._plan_pages(req)
+            if plan is None:
+                # OOM of pages: the request (and the rest of this step's
+                # picks) stays queued — evictions or index reclaim free
+                # pages on a later step, and the scheduler sees the
+                # pressure via SchedulerView.pages_free
+                break
             self.queue.remove(req)
             slot = free.pop(0)
             if self.ecfg.prefill_chunk:
-                self._admit_chunked(req, slot)
+                self._admit_chunked(req, slot, plan)
             else:
-                self._admit_monolithic(req, slot)
+                self._admit_monolithic(req, slot, plan)
 
-    def _admit_monolithic(self, req: Request, slot: int) -> None:
+    def _admit_monolithic(self, req: Request, slot: int, plan: dict) -> None:
+        """One bucket-padded chunk slab prefills the prompt's NOVEL suffix
+        (everything past the shared-prefix boundary) in a single dispatch.
+        Only the admitted row of the (num_slots, bucket) slab is valid;
+        the other rows carry in-distribution filler whose writes are
+        dropped and whose tokens route to the FFF sentinel leaf."""
+        self._apply_admit(slot, plan)
         L = len(req.prompt)
-        bucket = self._bucket_for(L)
+        sh = plan["shared_len"]
+        suffix = np.asarray(req.prompt[sh:], np.int32)
+        n = len(suffix)                                # >= 1 by plan
+        bucket = self._bucket_for(n)
+        S = self.ecfg.num_slots
         # right-pad with the LAST real token, not a constant: pad
-        # positions are length-masked in the cache either way, but they
-        # do route through FFF sites, and the telemetry tap counts them —
-        # repeating in-distribution content keeps the seeded leaf
-        # footprint representative instead of phantom-weighted toward a
-        # fixed pad token's leaf
-        toks = np.full((1, bucket), req.prompt[-1], np.int32)
-        toks[0, :L] = req.prompt
+        # positions' writes are dropped either way, but they do route
+        # through FFF sites — repeating in-distribution content keeps the
+        # phantom load naturally spread (same rationale as _free_tok)
+        toks = np.repeat(self._free_tok[:, None], bucket, axis=1)
+        toks[slot, :n] = suffix
+        toks[slot, n:] = suffix[-1]
+        valid = np.zeros((S,), np.int32)
+        valid[slot] = n
+        offs = np.zeros((S,), np.int32)
+        offs[slot] = sh
         with self._ctx():
             if self.spec:
-                # one dispatch prefills the prompt into BOTH cache trees
+                # one dispatch prefills the suffix into BOTH cache trees
                 logits, self.caches, self.draft_caches, stats, dstats = \
                     self._prefill_jits[bucket](
                         self.params, self.draft_params, jnp.asarray(toks),
-                        jnp.int32(L), self.caches, self.draft_caches,
-                        jnp.int32(slot))
+                        jnp.asarray(valid), self.caches, self.draft_caches,
+                        jnp.asarray(offs))
                 self._stats_rows(dstats, "draft")
                 self._tlen[slot] = L
                 self._dlen[slot] = L
             else:
                 logits, self.caches, stats = self._prefill_jits[bucket](
-                    self.params, jnp.asarray(toks), jnp.int32(L),
-                    self.caches, jnp.int32(slot))
+                    self.params, jnp.asarray(toks), jnp.asarray(valid),
+                    self.caches, jnp.asarray(offs))
         logits = np.asarray(jax.block_until_ready(logits))
         self.n_prefills += 1
+        self.n_prefill_tokens += n
         t = self.now()
         st = SlotState(request=req, admitted_time=t, first_token_time=t,
                        tokens=[], total_len=L, prefill_pos=L)
         self.slots[slot] = st
-        # seed the slot's footprint: measured prefill counts (row 0 of
-        # the 1-row prefill batch), else the request's hint prior
+        # seed the slot's footprint: measured prefill counts (the admitted
+        # row of the slab), else the request's hint prior
         counts = self._stats_rows(stats, "prefill")
-        if counts is not None and counts[0].sum() > 0:
-            self.occupancy[slot] = counts[0] / counts[0].sum()
+        if counts is not None and counts[slot].sum() > 0:
+            self.occupancy[slot] = counts[slot] / counts[slot].sum()
             self._measured[slot] = True
         else:
             self._measured[slot] = False
             self._seed_hint(slot, req)
-        self._record_token(st, self._sample(st, logits))
+        self._record_token(st, self._sample(st, logits[slot]))
+        self._publish_prefix(slot)
 
-    def _admit_chunked(self, req: Request, slot: int) -> None:
-        """Assign the slot only — no model call.  The prompt advances through
-        the shared chunk slab in subsequent ``_chunk_prefill`` dispatches.
-        The slot's cache row is already empty: eviction zeroed its lengths,
-        and chunked-mode decode never writes free rows (the write mask)."""
+    def _admit_chunked(self, req: Request, slot: int, plan: dict) -> None:
+        """Install the page table only — no model call.  The prompt's novel
+        suffix advances through the shared chunk slab in subsequent
+        ``_chunk_prefill`` dispatches, starting at the shared-prefix
+        boundary (``prefill_pos = shared_len`` — the shared pages' K/V are
+        already in the pool)."""
+        self._apply_admit(slot, plan)
+        sh = plan["shared_len"]
         st = SlotState(request=req, admitted_time=self.now(),
                        first_token_time=0.0, tokens=[], total_len=0,
-                       prefill_pos=0)
+                       prefill_pos=sh)
         self.slots[slot] = st
         if self.spec:
-            self._tlen[slot] = 0
-            self._dlen[slot] = 0
+            self._tlen[slot] = sh
+            self._dlen[slot] = sh
         self._prefill_counts[slot] = 0.0
         self._measured[slot] = False
         self._seed_hint(slot, req)     # prior until measured counts land
@@ -799,6 +997,7 @@ class ContinuousBatchingEngine:
         for i in prefilling:
             st = self.slots[i]
             st.prefill_pos += int(valid[i])
+            self.n_prefill_tokens += int(valid[i])
             if self.spec:
                 self._tlen[i] += int(valid[i])
                 self._dlen[i] += int(valid[i])
@@ -813,6 +1012,7 @@ class ContinuousBatchingEngine:
                 st.total_len = len(st.request.prompt)
                 st.first_token_time = self.now()
                 self._record_token(st, self._sample(st, logits[i]))
+                self._publish_prefix(i)
 
     def _decode(self) -> None:
         live = [i for i, s in enumerate(self.slots)
@@ -825,17 +1025,15 @@ class ContinuousBatchingEngine:
             st = self.slots[i]
             toks[i, 0] = st.tokens[-1]
             offs[i] = st.total_len - 1      # position of the token being fed
-        if self.ecfg.prefill_chunk:
-            # mid-prefill slots MUST NOT write/advance their caches on the
-            # dummy decode token; masking free/done rows too keeps newly
-            # admitted rows' lengths at zero for the chunk path
-            wm = np.zeros((self.ecfg.num_slots,), bool)
-            wm[live] = True
-        else:
-            # monolithic: every row appends (free rows' garbage is length-
-            # masked and wholesale-replaced by cache_insert on admission) —
-            # the pre-chunking behavior, preserved bit-for-bit
-            wm = np.ones((self.ecfg.num_slots,), bool)
+        # ONLY live rows write/advance their caches: mid-prefill slots must
+        # not append the dummy decode token, and free/done rows' stale page
+        # tables may alias pages the allocator has since handed to OTHER
+        # live slots — an unmasked phantom write would corrupt them
+        # (DESIGN.md §11).  Live rows' outputs are unaffected: attention is
+        # row-independent and the FFF validity mask (lv) already routes
+        # phantom rows to the sentinel leaf.
+        wm = np.zeros((self.ecfg.num_slots,), bool)
+        wm[live] = True
         # free/mid-prefill rows are phantom tokens: the validity mask routes
         # them to the FFF sentinel leaf so they never consume grouped-
         # dispatch capacity or pollute routing telemetry (DESIGN.md §9 —
@@ -898,12 +1096,16 @@ class ContinuousBatchingEngine:
             pos0[i] = n
             temps[i] = max(st.request.temperature, 0.0)
             lv[i] = True
-            vlen[i] = min(k + 1, self.ecfg.max_len - n)
+            # the row's writable horizon is its ALLOCATED pages (>= prompt +
+            # max_new by the admission plan), not max_len: optimistic
+            # appends past the allocation would scatter into other slots'
+            # pages through the clamped table lookup
+            vlen[i] = min(k + 1, int(self._alloc_len[i]) - n)
         # per-step draft KV-write guards: step j appends at pos0 + j; rows
-        # at the cache edge stop writing (their later drafts go unverified —
-        # vlen clips the verify slab identically)
+        # at their allocation edge stop writing (their later drafts go
+        # unverified — vlen clips the verify slab identically)
         wm = lv[None, :] & ((pos0[None, :] + np.arange(k + 1)[:, None])
-                            < self.ecfg.max_len)
+                            < self._alloc_len[None, :])
         t0 = time.monotonic()
         with self._ctx():
             (drafts, q_logits, p_logits, self.caches, self.draft_caches,
@@ -1001,6 +1203,8 @@ class ContinuousBatchingEngine:
         n_chunks0, n_int0 = self.n_chunks, len(self.decode_interval_s)
         hints0 = self._hint_mismatches
         draft0, acc0 = self.n_draft_tokens, self.n_accepted_tokens
+        phit0, cow0 = self.n_prefix_hit_tokens, self.n_cow_copies
+        ptoks0 = self.n_prefill_tokens
         ovf0 = {k: list(v) for k, v in self._overflow.items()}
         t_start = self.now()
         self._last_decode_end = None    # decode gaps don't span runs
@@ -1042,7 +1246,12 @@ class ContinuousBatchingEngine:
             decode_interval_s=intervals,
             hint_mismatches=self._hint_mismatches - hints0,
             draft_tokens=self.n_draft_tokens - draft0,
-            accepted_tokens=self.n_accepted_tokens - acc0)
+            accepted_tokens=self.n_accepted_tokens - acc0,
+            prefill_tokens=self.n_prefill_tokens - ptoks0,
+            prefix_hit_tokens=self.n_prefix_hit_tokens - phit0,
+            cow_copies=self.n_cow_copies - cow0,
+            pages_in_use=self.pool.pages_in_use,
+            pages_free=self.pool.pages_free)
         return results, m
 
     def poll_metrics(self) -> metrics_lib.EngineMetrics:
@@ -1064,7 +1273,12 @@ class ContinuousBatchingEngine:
             decode_interval_s=self.decode_interval_s,
             hint_mismatches=self._hint_mismatches,
             draft_tokens=self.n_draft_tokens,
-            accepted_tokens=self.n_accepted_tokens)
+            accepted_tokens=self.n_accepted_tokens,
+            prefill_tokens=self.n_prefill_tokens,
+            prefix_hit_tokens=self.n_prefix_hit_tokens,
+            cow_copies=self.n_cow_copies,
+            pages_in_use=self.pool.pages_in_use,
+            pages_free=self.pool.pages_free)
         m.queue_depth = len(self.queue)
         m.active_slots = sum(s is not None for s in self.slots)
         m.prefilling_slots = sum(s is not None and s.prefilling
@@ -1089,7 +1303,7 @@ class ContinuousBatchingEngine:
                 return int(fn._cache_size())
             except AttributeError:           # pragma: no cover - old jax
                 return -1
-        out = {"decode": n(self._decode_jit), "evict": n(self._evict_jit)}
+        out = {"decode": n(self._decode_jit), "admit": n(self._admit_jit)}
         for b, fn in self._prefill_jits.items():
             out[f"prefill_{b}"] = n(fn)
         if self._chunk_jit is not None:

@@ -88,6 +88,16 @@ class EngineMetrics:
     # spec_acceptance = accepted / drafted (0 when speculation is off)
     draft_tokens: int = 0
     accepted_tokens: int = 0
+    # paged KV cache + prefix sharing (DESIGN.md §11): prefill_tokens counts
+    # tokens actually prefilled on device; prefix_hit_tokens counts prompt
+    # tokens served from shared pages instead (the prefill work avoided);
+    # cow_copies counts copy-on-write page duplications; pages_in_use /
+    # pages_free snapshot the page pool (instantaneous)
+    prefill_tokens: int = 0
+    prefix_hit_tokens: int = 0
+    cow_copies: int = 0
+    pages_in_use: int = 0
+    pages_free: int = 0
     queue_depth: int = 0                 # waiting requests (instantaneous)
     active_slots: int = 0                # occupied slots (instantaneous)
     prefilling_slots: int = 0            # slots mid-chunked-prefill
@@ -131,6 +141,11 @@ class EngineMetrics:
         if self.hint_mismatches:
             lines.append(f"leaf_hint size mismatches dropped: "
                          f"{self.hint_mismatches}")
+        if self.prefix_hit_tokens or self.cow_copies:
+            lines.append(
+                f"paged kv: {self.prefill_tokens} tokens prefilled, "
+                f"{self.prefix_hit_tokens} served from shared prefix pages "
+                f"({self.cow_copies} cow copies)")
         if set(self.tenants) - {"default"}:
             for t, d in sorted(self.tenants.items()):
                 if "n_requests" not in d:
@@ -161,6 +176,11 @@ class EngineMetrics:
             "draft_tokens": self.draft_tokens,
             "accepted_tokens": self.accepted_tokens,
             "wasted_tokens": self.wasted_tokens,
+            "prefill_tokens": self.prefill_tokens,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "cow_copies": self.cow_copies,
+            "pages_in_use": self.pages_in_use,
+            "pages_free": self.pages_free,
             "queue_depth": self.queue_depth,
             "active_slots": self.active_slots,
             "prefilling_slots": self.prefilling_slots,
@@ -201,7 +221,12 @@ def from_results(results: Iterable, *, elapsed_s: float, n_steps: int,
                  decode_interval_s: Sequence[float] = (),
                  hint_mismatches: int = 0,
                  draft_tokens: int = 0,
-                 accepted_tokens: int = 0) -> EngineMetrics:
+                 accepted_tokens: int = 0,
+                 prefill_tokens: int = 0,
+                 prefix_hit_tokens: int = 0,
+                 cow_copies: int = 0,
+                 pages_in_use: int = 0,
+                 pages_free: int = 0) -> EngineMetrics:
     """Build an ``EngineMetrics`` from finished ``RequestResult`` records."""
     rs = list(results)
     return EngineMetrics(
@@ -219,4 +244,9 @@ def from_results(results: Iterable, *, elapsed_s: float, n_steps: int,
         hint_mismatches=hint_mismatches,
         draft_tokens=draft_tokens,
         accepted_tokens=accepted_tokens,
+        prefill_tokens=prefill_tokens,
+        prefix_hit_tokens=prefix_hit_tokens,
+        cow_copies=cow_copies,
+        pages_in_use=pages_in_use,
+        pages_free=pages_free,
         tenants=tenant_breakdown(rs, elapsed_s))

@@ -17,6 +17,7 @@ for a given update sequence (no wall-clock, no RNG).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional
 
 import numpy as np
@@ -48,20 +49,54 @@ class RoutingProfileStore:
                      prior (one request is already a usable signal; raise
                      this for bursty tenants whose first request may be
                      unrepresentative).
+        max_tenants: LRU cap on tracked tenants — the store is otherwise
+                     unbounded host memory under tenant-id churn (every
+                     distinct id allocates an (E,) row forever).  When a new
+                     tenant would exceed the cap, the least-recently-touched
+                     (update or lookup) profile is dropped; the first
+                     eviction warns once so operators notice the working set
+                     outgrew the cap.  0 = unbounded.
     """
 
     def __init__(self, num_leaves: int, ewma: float = 0.3,
-                 min_updates: int = 1):
+                 min_updates: int = 1, max_tenants: int = 1024):
         if num_leaves <= 0:
             raise ValueError(f"num_leaves must be positive, got {num_leaves}")
         if not 0.0 < ewma <= 1.0:
             raise ValueError(f"ewma must be in (0, 1], got {ewma}")
         if min_updates < 1:
             raise ValueError(f"min_updates must be >= 1, got {min_updates}")
+        if max_tenants < 0:
+            raise ValueError(f"max_tenants must be >= 0, got {max_tenants}")
         self.num_leaves = num_leaves
         self.ewma = ewma
         self.min_updates = min_updates
+        self.max_tenants = max_tenants
+        self.n_evicted = 0
+        self._warned_eviction = False
         self._profiles: Dict[str, TenantProfile] = {}
+
+    def _touch(self, tenant: str) -> None:
+        # dict insertion order doubles as the LRU order: re-inserting moves
+        # the tenant to the most-recent end.
+        prof = self._profiles.pop(tenant)
+        self._profiles[tenant] = prof
+
+    def _evict_to_cap(self) -> None:
+        if self.max_tenants <= 0:
+            return
+        while len(self._profiles) > self.max_tenants:
+            victim = next(iter(self._profiles))
+            del self._profiles[victim]
+            self.n_evicted += 1
+            if not self._warned_eviction:
+                self._warned_eviction = True
+                warnings.warn(
+                    f"RoutingProfileStore evicted tenant {victim!r}: more "
+                    f"than max_tenants={self.max_tenants} distinct tenants "
+                    f"seen; evicted tenants relearn from scratch (raise "
+                    f"profile_max_tenants if the working set is legitimate)",
+                    RuntimeWarning, stacklevel=3)
 
     def update(self, tenant: str, occupancy_row: np.ndarray) -> None:
         """Fold one finished request's (E,) leaf-occupancy row into the
@@ -78,10 +113,12 @@ class RoutingProfileStore:
         if prof is None:
             self._profiles[tenant] = TenantProfile(footprint=frac.copy(),
                                                    n_updates=1)
+            self._evict_to_cap()
         else:
             a = self.ewma
             prof.footprint = (1.0 - a) * prof.footprint + a * frac
             prof.n_updates += 1
+            self._touch(tenant)
 
     def lookup(self, tenant: str) -> Optional[np.ndarray]:
         """The tenant's learned (E,) footprint (a copy — callers may
@@ -90,6 +127,7 @@ class RoutingProfileStore:
         prof = self._profiles.get(tenant)
         if prof is None or prof.n_updates < self.min_updates:
             return None
+        self._touch(tenant)
         return prof.footprint.copy()
 
     def n_updates(self, tenant: str) -> int:

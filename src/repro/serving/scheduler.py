@@ -64,6 +64,12 @@ class SchedulerView:
                overflow proxy predicts against scales with the slab width,
                and the occupancy fractions are per-token so the load side
                scales identically
+    pages_free: free pages in the engine's KV page pool (None when the
+               engine predates paging or a custom driver doesn't track it).
+               A free slot no longer guarantees admission — the page
+               allocator can refuse a long prompt even with slots open —
+               so page-aware policies can skip candidates that obviously
+               can't be funded this step
     """
     occupancy: np.ndarray
     active: np.ndarray
@@ -74,6 +80,7 @@ class SchedulerView:
     prefilling: Optional[np.ndarray] = None
     profiles: Optional[object] = None    # serving.profiles.RoutingProfileStore
     tokens_per_slot: int = 1
+    pages_free: Optional[int] = None
 
     def leaf_capacity(self) -> float:
         """Whole-batch per-leaf capacity of one decode-side dispatch, in

@@ -238,19 +238,6 @@ def spec_round(params: Params, cfg, draft_params: Params, dcfg,
     return drafts, q_logits, p_logits, caches, draft_caches, dstats, vstats
 
 
-def prefill_both(params: Params, cfg, draft_params: Params, dcfg,
-                 tokens: jax.Array, true_len: jax.Array, caches: list,
-                 draft_caches: list, max_len: int, slot: jax.Array):
-    """Monolithic admission with speculation on: prefill the prompt into
-    BOTH models' pooled caches in one dispatch (the draft's logits are
-    discarded — rounds start from the pending token)."""
-    logits, caches, stats = lm.prefill_slot(
-        params, cfg, tokens, true_len, caches, max_len, slot)
-    _, draft_caches, dstats = lm.prefill_slot(
-        draft_params, dcfg, tokens, true_len, draft_caches, max_len, slot)
-    return logits, caches, draft_caches, stats, dstats
-
-
 def chunk_both(params: Params, cfg, draft_params: Params, dcfg,
                tokens: jax.Array, valid_len: jax.Array, caches: list,
                draft_caches: list, pos_offset: jax.Array):

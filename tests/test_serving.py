@@ -211,7 +211,7 @@ def test_engine_fixed_compiled_shapes(model):
     after = eng.compiled_shapes()
     assert after == warm, "recompilation after warmup"
     assert after["decode"] == 1
-    assert after["evict"] == 1
+    assert after["admit"] == 1
     assert all(v <= 1 for k, v in after.items() if k.startswith("prefill_"))
     assert sum(v for k, v in after.items() if k.startswith("prefill_")) >= 1
 

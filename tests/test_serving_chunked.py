@@ -270,7 +270,7 @@ def test_scheduler_admission_cap_math():
 
 def test_compile_bound(model):
     """The documented compile contract, standalone: chunked serving runs on
-    EXACTLY decode 1 + chunk slab 1 + evict 1 compiled traces with zero
+    EXACTLY decode 1 + chunk slab 1 + admit 1 compiled traces with zero
     bucket prefills (docs/serving.md).  The CI serving job runs this single
     node id as a dedicated gate step, so a contract regression fails loudly
     on its own instead of somewhere inside the full suite."""
@@ -280,7 +280,7 @@ def test_compile_bound(model):
     shapes = eng.compiled_shapes()
     assert shapes["decode"] == 1, shapes
     assert shapes["prefill_chunk"] == 1, shapes
-    assert shapes["evict"] == 1, shapes
+    assert shapes["admit"] == 1, shapes
     assert all(v == 0 for k, v in shapes.items()
                if k.startswith("prefill_") and k != "prefill_chunk"), shapes
 

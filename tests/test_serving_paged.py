@@ -1,0 +1,370 @@
+"""Paged KV cache + cross-request prefix sharing tests (DESIGN.md §11).
+
+Four tiers:
+* host-only allocator/index properties — ``serving/paging.py`` is pure
+  Python, so the page-conservation invariants are checked over randomized
+  admit/evict/publish/reclaim interleavings (property-style via hypothesis
+  when installed, a seeded deterministic sweep otherwise);
+* cache-level parity — a preallocated paged cache is bit-for-bit the
+  contiguous layout (the degenerate-paging claim the engine's
+  ``page_size=0`` mode rests on);
+* engine tier — paged serving matches ``lm.generate`` exactly while
+  actually sharing pages (``prefix_hit_tokens > 0``), refuses admission
+  gracefully when the pool is exhausted, and keeps the compile contract;
+* the RoutingProfileStore LRU cap (ISSUE 7 satellite).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import lm
+from repro.serving import ContinuousBatchingEngine, EngineConfig, Request
+from repro.serving.paging import PagePool, PrefixIndex
+from repro.serving.profiles import RoutingProfileStore
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # container has no
+    HAVE_HYPOTHESIS = False                           # hypothesis; the
+                                                      # seeded sweep below
+                                                      # covers the property
+
+# ---------------------------------------------------------------------------
+# host-only tier: PagePool / PrefixIndex invariants
+# ---------------------------------------------------------------------------
+
+
+def _run_ops(ops, num_pages=16, page_size=4):
+    """Interpret an op sequence against a PagePool + PrefixIndex while
+    checking the conservation invariants after every step.
+
+    Each op is ``(kind, a, b)`` with kind in 0..3:
+      0 = admit: alloc ``1 + a % 4`` pages for slot ``b % 4`` (skipped if
+          the slot is live), mapping the longest indexed prefix first
+      1 = evict: decref slot ``b % 4``'s pages
+      2 = publish: insert slot ``b % 4``'s prompt chunks into the index
+      3 = reclaim: evict index entries until ``a % num_pages`` pages free
+    """
+    pool = PagePool(num_pages, page_size)
+    index = PrefixIndex(pool)
+    slots = {}                 # slot -> [tokens, pages, n_shared, published]
+    next_tok = [0]
+
+    def check():
+        # conservation: every page is either free or referenced; refcounts
+        # reconcile exactly with (live slot maps) + (index entries)
+        refs = np.zeros(num_pages, np.int64)
+        for _, pages, _, _ in slots.values():
+            for p in pages:
+                refs[p] += 1
+        stack = [index._root]
+        while stack:
+            n = stack.pop()
+            for c in n.children.values():
+                stack.append(c)
+                if c.page is not None:
+                    refs[c.page] += 1
+        for p in range(num_pages):
+            assert pool.refcount(p) == refs[p], (p, pool.refcount(p), refs[p])
+        assert pool.pages_free == int((refs == 0).sum())
+        # write exclusivity: a page mapped by two live slots is never
+        # writable by either — each holder either got it from match() (its
+        # shared prefix, read-only by construction) or already published it
+        # (prefill complete, the page is frozen)
+        owners = {}
+        for s, (_, pages, n_shared, published) in slots.items():
+            for i, p in enumerate(pages):
+                owners.setdefault(p, []).append(i < n_shared or published)
+        for p, holders in owners.items():
+            if len(holders) > 1:
+                assert all(holders), f"page {p} multiply mapped yet writable"
+
+    for kind, a, b in ops:
+        kind, slot = kind % 4, b % 4
+        if kind == 0 and slot not in slots:
+            n = 1 + a % 4
+            # half the admissions reuse an existing prompt prefix (sharing),
+            # half are fresh
+            if slots and a % 2 == 0:
+                donor = sorted(slots.values())[0][0]
+                tokens = list(donor[:n * page_size])
+            else:
+                tokens = [next_tok[0] + i for i in range(n * page_size)]
+                next_tok[0] += n * page_size
+            shared = index.match(tokens)[:max(n - 1, 0)]
+            pool.incref(shared)
+            fresh = pool.alloc(n - len(shared))
+            if fresh is None:
+                pool.decref(shared)          # admission refused: roll back
+            else:
+                slots[slot] = [tuple(tokens), list(shared) + fresh,
+                               len(shared), False]
+        elif kind == 1 and slot in slots:
+            _, pages, _, _ = slots.pop(slot)
+            pool.decref(pages)
+        elif kind == 2 and slot in slots:
+            tokens, pages, _, _ = slots[slot]
+            index.insert(tokens, pages)
+            slots[slot][3] = True
+        elif kind == 3:
+            index.reclaim(a % num_pages)
+        check()
+    # teardown: evicting everything must return the pool to fully free
+    for _, pages, _, _ in slots.values():
+        pool.decref(pages)
+    index.reclaim(num_pages)
+    assert pool.pages_free == num_pages
+
+
+def test_pool_conservation_seeded_sweep():
+    """Deterministic stand-in for the hypothesis property: 200 seeded random
+    interleavings of admit/evict/publish/reclaim."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        n_ops = int(rng.integers(1, 40))
+        ops = rng.integers(0, 64, (n_ops, 3)).tolist()
+        _run_ops(ops)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 63), st.integers(0, 63),
+                              st.integers(0, 63)), max_size=40))
+    def test_pool_conservation_property(ops):
+        _run_ops(ops)
+
+
+def test_pool_alloc_all_or_nothing():
+    pool = PagePool(4, 8)
+    assert pool.alloc(5) is None and pool.pages_free == 4
+    got = pool.alloc(4)
+    assert sorted(got) == [0, 1, 2, 3] and pool.pages_free == 0
+    assert pool.alloc(1) is None
+    assert pool.decref(got) == got
+    assert pool.pages_free == 4
+
+
+def test_pool_guards_double_free_and_free_incref():
+    pool = PagePool(2, 8)
+    (p,) = pool.alloc(1)
+    pool.decref([p])
+    with pytest.raises(RuntimeError, match="double free"):
+        pool.decref([p])
+    with pytest.raises(RuntimeError, match="incref of free"):
+        pool.incref([p])
+
+
+def test_prefix_index_match_insert_reclaim():
+    pool = PagePool(8, 4)
+    index = PrefixIndex(pool)
+    toks = list(range(10))                      # 2 full pages + remainder
+    pages = pool.alloc(3)
+    assert index.match(toks) == []
+    assert index.insert(toks, pages) == 2       # only full pages indexed
+    assert index.match(toks) == pages[:2]
+    assert index.match(toks[:7]) == pages[:1]   # partial second page: 1 hit
+    assert index.match([99] + toks[1:]) == []
+    # slot evicts; index refs keep both published pages alive
+    freed = pool.decref(pages)
+    assert freed == [pages[2]]
+    assert index.reclaim(pool.num_pages) == 2
+    assert pool.pages_free == pool.num_pages
+
+
+def test_prefix_index_reclaim_is_lru():
+    pool = PagePool(8, 2)
+    index = PrefixIndex(pool)
+    a, b = pool.alloc(1), pool.alloc(1)
+    index.insert([1, 2], a)
+    index.insert([3, 4], b)
+    pool.decref(a + b)
+    index.match([1, 2])                         # touch a: b is now LRU
+    index.reclaim(7)                            # needs one eviction
+    assert index.match([1, 2]) == a
+    assert index.match([3, 4]) == []
+
+
+# ---------------------------------------------------------------------------
+# cache tier: preallocated paging is bit-for-bit the contiguous layout
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = registry.get_config("internlm2-20b", ffn="fff").reduced()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_prealloc_paged_generate_matches_contiguous(model):
+    """``lm.generate`` through an identity-table paged cache must reproduce
+    the contiguous cache token-for-token: gathering a preallocated table is
+    exactly the old per-slot layout."""
+    cfg, params = model
+    prompt = jnp.asarray(np.random.default_rng(1).integers(1, 256, (2, 12)))
+    want = lm.generate(params, cfg, prompt, steps=6, max_len=32)
+    caches = lm.init_caches(cfg, 2, 32, page_size=8, prealloc=True)
+    got = lm.generate(params, cfg, prompt, steps=6, max_len=32,
+                      caches=caches)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# engine tier
+# ---------------------------------------------------------------------------
+
+def _paged_engine(cfg, params, **kw):
+    defaults = dict(num_slots=4, max_len=48, max_prompt_len=16, page_size=8,
+                    seed=0)
+    defaults.update(kw)
+    return ContinuousBatchingEngine(params, cfg, EngineConfig(**defaults))
+
+
+def _shared_prefix_requests(n, rng, shared=8, max_new=6):
+    system = rng.integers(1, 256, shared)
+    reqs = []
+    for i in range(n):
+        suffix = rng.integers(1, 256, int(rng.integers(1, 9)))
+        reqs.append(Request(rid=i, prompt=np.concatenate([system, suffix]),
+                            max_new_tokens=max_new))
+    return reqs
+
+
+def test_paged_engine_matches_lm_generate_and_shares(model):
+    """The headline: paged serving with prefix sharing is exact (every
+    request token-identical to ``lm.generate``) while genuinely sharing
+    pages across requests."""
+    cfg, params = model
+    eng = _paged_engine(cfg, params)
+    reqs = _shared_prefix_requests(8, np.random.default_rng(2))
+    results, m = eng.run(reqs)
+    assert sorted(r.rid for r in results) == list(range(8))
+    for r in results:
+        want = lm.generate(params, cfg, jnp.asarray(r.prompt[None]),
+                           steps=r.n_generated, max_len=48)
+        np.testing.assert_array_equal(
+            np.asarray(want)[0], np.concatenate([r.prompt, r.tokens]),
+            err_msg=f"rid {r.rid}")
+    assert m.prefix_hit_tokens > 0, "no pages were shared"
+    assert m.prefill_tokens < sum(len(r.prompt) for r in reqs)
+    # run() drains everything: all pages back to the index or free
+    assert all(s is None for s in eng.slots)
+
+
+def test_paged_engine_mixed_requests_exact(model):
+    """No shared prefixes at all: paging must still be exact (the PR 2
+    parity test's workload through the paged path)."""
+    cfg, params = model
+    eng = _paged_engine(cfg, params)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=rng.integers(1, 256, int(rng.integers(3, 17))),
+                    max_new_tokens=6) for i in range(6)]
+    results, _ = eng.run(reqs)
+    for r in results:
+        want = lm.generate(params, cfg, jnp.asarray(r.prompt[None]),
+                           steps=r.n_generated, max_len=48)
+        np.testing.assert_array_equal(
+            np.asarray(want)[0], np.concatenate([r.prompt, r.tokens]),
+            err_msg=f"rid {r.rid}")
+
+
+def test_paged_engine_chunked_and_spec_modes(model):
+    """Paging composes with chunked prefill and speculative decoding: both
+    alternate engine modes stay exact on a shared-prefix workload."""
+    cfg, params = model
+    rng = np.random.default_rng(4)
+    reqs = _shared_prefix_requests(6, rng)
+    for kw in ({"prefill_chunk": 8}, {"spec_k": 3}):
+        eng = _paged_engine(cfg, params, **kw)
+        results, m = eng.run([Request(rid=r.rid, prompt=r.prompt,
+                                      max_new_tokens=r.max_new_tokens)
+                              for r in reqs])
+        for r in results:
+            want = lm.generate(params, cfg, jnp.asarray(r.prompt[None]),
+                               steps=r.n_generated, max_len=48)
+            np.testing.assert_array_equal(
+                np.asarray(want)[0], np.concatenate([r.prompt, r.tokens]),
+                err_msg=f"{kw} rid {r.rid}")
+        assert m.prefix_hit_tokens > 0, kw
+
+
+def test_paged_engine_pool_exhaustion_backpressure(model):
+    """A pool too small for two long concurrent requests must serialize
+    them (queue the second) rather than fail or corrupt."""
+    cfg, params = model
+    # 6 pages of 8 = 48 tokens of pool; each request needs 16+6+1 -> 3 pages
+    eng = _paged_engine(cfg, params, num_pages=6)
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=i, prompt=rng.integers(1, 256, 16), max_new_tokens=6)
+            for i in range(4)]
+    results, _ = eng.run(reqs)
+    assert sorted(r.rid for r in results) == list(range(4))
+    for r in results:
+        want = lm.generate(params, cfg, jnp.asarray(r.prompt[None]),
+                           steps=r.n_generated, max_len=48)
+        np.testing.assert_array_equal(
+            np.asarray(want)[0], np.concatenate([r.prompt, r.tokens]),
+            err_msg=f"rid {r.rid}")
+
+
+def test_paged_engine_compile_contract(model):
+    """Paging keeps the fixed-compiled-shape contract: decode 1 / admit 1 /
+    <= 1 per prefill bucket across two waves."""
+    cfg, params = model
+    eng = _paged_engine(cfg, params, prefill_buckets=(8, 16))
+    rng = np.random.default_rng(6)
+    eng.run(_shared_prefix_requests(5, rng))
+    warm = eng.compiled_shapes()
+    eng.run(_shared_prefix_requests(7, rng))
+    after = eng.compiled_shapes()
+    assert after == warm, "recompilation after warmup"
+    assert after["decode"] == 1
+    assert after["admit"] == 1
+    assert all(v <= 1 for k, v in after.items() if k.startswith("prefill_"))
+
+
+def test_engine_metrics_expose_pool_state(model):
+    cfg, params = model
+    eng = _paged_engine(cfg, params)
+    _, m = eng.run(_shared_prefix_requests(4, np.random.default_rng(7)))
+    d = m.as_dict()
+    for k in ("prefill_tokens", "prefix_hit_tokens", "cow_copies",
+              "pages_in_use", "pages_free"):
+        assert k in d, k
+    assert d["pages_in_use"] + d["pages_free"] == eng.pool.num_pages
+
+
+# ---------------------------------------------------------------------------
+# RoutingProfileStore LRU cap (ISSUE 7 satellite)
+# ---------------------------------------------------------------------------
+
+def test_profile_store_lru_cap_warns_once():
+    store = RoutingProfileStore(4, max_tenants=2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        for t in ("a", "b", "c", "d"):
+            store.update(t, np.ones(4))
+    assert store.n_evicted == 2
+    assert store.tenants() == ["c", "d"]
+    evict_warns = [x for x in w if "evicted tenant" in str(x.message)]
+    assert len(evict_warns) == 1, "eviction must warn exactly once"
+    # lookup refreshes recency: 'c' survives the next eviction
+    store.lookup("c")
+    store.update("e", np.ones(4))
+    assert store.tenants() == ["c", "e"]
+    # update refreshes too, and existing-tenant updates never evict
+    store.update("c", np.ones(4))
+    assert store.n_evicted == 3
+    assert store.tenants() == ["c", "e"]
+
+
+def test_profile_store_uncapped_by_zero():
+    store = RoutingProfileStore(4, max_tenants=0)
+    for i in range(64):
+        store.update(f"t{i}", np.ones(4))
+    assert store.n_evicted == 0 and len(store.tenants()) == 64

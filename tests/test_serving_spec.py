@@ -214,7 +214,7 @@ def test_spec_fixed_compiled_shapes(model):
     assert after == warm, "recompilation after warmup"
     assert after["spec_round"] == 1
     assert after["decode"] == 0                       # replaced by the round
-    assert after["evict"] == 1
+    assert after["admit"] == 1
     assert all(v <= 1 for k, v in after.items() if k.startswith("prefill_"))
 
 
