@@ -44,6 +44,12 @@ SCHEMAS = {
                        "gen", "prefill_ratio", "prefill_gate", "prefill_ok",
                        "ttft_ok", "parity_checked", "compile_ok",
                        "compiled_shapes", "runs"}, "runs"),
+    "serving_cluster": ({"bench", "quick", "topology", "page_size", "gen",
+                         "speedup", "speedup_gate", "speedup_ok", "kill_ok",
+                         "lost_requests", "parity_checked", "worker_restarts",
+                         "replayed_requests", "duplicate_results", "scale_ok",
+                         "scale_events", "compile_ok", "compiled_shapes",
+                         "runs"}, "runs"),
 }
 
 

@@ -27,6 +27,11 @@
              contiguous cache on a shared-system-prompt workload:
              prefill-token ratio gate, TTFT, exact parity, compile contract
              (DESIGN.md §11; writes BENCH_serving_paged.json)
+  serving_cluster -> disaggregated prefill/decode cluster vs one colocated
+             engine at equal total slots: throughput gate, worker-kill
+             replay with exact parity, elastic scale-up/down, per-role
+             compile contract (DESIGN.md §12; writes
+             BENCH_serving_cluster.json)
 
 ``python -m benchmarks.run`` runs the quick profile (CPU-sized, ~minutes);
 ``python -m benchmarks.run --full`` runs the paper-scale grids.
@@ -47,13 +52,13 @@ def main() -> None:
                     help="comma-separated subset: table1,fig2,table2,fig34,"
                          "table3,roofline,ep_dispatch,serving,"
                          "serving_chunked,serving_qos,serving_spec,"
-                         "serving_paged")
+                         "serving_paged,serving_cluster")
     args = ap.parse_args()
 
     from benchmarks import (ep_dispatch, fig2, fig34, roofline_bench,
-                            serving_chunked, serving_load, serving_paged,
-                            serving_qos, serving_spec, table1, table2,
-                            table3)
+                            serving_chunked, serving_cluster, serving_load,
+                            serving_paged, serving_qos, serving_spec,
+                            table1, table2, table3)
     suites = {
         "table1": table1.main,
         "fig2": fig2.main,
@@ -67,6 +72,7 @@ def main() -> None:
         "serving_qos": serving_qos.main,
         "serving_spec": serving_spec.main,
         "serving_paged": serving_paged.main,
+        "serving_cluster": serving_cluster.main,
     }
     selected = (args.only.split(",") if args.only else list(suites))
     failures = []

@@ -1,0 +1,285 @@
+"""Disaggregated prefill/decode cluster benchmark: router + prefill +
+decode workers vs one colocated engine (DESIGN.md §12).
+
+Three gates, one artifact:
+
+* throughput — a 1-prefill + 2-decode LocalBus cluster must move >=
+  ``SPEEDUP_GATE``x the tokens/s of a single engine with the same total
+  slot count on a long-prompt-heavy mixed workload.  The win is
+  structural, not parallelism (LocalBus steps workers sequentially in one
+  process): compiled shapes are fixed at ``(num_slots, ...)``, so every
+  monolithic admission on the colocated 10-slot engine pays a
+  ``(10, bucket)`` slab for one admitted row, while the cluster's 2-slot
+  prefill worker pays ``(2, bucket)`` for the same prompt — decode
+  capacity stops inflating prompt processing the moment the roles split.
+* fault tolerance — SIGKILL-equivalent loss of a decode worker mid-stream
+  (LocalBus ``failure_hook`` + virtual-time heartbeat timeout) must lose
+  zero requests and change zero tokens: every result is compared
+  token-for-token against the synchronous ``lm.generate`` path, and the
+  Done dedup must report no duplicate results.
+* elasticity — queue pressure on a 1-decode fleet must emit a
+  ``scale_up`` (worker spawned mid-run), and the drained idle fleet must
+  emit a ``scale_down``.
+
+Also asserts the per-worker compile contract from heartbeat telemetry:
+decode workers compile decode 1 / install <= 1 and never admit; prefill
+workers compile admit 1 / <= 1 shape per bucket and never decode.
+
+Emits CSV rows ``serving_cluster,<name>,<tok_s>,<ttft_mean_ms>,
+<n_requests>,<restarts>,<replayed>`` and writes
+``experiments/BENCH_serving_cluster.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ARTIFACT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "BENCH_serving_cluster.json")
+
+PAGE = 16            # KV page size everywhere
+MAX_PROMPT = 96      # long prompts pad to the 128 bucket
+GEN = 6              # short generations: the workload is prefill-bound
+D_MODEL = 256        # wide enough that slab FLOPs dominate dispatch overhead
+PREFILL_SLOTS = 2
+DECODE_SLOTS = 4     # 1 prefill + 2 decode = 10 slots, vs a 10-slot engine
+SPEEDUP_GATE = 1.5
+KILL_PROMPT = 32     # fixed-shape kill run: lm.generate compiles once
+
+
+def _ecfg(num_slots: int, *, max_prompt: int = MAX_PROMPT, seed: int = 0):
+    from repro.serving import EngineConfig
+    return EngineConfig(num_slots=num_slots, max_len=max_prompt + GEN + 1,
+                        max_prompt_len=max_prompt, page_size=PAGE, seed=seed)
+
+
+def make_workload(n: int, seed: int, *, rid0: int = 0):
+    """Long-prompt-heavy mix: 3 of 4 prompts land in the top bucket."""
+    import numpy as np
+
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        if i % 4 == 3:
+            plen = int(rng.integers(8, 13))               # 16 bucket
+        else:
+            plen = int(rng.integers(72, MAX_PROMPT - 7))  # 128 bucket
+        reqs.append(Request(rid=rid0 + i,
+                            prompt=rng.integers(1, 256, plen),
+                            max_new_tokens=GEN))
+    return reqs
+
+
+def build_cluster(params, cfg, *, n_prefill: int, n_decode: int, clock,
+                  control=None, failure_hooks=None, tick_dt: float = 0.0,
+                  heartbeat_every: int = 1):
+    """LocalBus fleet sharing one param tree; every engine on ``clock``."""
+    from repro.cluster import ClusterConfig, ClusterWorker, LocalBus, Router
+    from repro.cluster.control import ControlConfig
+    from repro.serving import ContinuousBatchingEngine
+    engines = {}
+
+    def factory(wid, role):
+        slots = PREFILL_SLOTS if role == "prefill" else DECODE_SLOTS
+        eng = ContinuousBatchingEngine(params, cfg, _ecfg(slots),
+                                       clock=clock)
+        engines[wid] = eng
+        hook = (failure_hooks or {}).get(wid)
+        return ClusterWorker(wid, role, eng, failure_hook=hook,
+                             heartbeat_every=heartbeat_every)
+
+    bus = LocalBus(factory, clock=clock, tick_dt=tick_dt)
+    ctrl = control or ControlConfig(heartbeat_timeout=1e9,
+                                    scale_up_watermark=1e9,
+                                    scale_down_watermark=-1.0)
+    router = Router(bus, ClusterConfig(n_prefill=n_prefill,
+                                       n_decode=n_decode, page_size=PAGE,
+                                       control=ctrl), clock=clock)
+    router.start()
+    return router, engines
+
+
+def run_throughput(params, cfg, n_requests: int, seed: int):
+    """Gate (a): cluster vs colocated engine, equal total slots, wall
+    clock, compiles burned by a warmup pass on both sides."""
+    from repro.serving import ContinuousBatchingEngine
+    warm = make_workload(8, seed + 50, rid0=10_000)
+    reqs = make_workload(n_requests, seed)
+
+    total = PREFILL_SLOTS + 2 * DECODE_SLOTS
+    single = ContinuousBatchingEngine(params, cfg, _ecfg(total))
+    single.run(warm)
+    t0 = time.monotonic()
+    _, m_single = single.run(reqs)
+    single_s = time.monotonic() - t0
+
+    router, engines = build_cluster(params, cfg, n_prefill=1, n_decode=2,
+                                    clock=time.monotonic, heartbeat_every=2)
+    router.run(make_workload(8, seed + 50, rid0=20_000))   # warmup
+    router.results.clear()        # Router.run returns accumulated results
+    t0 = time.monotonic()
+    results = router.run(make_workload(n_requests, seed))  # same workload
+    cluster_s = time.monotonic() - t0
+    m_cluster = router.metrics(elapsed_s=cluster_s)
+    assert len(results) == n_requests, "cluster lost requests"
+
+    shapes = {w: dict(e.compiled_shapes())
+              for w, e in sorted(engines.items()) if router.bus.alive(w)}
+    compile_ok = True
+    for wid, s in shapes.items():
+        if wid.startswith("d"):
+            compile_ok &= (s.get("decode", 0) == 1
+                           and s.get("admit", 0) == 0
+                           and s.get("install", 0) <= 1)
+        else:
+            compile_ok &= (s.get("admit", 0) == 1
+                           and s.get("decode", 0) == 0 and all(
+                               v <= 1 for k, v in s.items()
+                               if k.startswith("prefill_")))
+    return m_single, single_s, m_cluster, cluster_s, shapes, compile_ok
+
+
+def run_kill(params, cfg, n_requests: int, seed: int):
+    """Gate (b): lose a decode worker mid-stream; zero lost requests and
+    exact per-request ``lm.generate`` parity.  Virtual time drives the
+    heartbeat timeout so the run has no sleeps; prompts share one fixed
+    length so the parity check compiles a single shape."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.cluster.control import ControlConfig
+    from repro.serving import Request
+    from repro.serving.engine import VirtualClock
+
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i, prompt=rng.integers(1, 256, KILL_PROMPT),
+                    max_new_tokens=GEN) for i in range(n_requests)]
+    vc = VirtualClock()
+    ctrl = ControlConfig(heartbeat_timeout=0.05, max_restarts=3,
+                         scale_up_watermark=1e9, scale_down_watermark=-1.0)
+    router, _ = build_cluster(
+        params, cfg, n_prefill=1, n_decode=2, clock=vc, control=ctrl,
+        failure_hooks={"d0": lambda n: n == 6}, tick_dt=0.01)
+    results = router.run(reqs, max_ticks=20_000)
+
+    lost = {r.rid for r in reqs} - {r.rid for r in results}
+    max_len = KILL_PROMPT + GEN + 1
+    from repro.models import lm
+    n_parity = 0
+    for r in sorted(results, key=lambda r: r.rid):
+        want = lm.generate(params, cfg, jnp.asarray(r.prompt[None]),
+                           steps=r.n_generated, max_len=max_len)
+        np.testing.assert_array_equal(
+            np.asarray(want)[0, :len(r.prompt) + r.n_generated],
+            np.concatenate([r.prompt, r.tokens]), err_msg=f"rid {r.rid}")
+        n_parity += 1
+    cm = router.cluster_metrics()
+    kill_ok = (not lost and cm["worker_restarts"] == 1
+               and cm["replayed_requests"] >= 1
+               and cm["duplicate_results"] == 0)
+    return router.metrics(), cm, kill_ok, n_parity, sorted(lost)
+
+
+def run_elastic(params, cfg, n_requests: int, seed: int):
+    """Gate (c): queue pressure on a 1-decode fleet spawns a worker; the
+    drained idle fleet sheds it again."""
+    from repro.cluster.control import ControlConfig
+    from repro.serving.engine import VirtualClock
+
+    vc = VirtualClock()
+    ctrl = ControlConfig(heartbeat_timeout=1e9, scale_up_watermark=3.0,
+                         scale_down_watermark=0.5, watermark_ewma=1.0,
+                         scale_cooldown=0.02, min_decode=1, max_decode=2)
+    router, engines = build_cluster(params, cfg, n_prefill=1, n_decode=1,
+                                    clock=vc, control=ctrl, tick_dt=0.01)
+    results = router.run(make_workload(n_requests, seed), max_ticks=20_000)
+    for _ in range(600):                       # idle ticks: let it shed
+        if "scale_down" in [e["action"] for e in router.monitor.scale_events]:
+            break
+        router.step()
+    events = list(router.cluster_metrics()["scale_events"])
+    actions = [e["action"] for e in events]
+    scale_ok = (len(results) == n_requests and "scale_up" in actions
+                and "scale_down" in actions)
+    return router.metrics(), events, scale_ok
+
+
+def main(quick: bool = True) -> None:
+    import jax
+
+    from repro.configs import registry
+    from repro.models import lm
+
+    seed = 0
+    n_requests = 24 if quick else 64
+    cfg = registry.get_config("internlm2-20b", ffn="fff").reduced(
+        d_model=D_MODEL, seq=MAX_PROMPT + GEN + 1)
+    params = lm.init(jax.random.PRNGKey(seed), cfg)
+
+    print("# name,tok_s,ttft_mean_ms,n_requests,restarts,replayed")
+    m_single, single_s, m_cluster, cluster_s, shapes, compile_ok = \
+        run_throughput(params, cfg, n_requests, seed + 1)
+    runs = {}
+    for name, m, el in [("single", m_single, single_s),
+                        ("cluster", m_cluster, cluster_s)]:
+        print(f"serving_cluster,{name},{m.throughput_tok_s:.1f},"
+              f"{m.ttft.mean_ms:.2f},{m.n_requests},0,0", flush=True)
+        runs[name] = {"elapsed_wall_s": el, **m.as_dict()}
+    speedup = (m_cluster.throughput_tok_s
+               / max(m_single.throughput_tok_s, 1e-9))
+    speedup_ok = speedup >= SPEEDUP_GATE
+    print(f"# throughput {m_single.throughput_tok_s:.1f} -> "
+          f"{m_cluster.throughput_tok_s:.1f} tok/s = {speedup:.2f}x "
+          f"({'PASS' if speedup_ok else 'FAIL'} vs {SPEEDUP_GATE}x gate)")
+    print(f"# compiled shapes {shapes} -> "
+          f"{'PASS' if compile_ok else 'FAIL'} (per-role contract)")
+
+    m_kill, cm, kill_ok, n_parity, lost = run_kill(
+        params, cfg, 12 if quick else 24, seed + 2)
+    print(f"serving_cluster,kill,{m_kill.throughput_tok_s:.1f},"
+          f"{m_kill.ttft.mean_ms:.2f},{m_kill.n_requests},"
+          f"{cm['worker_restarts']},{cm['replayed_requests']}", flush=True)
+    runs["kill"] = {"elapsed_wall_s": 0.0, **m_kill.as_dict()}
+    print(f"# kill: lost={lost} restarts={cm['worker_restarts']} "
+          f"replayed={cm['replayed_requests']} "
+          f"dups={cm['duplicate_results']} parity={n_parity} exact -> "
+          f"{'PASS' if kill_ok else 'FAIL'}")
+
+    m_el, events, scale_ok = run_elastic(params, cfg, 10 if quick else 20,
+                                         seed + 3)
+    print(f"serving_cluster,elastic,{m_el.throughput_tok_s:.1f},"
+          f"{m_el.ttft.mean_ms:.2f},{m_el.n_requests},0,0", flush=True)
+    runs["elastic"] = {"elapsed_wall_s": 0.0, **m_el.as_dict()}
+    print(f"# elastic: {[e['action'] for e in events]} -> "
+          f"{'PASS' if scale_ok else 'FAIL'} (scale_up + scale_down)")
+
+    with open(ARTIFACT, "w") as f:
+        json.dump({"bench": "serving_cluster", "quick": quick,
+                   "topology": {"n_prefill": 1, "n_decode": 2,
+                                "prefill_slots": PREFILL_SLOTS,
+                                "decode_slots": DECODE_SLOTS,
+                                "single_slots": PREFILL_SLOTS
+                                + 2 * DECODE_SLOTS},
+                   "page_size": PAGE, "gen": GEN,
+                   "speedup": speedup, "speedup_gate": SPEEDUP_GATE,
+                   "speedup_ok": speedup_ok,
+                   "kill_ok": kill_ok, "lost_requests": lost,
+                   "parity_checked": n_parity,
+                   "worker_restarts": cm["worker_restarts"],
+                   "replayed_requests": cm["replayed_requests"],
+                   "duplicate_results": cm["duplicate_results"],
+                   "scale_ok": scale_ok, "scale_events": events,
+                   "compile_ok": compile_ok, "compiled_shapes": shapes,
+                   "runs": runs}, f, indent=1)
+    print(f"# wrote {ARTIFACT}")
+    if not (speedup_ok and kill_ok and scale_ok and compile_ok):
+        raise AssertionError(
+            f"serving_cluster gates failed: speedup_ok={speedup_ok} "
+            f"kill_ok={kill_ok} scale_ok={scale_ok} "
+            f"compile_ok={compile_ok}")
+
+
+if __name__ == "__main__":
+    main()

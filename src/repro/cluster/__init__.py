@@ -1,0 +1,12 @@
+"""Disaggregated prefill/decode serving cluster (DESIGN.md §12).
+
+Layers: transport (bus.py) < worker (worker.py) < control plane
+(router.py + placement.py + control.py), with handoff.py carrying KV
+pages across the prefill→decode boundary.
+"""
+from repro.cluster.bus import LocalBus, ProcBus, WorkerKilled
+from repro.cluster.control import ClusterMonitor, ControlConfig
+from repro.cluster.handoff import KVHandoff
+from repro.cluster.placement import WorkerView, choose_decode, choose_prefill
+from repro.cluster.router import ClusterConfig, GlobalPrefixMap, Router
+from repro.cluster.worker import ClusterWorker, WorkerSpec, build_engine

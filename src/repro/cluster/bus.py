@@ -1,0 +1,256 @@
+"""Cluster transport: message types + the two pluggable buses (DESIGN.md
+§12).
+
+Topology is a star: the router owns one control-plane mailbox; every worker
+has an inbox the router posts to (``send``) and all worker→router traffic
+funnels back through ``poll``.  Two implementations share that contract:
+
+* ``LocalBus`` — in-process, deterministic.  Workers are plain objects
+  stepped round-robin in wid order by ``pump()``; with a ``VirtualClock``
+  the whole cluster (heartbeats, timeouts, elastic watermarks) runs in
+  virtual time with zero sleeps.  Failure injection: a worker whose
+  ``failure_hook`` fires raises ``WorkerKilled`` and the bus drops it cold
+  — undelivered inbox and all — exactly like a crashed process.
+* ``ProcBus`` — ``multiprocessing`` (spawn context: jax is not fork-safe),
+  one process per worker, ``Queue`` mailboxes.  Workers rebuild params
+  from ``(cfg, seed)`` inside their process (determinism makes the rebuild
+  exact; pickling a sharded param tree would not survive the trip).
+  ``kill()`` SIGKILLs — the fault-injection path ``serve.py
+  --cluster-kill`` and the CI worker-kill e2e use.
+
+Both buses surface liveness (``alive``) but neither *interprets* it: dead-
+worker detection is the monitor's heartbeat-timeout logic (control.py), so
+tests can exercise replay without a real process dying.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue as queue_lib
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cluster.handoff import KVHandoff
+from repro.serving.request import Request, RequestResult
+
+
+# -- router -> worker ------------------------------------------------------
+
+@dataclasses.dataclass
+class Submit:
+    """Admit this request on a prefill worker."""
+    req: Request
+
+
+@dataclasses.dataclass
+class Install:
+    """Take ownership of a completed prefill (decode worker)."""
+    handoff: KVHandoff
+
+
+@dataclasses.dataclass
+class Drain:
+    """Finish in-flight work, accept nothing new, report ``Drained``."""
+
+
+@dataclasses.dataclass
+class Stop:
+    """Exit after the current step (final stats ride the ``Bye``)."""
+
+
+# -- worker -> router ------------------------------------------------------
+
+@dataclasses.dataclass
+class PrefillDone:
+    """A prompt's KV pages are ready to travel (router places the decode)."""
+    wid: str
+    handoff: KVHandoff
+
+
+@dataclasses.dataclass
+class Done:
+    """A request finished on this worker."""
+    wid: str
+    result: RequestResult
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    """Per-step liveness + the placement signals (``poll_metrics`` slice)."""
+    wid: str
+    role: str
+    t: float                        # sender's cluster clock
+    n_ticks: int
+    pages_free: int = 0
+    pages_total: int = 0
+    queue_depth: int = 0            # engine queue + pending installs
+    active_slots: int = 0
+    num_slots: int = 0
+    occupancy: Optional[np.ndarray] = None   # live leaf footprint (mean)
+    profiles: Optional[dict] = None          # learned per-tenant footprints
+    compiled_shapes: Optional[dict] = None
+    handoff_bytes: int = 0
+    draining: bool = False
+
+
+@dataclasses.dataclass
+class Drained:
+    wid: str
+
+
+@dataclasses.dataclass
+class Bye:
+    """Final stats on clean shutdown (``Stop``)."""
+    wid: str
+    compiled_shapes: dict
+    metrics: dict
+
+
+class WorkerKilled(Exception):
+    """Raised inside a LocalBus worker tick to simulate a crash."""
+
+    def __init__(self, wid: str):
+        super().__init__(f"worker {wid} killed")
+        self.wid = wid
+
+
+class LocalBus:
+    """Deterministic in-process transport (module docstring).
+
+    ``factory(wid, role)`` builds a ``cluster.worker.ClusterWorker``; the
+    bus steps live workers in sorted-wid order each ``pump()`` and
+    advances ``clock`` by ``tick_dt`` when the clock supports it (a
+    ``VirtualClock``) so heartbeat timestamps move without wall time."""
+
+    def __init__(self, factory: Callable[[str, str], object],
+                 clock: Optional[Callable[[], float]] = None,
+                 tick_dt: float = 0.01):
+        self._factory = factory
+        self._workers: Dict[str, object] = {}
+        self._out: deque = deque()
+        self._clock = clock
+        self._tick_dt = tick_dt
+        self.dead: set = set()
+
+    def spawn(self, wid: str, role: str) -> None:
+        if wid in self._workers:
+            raise ValueError(f"worker {wid} already exists")
+        self._workers[wid] = self._factory(wid, role)
+
+    def send(self, wid: str, msg) -> bool:
+        w = self._workers.get(wid)
+        if w is None:
+            return False
+        w.inbox.append(msg)
+        return True
+
+    def pump(self) -> None:
+        for wid in sorted(self._workers):
+            w = self._workers[wid]
+            try:
+                self._out.extend(w.tick())
+            except WorkerKilled:
+                # a crash loses everything in the process: slot state,
+                # queued installs, the undelivered inbox — replay is the
+                # router's job once the heartbeat times out
+                del self._workers[wid]
+                self.dead.add(wid)
+                continue
+            if w.stopped:
+                del self._workers[wid]
+        adv = getattr(self._clock, "advance", None)
+        if adv is not None and self._tick_dt > 0:
+            adv(self._tick_dt)
+
+    def poll(self) -> List[object]:
+        msgs = list(self._out)
+        self._out.clear()
+        return msgs
+
+    def alive(self, wid: str) -> bool:
+        return wid in self._workers
+
+    def workers(self) -> List[str]:
+        return sorted(self._workers)
+
+    def kill(self, wid: str) -> None:
+        self._workers.pop(wid, None)
+        self.dead.add(wid)
+
+    def close(self) -> None:
+        self._workers.clear()
+        self._out.clear()
+
+
+class ProcBus:
+    """``multiprocessing`` transport (module docstring).  ``make_spec(wid,
+    role)`` returns a picklable ``cluster.worker.WorkerSpec``; each spawn
+    starts a daemon process running ``cluster.worker.worker_main``."""
+
+    def __init__(self, make_spec: Callable[[str, str], object]):
+        import multiprocessing as mp
+        self._ctx = mp.get_context("spawn")   # jax is not fork-safe
+        self._make_spec = make_spec
+        self._procs: Dict[str, Tuple[object, object]] = {}
+        self._out_q = self._ctx.Queue()
+        self.dead: set = set()
+
+    def spawn(self, wid: str, role: str) -> None:
+        if wid in self._procs:
+            raise ValueError(f"worker {wid} already exists")
+        from repro.cluster.worker import worker_main
+        spec = self._make_spec(wid, role)
+        inbox = self._ctx.Queue()
+        p = self._ctx.Process(target=worker_main,
+                              args=(spec, inbox, self._out_q), daemon=True)
+        p.start()
+        self._procs[wid] = (p, inbox)
+
+    def send(self, wid: str, msg) -> bool:
+        entry = self._procs.get(wid)
+        if entry is None:
+            return False
+        entry[1].put(msg)
+        return True
+
+    def pump(self) -> None:
+        pass                                  # workers run their own loops
+
+    def poll(self) -> List[object]:
+        # first get blocks briefly so an idle router doesn't busy-spin its
+        # tick budget away while workers are still starting up / compiling
+        try:
+            msgs = [self._out_q.get(timeout=0.01)]
+        except queue_lib.Empty:
+            return []
+        while True:
+            try:
+                msgs.append(self._out_q.get_nowait())
+            except queue_lib.Empty:
+                break
+        return msgs
+
+    def alive(self, wid: str) -> bool:
+        entry = self._procs.get(wid)
+        return entry is not None and entry[0].is_alive()
+
+    def workers(self) -> List[str]:
+        return sorted(self._procs)
+
+    def kill(self, wid: str) -> None:
+        """SIGKILL — the fault-injection path (no cleanup, no goodbye)."""
+        entry = self._procs.pop(wid, None)
+        if entry is not None:
+            entry[0].kill()
+            entry[0].join(timeout=5)
+        self.dead.add(wid)
+
+    def close(self) -> None:
+        for wid in list(self._procs):
+            p, inbox = self._procs.pop(wid)
+            inbox.put(Stop())
+            p.join(timeout=10)
+            if p.is_alive():
+                p.kill()
+                p.join(timeout=5)

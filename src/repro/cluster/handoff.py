@@ -1,0 +1,213 @@
+"""KV-cache handoff between cluster workers (DESIGN.md §12).
+
+The disaggregated serving tier splits prefill from decode: a prefill
+worker's engine computes a prompt's KV pages, then the pages themselves
+travel to whichever decode worker placement picked.  This module is both
+ends of that wire:
+
+* ``extract(engine, slot)`` — gather the slot's allocated pool pages to the
+  host in ONE fixed-shape device gather per cache tree (the page-id vector
+  is padded to ``ppr`` so the gather compiles once), truncate to the pages
+  that actually hold prompt K/V, and pack them with the request, the first
+  sampled token, and the slot's measured leaf-occupancy row into a
+  picklable ``KVHandoff``.  The caller then releases the slot WITHOUT
+  minting a result (``engine.release_slot(slot, record_result=False)``) —
+  ownership of the request moves with the handoff.
+* ``install(engine, handoff)`` — on the decode worker: fund pages for the
+  full ``prompt + max_new`` horizon from the local pool (all-or-nothing —
+  a short pool returns None and the worker re-queues the handoff, which is
+  the cluster's backpressure signal), then scatter the shipped rows and
+  install table + length in ONE jitted dispatch (``lm.cache_install`` —
+  the decode-side analogue of the prefill ``admit`` dispatch, one compiled
+  shape for the engine's lifetime), and rebuild the host-side
+  ``SlotState`` so the engine decodes the request as if it had prefilled
+  it locally.
+
+Determinism makes this exact: sampling is keyed by ``(seed, rid,
+len(tokens))`` on whichever engine holds the slot, so a request decoded
+after handoff emits byte-identical tokens to one served end-to-end by a
+single engine — the property the fault-injection parity tests pin down.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.serving.request import Request, SlotState
+
+
+@dataclasses.dataclass
+class KVHandoff:
+    """A completed prefill, packed for the wire (picklable: numpy + request).
+
+    ``k_rows[c]`` / ``v_rows[c]`` align with the engine's cache list; each
+    is ``(n_periods, n_pages, page_size, K, hd)`` — only the pages holding
+    prompt K/V ship (``n_pages = ceil(prompt_len / page_size)``); the
+    receiver zero-pads to its table width.  ``draft_*`` carry the draft
+    tree when the cluster runs speculative decoding (same page geometry)."""
+    request: Request
+    tokens: List[int]                 # sampled at prefill completion (>= 1)
+    prompt_len: int
+    page_size: int
+    n_pages: int
+    k_rows: List[np.ndarray]
+    v_rows: List[np.ndarray]
+    draft_k_rows: Optional[List[np.ndarray]] = None
+    draft_v_rows: Optional[List[np.ndarray]] = None
+    occupancy: Optional[np.ndarray] = None   # slot's leaf footprint row
+    measured: bool = False
+
+    @property
+    def nbytes(self) -> int:
+        rows = (self.k_rows + self.v_rows
+                + (self.draft_k_rows or []) + (self.draft_v_rows or []))
+        return int(sum(a.nbytes for a in rows))
+
+
+def _gather_rows(caches, idx: jax.Array, n_keep: int) -> tuple:
+    """Host-side copies of the pool pages named by ``idx`` (fixed (ppr,)
+    shape — ONE gather shape per cache config), truncated to ``n_keep``."""
+    k_rows, v_rows = [], []
+    for c in caches:
+        kv = c["kv"]
+        k_rows.append(np.asarray(kv.k[:, idx])[:, :n_keep])
+        v_rows.append(np.asarray(kv.v[:, idx])[:, :n_keep])
+    return k_rows, v_rows
+
+
+def extract(engine, slot: int) -> KVHandoff:
+    """Package slot ``slot``'s completed prefill for shipment (module
+    docstring).  The slot must hold a non-done occupant whose prefill has
+    completed (>= 1 sampled token); the caller releases the slot after."""
+    st = engine.slots[slot]
+    if st is None or st.prefilling or not st.tokens:
+        raise ValueError(f"slot {slot} has no completed prefill to extract")
+    pages = engine._slot_pages[slot]
+    page = engine._page
+    L = len(st.request.prompt)
+    n_keep = -(-L // page)              # pages that actually hold prompt K/V
+    idx = np.full((engine._ppr,), pages[0], np.int32)
+    idx[:len(pages)] = pages            # pad with a real page: dup gather
+    idx_j = jnp.asarray(idx)            # rows past n_keep are dropped below
+    k_rows, v_rows = _gather_rows(engine.caches, idx_j, n_keep)
+    dk = dv = None
+    if engine.spec:
+        dk, dv = _gather_rows(engine.draft_caches, idx_j, n_keep)
+    occ = engine.occupancy[slot].copy() if engine.num_leaves else None
+    return KVHandoff(
+        request=st.request, tokens=list(st.tokens), prompt_len=L,
+        page_size=page, n_pages=n_keep, k_rows=k_rows, v_rows=v_rows,
+        draft_k_rows=dk, draft_v_rows=dv, occupancy=occ,
+        measured=bool(engine._measured[slot]))
+
+
+def _install_jit_for(engine):
+    """The receive dispatch, built lazily per engine (donated caches; the
+    compile count surfaces in ``engine.compiled_shapes()['install']``)."""
+    jit = getattr(engine, "_cluster_install_jit", None)
+    if jit is not None:
+        return jit
+    don = ((lambda *i: {}) if jax.default_backend() == "cpu"
+           else (lambda *i: {"donate_argnums": i}))
+    if engine.spec:
+        jit = jax.jit(
+            lambda c, dc, ad, tb, ln, pg, kr, vr, dkr, dvr: (
+                lm.cache_install(c, ad, tb, ln, pg, kr, vr),
+                lm.cache_install(dc, ad, tb, ln, pg, dkr, dvr)),
+            **don(0, 1))
+    else:
+        jit = jax.jit(lm.cache_install, **don(0))
+    engine._cluster_install_jit = jit
+    return jit
+
+
+def install(engine, h: KVHandoff) -> Optional[int]:
+    """Install ``h`` into a free slot of ``engine`` (module docstring).
+
+    Returns the slot index, or None when the worker can't take it yet (no
+    free slot, or the pool can't fund the full generation horizon even
+    after index reclaim) — the caller keeps the handoff queued."""
+    if h.page_size != engine._page:
+        raise ValueError(f"handoff page size {h.page_size} != receiving "
+                         f"engine page size {engine._page}")
+    if engine.spec and h.draft_k_rows is None:
+        raise ValueError("speculative engine requires the draft cache tree "
+                         "in the handoff")
+    free = [i for i, s in enumerate(engine.slots) if s is None]
+    if not free:
+        return None
+    req = h.request
+    L = h.prompt_len
+    n_total = -(-(L + req.max_new_tokens) // engine._page)
+    if engine.pool.pages_free < n_total:
+        engine.prefix.reclaim(n_total)
+    pages = engine.pool.alloc(n_total)
+    if pages is None:
+        return None
+    slot = free[0]
+    S, ppr, sentinel = engine.ecfg.num_slots, engine._ppr, engine._num_pages
+    admit = np.zeros((S,), bool)
+    admit[slot] = True
+    tables = np.full((S, ppr), sentinel, np.int32)
+    tables[slot, :n_total] = pages
+    lengths = np.zeros((S,), np.int32)
+    lengths[slot] = L
+    # destination pages for the shipped rows: generation-room pages past
+    # n_pages receive the zero padding (fresh pages tolerate it — nothing
+    # reads past the installed length), sentinel tail entries drop
+    dst = np.full((ppr,), sentinel, np.int32)
+    dst[:n_total] = pages
+
+    def pad(rows):
+        out = []
+        for r in rows:
+            buf = np.zeros(r.shape[:1] + (ppr,) + r.shape[2:], r.dtype)
+            buf[:, :r.shape[1]] = r
+            out.append(jnp.asarray(buf))
+        return out
+
+    args = (jnp.asarray(admit), jnp.asarray(tables), jnp.asarray(lengths),
+            jnp.asarray(dst))
+    jit = _install_jit_for(engine)
+    with engine._ctx():
+        if engine.spec:
+            engine.caches, engine.draft_caches = jit(
+                engine.caches, engine.draft_caches, *args,
+                pad(h.k_rows), pad(h.v_rows),
+                pad(h.draft_k_rows), pad(h.draft_v_rows))
+        else:
+            engine.caches = jit(engine.caches, *args,
+                                pad(h.k_rows), pad(h.v_rows))
+    engine._slot_pages[slot] = list(pages)
+    engine._alloc_len[slot] = n_total * engine._page
+    engine._shared_len[slot] = 0
+    t = engine.now()
+    st = SlotState(request=req, admitted_time=t, first_token_time=t,
+                   tokens=list(h.tokens), total_len=L + len(h.tokens),
+                   prefill_pos=L)
+    engine.slots[slot] = st
+    engine._live_rids.add(req.rid)
+    engine._arrivals[id(req)] = t
+    if engine.spec:
+        engine._tlen[slot] = L
+        engine._dlen[slot] = L
+    if h.occupancy is not None and engine.num_leaves and \
+            h.occupancy.size == engine.num_leaves and h.occupancy.any():
+        engine.occupancy[slot] = h.occupancy
+        engine._measured[slot] = h.measured
+    # replay the stop checks on the shipped tokens (an EOS/length finish
+    # at prefill normally never ships, but a custom driver might)
+    for j, tok in enumerate(st.tokens):
+        if req.eos_id is not None and tok == req.eos_id:
+            st.done, st.finish_reason = True, "eos"
+        elif j + 1 >= req.max_new_tokens:
+            st.done, st.finish_reason = True, "length"
+        if st.done:
+            st.finish_time = t
+            break
+    return slot

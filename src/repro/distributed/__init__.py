@@ -2,3 +2,7 @@
 tolerance."""
 from repro.distributed import (act, compression, dispatch, fault, sharding,
                                straggler)
+from repro.distributed.fault import (ElasticRemesh, RestartBackoff, RunResult,
+                                     SupervisorConfig, TrainSupervisor)
+from repro.distributed.straggler import (MitigationDecision, MitigationPolicy,
+                                         StepTimeTracker, StragglerConfig)

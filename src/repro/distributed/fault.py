@@ -37,6 +37,36 @@ class SupervisorConfig:
     ckpt_every: int = 100
     max_restarts: int = 5
     keep: int = 3
+    backoff_base: float = 0.0     # first retry delay (s); 0 disables sleeps
+    backoff_factor: float = 2.0
+
+
+class RestartBackoff:
+    """Exponential-backoff restart budget, shared by the training
+    supervisor and the cluster monitor (cluster/control.py).
+
+    ``next_delay()`` spends one restart from the budget and returns the
+    delay before the retry (``base * factor**n``), or None once the budget
+    is exhausted — the caller escalates (raise / mark the worker
+    permanently dead).  ``reset()`` refunds the budget after sustained
+    health."""
+
+    def __init__(self, max_restarts: int = 5, base: float = 0.0,
+                 factor: float = 2.0):
+        self.max_restarts = max_restarts
+        self.base = base
+        self.factor = factor
+        self.restarts = 0
+
+    def next_delay(self) -> Optional[float]:
+        if self.restarts >= self.max_restarts:
+            return None
+        delay = self.base * (self.factor ** self.restarts)
+        self.restarts += 1
+        return delay
+
+    def reset(self) -> None:
+        self.restarts = 0
 
 
 @dataclasses.dataclass
@@ -49,9 +79,11 @@ class RunResult:
 
 class TrainSupervisor:
     def __init__(self, manager: CheckpointManager,
-                 cfg: SupervisorConfig = SupervisorConfig()):
+                 cfg: SupervisorConfig = SupervisorConfig(),
+                 sleep_fn: Callable[[float], None] = time.sleep):
         self.manager = manager
         self.cfg = cfg
+        self.sleep_fn = sleep_fn
 
     def run(self, state: PyTree, step_fn: Callable[[PyTree, int], PyTree],
             num_steps: int, *,
@@ -64,8 +96,10 @@ class TrainSupervisor:
         replay after restore is consistent.
         """
         start = 0
-        restarts = 0
         ejections = 0
+        backoff = RestartBackoff(self.cfg.max_restarts,
+                                 self.cfg.backoff_base,
+                                 self.cfg.backoff_factor)
         if self.manager.latest_step() is not None:
             state, start, _ = self.manager.restore(state)
             log.info("resuming from step %d", start)
@@ -88,15 +122,17 @@ class TrainSupervisor:
             except ElasticRemesh:
                 raise
             except Exception as e:                        # noqa: BLE001
-                restarts += 1
-                if restarts > self.cfg.max_restarts:
+                delay = backoff.next_delay()
+                if delay is None:
                     raise RuntimeError(
                         f"exceeded {self.cfg.max_restarts} restarts") from e
                 log.warning("step %d failed (%s); restoring", step, e)
+                if delay > 0:
+                    self.sleep_fn(delay)
                 self.manager.wait()
                 if self.manager.latest_step() is not None:
                     state, step, _ = self.manager.restore(state)
                 else:
                     step = 0
         self.manager.wait()
-        return RunResult(state, step, restarts, ejections)
+        return RunResult(state, step, backoff.restarts, ejections)

@@ -142,6 +142,47 @@ def build_parser() -> argparse.ArgumentParser:
                          "a (data, model) mesh over all devices so FFF "
                          "sites serve expert-parallel (grouped_ep)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cluster", nargs=2, type=int, default=None,
+                    metavar=("N_PREFILL", "N_DECODE"),
+                    help="disaggregated serving: run this many prefill and "
+                         "decode workers behind the cluster router "
+                         "(repro.cluster, DESIGN.md §12) instead of one "
+                         "engine; each worker gets --batch slots of its "
+                         "role; implies a paged KV cache (--page-size, "
+                         "default 16 when unset)")
+    ap.add_argument("--cluster-bus", default="proc",
+                    choices=["local", "proc"],
+                    help="cluster transport: proc = one OS process per "
+                         "worker (multiprocessing, the real topology); "
+                         "local = in-process deterministic bus (debugging)")
+    ap.add_argument("--cluster-kill", type=int, default=0,
+                    help="cluster fault injection: after this many requests "
+                         "complete, SIGKILL one decode worker mid-stream — "
+                         "the router replays its in-flight work and "
+                         "respawns the role (0 = no kill)")
+    ap.add_argument("--cluster-verify", action="store_true",
+                    help="cluster: after serving, replay the same workload "
+                         "on a single in-process engine and report exact "
+                         "token parity in the summary / --metrics-json "
+                         "(the zero-lost-tokens check)")
+    ap.add_argument("--scale-up-watermark", type=float, default=0.0,
+                    help="cluster: smoothed queue depth above which the "
+                         "monitor spawns an extra decode worker "
+                         "(0 = elastic scaling off)")
+    ap.add_argument("--scale-down-watermark", type=float, default=0.0,
+                    help="cluster: smoothed queue depth below which an "
+                         "idle surplus decode worker is drained "
+                         "(0 = never scale down)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=600.0,
+                    help="cluster: seconds without a heartbeat before a "
+                         "worker is declared dead and its work replayed "
+                         "(default is deliberately huge — jit compiles "
+                         "stall heartbeats; lower it only on warm fleets)")
+    ap.add_argument("--drain", action="store_true",
+                    help="cluster: after serving, drain the fleet "
+                         "gracefully (finish in-flight, refuse new work, "
+                         "stop each worker on its Drained handshake) "
+                         "instead of stopping it immediately")
     return ap
 
 
@@ -191,9 +232,39 @@ def parse_tenant_weights(spec: str) -> dict:
     return out
 
 
+def build_requests(args, cfg, *, n=None) -> list:
+    """The synthetic mixed-length workload every serving mode shares (the
+    engine, the cluster, and --cluster-verify's replay must serve the SAME
+    request set for parity to mean anything)."""
+    eos = args.eos_id if args.eos_id >= 0 else None
+    weights = parse_tenant_weights(args.tenant_weights)
+    n = n if n is not None else (args.requests or 2 * args.batch)
+    src = tokens_lib.MarkovTokenSource(cfg.vocab_size, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    tenants = sorted(weights) or ["default"]
+    if args.shared_prefix >= args.prompt_len:
+        raise ValueError(f"--shared-prefix ({args.shared_prefix}) must be "
+                         f"< --prompt-len ({args.prompt_len}): every request "
+                         f"needs at least one token of its own")
+    sp = max(args.shared_prefix, 0)
+    system = src.sample(1, sp, seed=args.seed)[0, :sp] if sp else None
+    reqs = []
+    for i in range(n):
+        # mixed lengths: the engine's reason to exist
+        lo = min(max(sp + 1, 4, args.prompt_len // 4), args.prompt_len)
+        L = int(rng.integers(lo, args.prompt_len + 1))
+        prompt = src.sample(1, L, seed=args.seed + 1 + i)[0, :L]
+        if system is not None:
+            # shared-system-prompt workload: identical leading tokens, so a
+            # paged engine prefills the prefix once and shares the pages
+            prompt = np.concatenate([system, prompt[sp:]])
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=args.gen,
+                            eos_id=eos, tenant=tenants[i % len(tenants)]))
+    return reqs
+
+
 def run_engine(args) -> None:
     cfg, params, mesh, mesh_ctx = _setup(args)
-    eos = args.eos_id if args.eos_id >= 0 else None
     weights = parse_tenant_weights(args.tenant_weights)
     sched_kw = ({"max_prefilling": args.max_prefilling}
                 if args.max_prefilling > 0 else {})
@@ -222,28 +293,8 @@ def run_engine(args) -> None:
     engine = ContinuousBatchingEngine(params, cfg, ecfg, trace_ctx=mesh_ctx,
                                       mesh=mesh)
 
-    n = args.requests or 2 * args.batch
-    src = tokens_lib.MarkovTokenSource(cfg.vocab_size, seed=args.seed)
-    rng = np.random.default_rng(args.seed)
-    tenants = sorted(weights) or ["default"]
-    if args.shared_prefix >= args.prompt_len:
-        raise ValueError(f"--shared-prefix ({args.shared_prefix}) must be "
-                         f"< --prompt-len ({args.prompt_len}): every request "
-                         f"needs at least one token of its own")
-    sp = max(args.shared_prefix, 0)
-    system = src.sample(1, sp, seed=args.seed)[0, :sp] if sp else None
-    reqs = []
-    for i in range(n):
-        # mixed lengths: the engine's reason to exist
-        lo = min(max(sp + 1, 4, args.prompt_len // 4), args.prompt_len)
-        L = int(rng.integers(lo, args.prompt_len + 1))
-        prompt = src.sample(1, L, seed=args.seed + 1 + i)[0, :L]
-        if system is not None:
-            # shared-system-prompt workload: identical leading tokens, so a
-            # paged engine prefills the prefix once and shares the pages
-            prompt = np.concatenate([system, prompt[sp:]])
-        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=args.gen,
-                            eos_id=eos, tenant=tenants[i % len(tenants)]))
+    reqs = build_requests(args, cfg)
+    n, sp = len(reqs), max(args.shared_prefix, 0)
     mode = (f"chunked prefill (chunk={args.prefill_chunk}, "
             f"budget={args.prefill_budget})" if args.prefill_chunk
             else "monolithic prefill")
@@ -271,6 +322,148 @@ def run_engine(args) -> None:
         with open(args.metrics_json, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote metrics to {args.metrics_json}")
+
+
+def run_cluster(args) -> None:
+    """Disaggregated serving (``--cluster N_PREFILL N_DECODE``): a router
+    control plane over role-restricted worker engines, prefill→decode KV
+    handoff, heartbeat liveness + replay, and optional elastic scaling
+    (repro.cluster, DESIGN.md §12, docs/serving.md "Cluster mode")."""
+    import json
+
+    from repro.cluster import (ClusterConfig, ClusterWorker, LocalBus,
+                               ProcBus, Router)
+    from repro.cluster.control import ControlConfig
+    from repro.cluster.worker import WorkerSpec, build_engine
+
+    n_prefill, n_decode = args.cluster
+    if n_prefill < 1 or n_decode < 1:
+        raise ValueError("--cluster needs >= 1 prefill and >= 1 decode "
+                         "worker")
+    if args.model_parallel > 1:
+        raise ValueError("--cluster and --model-parallel are exclusive: "
+                         "cluster workers are single-process engines")
+    cfg = registry.get_config(args.arch, ffn=args.ffn)
+    if args.reduced:
+        cfg = cfg.reduced(seq=max(64, args.prompt_len + args.gen + 1))
+    page = args.page_size or 16          # handoff moves pages: paging is on
+    weights = parse_tenant_weights(args.tenant_weights)
+    sched_kw = {"weights": weights} if weights and \
+        args.scheduler == "weighted_leaf_aware" else {}
+
+    def ecfg_for(role):
+        return EngineConfig(
+            num_slots=args.batch,
+            max_len=args.prompt_len + args.gen + 1,
+            max_prompt_len=args.prompt_len,
+            prefill_chunk=args.prefill_chunk,
+            prefill_budget=args.prefill_budget,
+            fff_backend=args.fff_backend,
+            spec_k=args.spec_k,
+            draft_config=args.draft_config or None,
+            page_size=page, seed=args.seed)
+
+    ctrl = ControlConfig(
+        heartbeat_timeout=args.heartbeat_timeout,
+        scale_up_watermark=args.scale_up_watermark or 1e9,
+        scale_down_watermark=args.scale_down_watermark or -1.0,
+        max_decode=max(n_decode + 2, n_decode * 2))
+    if args.cluster_bus == "local":
+        params = lm.init(jax.random.PRNGKey(args.seed), cfg)
+        print(f"{cfg.arch_id}: {utils.tree_size(params)/1e6:.1f}M params "
+              f"(shared across in-process workers)")
+        bus = LocalBus(lambda wid, role: ClusterWorker(
+            wid, role, ContinuousBatchingEngine(params, cfg,
+                                                ecfg_for(role))))
+    else:
+        bus = ProcBus(lambda wid, role: WorkerSpec(
+            wid=wid, role=role, cfg=cfg, ecfg=ecfg_for(role),
+            seed=args.seed, heartbeat_every=1))
+    router = Router(bus, ClusterConfig(
+        n_prefill=n_prefill, n_decode=n_decode, scheduler=args.scheduler,
+        scheduler_kw=sched_kw, control=ctrl, page_size=page),
+        clock=time.monotonic)
+    router.start()
+
+    reqs = build_requests(args, cfg)
+    print(f"cluster: {n_prefill} prefill + {n_decode} decode workers "
+          f"({args.cluster_bus} bus), {args.batch} slots each, "
+          f"{len(reqs)} requests, prompt lens "
+          f"{min(len(r.prompt) for r in reqs)}-"
+          f"{max(len(r.prompt) for r in reqs)}, page={page}, "
+          f"scheduler={args.scheduler}")
+
+    killed = []
+
+    def on_tick(r):
+        if args.cluster_kill and not killed and \
+                len(r.results) >= args.cluster_kill:
+            victim = next((w for w, v in sorted(r.views.items())
+                           if v.role == "decode"), None)
+            if victim is not None:
+                print(f"FAULT INJECTION: killing decode worker {victim} "
+                      f"after {len(r.results)} results")
+                killed.append(victim)
+                r.kill_worker(victim)
+
+    t0 = time.monotonic()
+    results = router.run(reqs, on_tick=on_tick)
+    elapsed = time.monotonic() - t0
+    m = router.metrics(elapsed_s=elapsed)
+    cm = router.cluster_metrics()
+    print(m.report())
+    print(f"cluster: replayed={cm['replayed_requests']} "
+          f"restarts={cm['worker_restarts']} "
+          f"handoff={cm['handoff_bytes']/1e6:.2f}MB "
+          f"scale_events={len(cm['scale_events'])}")
+
+    parity_ok = None
+    if args.cluster_verify:
+        # the zero-lost-tokens check: one in-process engine, same seed,
+        # same requests — cluster output must be byte-identical
+        params = lm.init(jax.random.PRNGKey(args.seed), cfg)
+        ref = ContinuousBatchingEngine(params, cfg, ecfg_for("decode"))
+        want, _ = ref.run([Request(rid=r.rid, prompt=r.prompt,
+                                   max_new_tokens=r.max_new_tokens,
+                                   eos_id=r.eos_id, tenant=r.tenant)
+                           for r in reqs])
+        parity_ok = (
+            len(results) == len(want)
+            and all(a.rid == b.rid and list(a.tokens) == list(b.tokens)
+                    and a.finish_reason == b.finish_reason
+                    for a, b in zip(results, want)))
+        print(f"parity vs single engine: "
+              f"{'EXACT' if parity_ok else 'MISMATCH'}")
+
+    if args.drain:
+        router.drain_all()
+        deadline = time.monotonic() + 120
+        while router.views and time.monotonic() < deadline:
+            router.step()
+        print(f"drained: {'clean' if not router.views else 'TIMED OUT'} "
+              f"({len(router.byes)} goodbyes)")
+    router.shutdown()
+
+    if args.metrics_json:
+        payload = m.as_dict()
+        payload["cluster"] = cm
+        payload["topology"] = {"n_prefill": n_prefill, "n_decode": n_decode,
+                               "bus": args.cluster_bus,
+                               "slots_per_worker": args.batch}
+        if parity_ok is not None:
+            payload["parity_ok"] = bool(parity_ok)
+        with open(args.metrics_json, "w") as f:
+            json.dump(payload, f, indent=1, default=_json_default)
+        print(f"wrote metrics to {args.metrics_json}")
+
+
+def _json_default(o):
+    import numpy as _np
+    if isinstance(o, _np.ndarray):
+        return o.tolist()
+    if isinstance(o, (_np.integer, _np.floating)):
+        return o.item()
+    raise TypeError(f"not JSON serializable: {type(o)}")
 
 
 def run_legacy(args) -> None:
@@ -352,7 +545,9 @@ def run_legacy(args) -> None:
 
 def main(argv=None) -> None:
     args = parse_args(argv)
-    if args.engine == "continuous":
+    if args.cluster is not None:
+        run_cluster(args)
+    elif args.engine == "continuous":
         run_engine(args)
     else:
         run_legacy(args)

@@ -260,6 +260,41 @@ def cache_admit(caches: list[dict], admit: jax.Array, tables: jax.Array,
     return out
 
 
+def cache_install(caches: list[dict], admit: jax.Array, tables: jax.Array,
+                  lengths: jax.Array, pages: jax.Array,
+                  k_rows: list[jax.Array], v_rows: list[jax.Array]
+                  ) -> list[dict]:
+    """Install a handed-off row — page CONTENTS plus table — in ONE batched
+    dispatch (the cluster cache-handoff receive path, DESIGN.md §12).
+
+    Same ``admit`` (B,) / ``tables`` (B, ppr) / ``lengths`` (B,) contract
+    as ``cache_admit``, but the page K/V arrive over the wire instead of
+    being computed here: ``pages`` (ppr,) int32 names the destination page
+    ids in THIS pool (``num_pages`` sentinel for unused tail entries —
+    their writes drop), and ``k_rows``/``v_rows`` align with ``caches``,
+    each entry a ``(n_periods, ppr, page_size, K, hd)`` slab gathered from
+    the SENDING worker's pool (``cluster/handoff.extract``; zero-padded
+    past the shipped pages — fresh generation-room pages tolerate the
+    overwrite, nothing reads past the installed length).
+
+    One fixed compiled shape per engine config: the decode-worker analogue
+    of the prefill side's ``admit`` dispatch."""
+    out = []
+    for c, kr, vr in zip(caches, k_rows, v_rows):
+        c = dict(c)
+        kv = c["kv"]                       # leaves stacked (n_periods, ...)
+        new_k = kv.k.at[:, pages].set(kr.astype(kv.k.dtype), mode="drop")
+        new_v = kv.v.at[:, pages].set(vr.astype(kv.v.dtype), mode="drop")
+        new_table = jnp.where(admit[None, :, None],
+                              tables[None].astype(kv.table.dtype), kv.table)
+        new_len = jnp.where(admit[None, :],
+                            lengths[None].astype(kv.length.dtype), kv.length)
+        c["kv"] = kv._replace(k=new_k, v=new_v, table=new_table,
+                              length=new_len)
+        out.append(c)
+    return out
+
+
 def prefill_chunk(params: Params, cfg: ModelConfig, tokens: jax.Array,
                   valid_len: jax.Array, caches: list[dict],
                   pos_offset: jax.Array) -> tuple[jax.Array, list[dict], Any]:

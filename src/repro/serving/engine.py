@@ -116,6 +116,28 @@ class TenantQueues:
         return iter(self._order)
 
 
+class VirtualClock:
+    """Deterministic engine/cluster clock for tests and the in-process
+    ``cluster.LocalBus``: reading it never blocks and time only moves when
+    the driver says so (``advance``), so heartbeat/timeout/elastic logic
+    runs wall-time-free (ISSUE 8).  Inject via
+    ``ContinuousBatchingEngine(..., clock=vc)`` — the engine detects the
+    ``advance`` method and jumps straight to the next pending arrival
+    instead of sleeping when idle."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def __call__(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"cannot advance a clock by {dt}")
+        self._t += float(dt)
+        return self._t
+
+
 def _pow2_buckets(lo: int, hi: int) -> Tuple[int, ...]:
     out, b = [], lo
     while b < hi:
@@ -220,7 +242,7 @@ class ContinuousBatchingEngine:
                  scheduler: Optional[Scheduler] = None,
                  trace_ctx: Optional[Callable] = None,
                  draft: Optional[Tuple[dict, object]] = None,
-                 mesh=None):
+                 mesh=None, clock: Optional[Callable[[], float]] = None):
         if cfg.encoder is not None or cfg.frontend != "none":
             raise ValueError("serving engine supports decoder-only token LMs")
         if any(b.mixer != "attn" for b in cfg.period):
@@ -452,7 +474,12 @@ class ContinuousBatchingEngine:
         self._prefill_counts = np.zeros((S, max(self.num_leaves, 1)),
                                         np.float64)
 
-        self._t0 = time.monotonic()
+        # the engine clock is injectable (ISSUE 8): every timestamp —
+        # arrivals, TTFT, decode latency, RequestResult times — reads
+        # through _clock, so a VirtualClock makes the whole serving loop
+        # (and cluster heartbeat/timeout logic above it) wall-time-free
+        self._clock: Callable[[], float] = clock or time.monotonic
+        self._t0 = self._clock()
         self.n_steps = 0
         self.n_prefills = 0
         self.n_chunks = 0
@@ -489,8 +516,11 @@ class ContinuousBatchingEngine:
 
     def now(self) -> float:
         """Engine-clock seconds since construction (all Request arrival
-        offsets and RequestResult timestamps are on this clock)."""
-        return time.monotonic() - self._t0
+        offsets and RequestResult timestamps are on this clock).  The
+        clock source is injectable (``clock=`` at construction; default
+        ``time.monotonic``) — a ``VirtualClock`` runs the loop in
+        deterministic virtual time."""
+        return self._clock() - self._t0
 
     # -- submission ----------------------------------------------------------
 
@@ -684,37 +714,50 @@ class ContinuousBatchingEngine:
         for i, st in enumerate(self.slots):
             if st is None or not st.done:
                 continue
-            # free the slot's pages on the host: refcounts drop, and pages
-            # nobody else holds (no other slot, not the prefix index) return
-            # to the free list.  NO device dispatch — the slot's stale table
-            # and length rows are harmless because every decode/chunk write
-            # is masked to live rows, and re-admission overwrites both.
-            self.pool.decref(self._slot_pages[i])
-            self._slot_pages[i] = []
-            self._alloc_len[i] = 0
-            self._shared_len[i] = 0
-            # promote the finished request's measured footprint into its
-            # tenant's online routing profile BEFORE the row resets — this
-            # is how leaf hints self-calibrate (ROADMAP: learn leaf hints
-            # online).  _measured gates out rows that only ever held a
-            # seeded prior (telemetry off / no FFF stats landed).
-            if self.profiles is not None and self._measured[i] and \
-                    self.occupancy[i].any():
-                self.profiles.update(st.request.tenant, self.occupancy[i])
-            self.occupancy[i] = 0.0
-            self._measured[i] = False
-            self._prefill_counts[i] = 0.0
-            if self.spec:
-                self._tlen[i] = 0
-                self._dlen[i] = 0
-            # what this freed slot will decode while idle: the occupant's
-            # last NON-EOS token — replaying the EOS id itself would pile
-            # every freed slot's phantom routing onto the EOS token's leaf
-            spread = [t for t in st.tokens if t != st.request.eos_id]
-            self._free_tok[i] = (spread[-1] if spread
-                                 else int(st.request.prompt[-1]))
-            self._live_rids.discard(st.request.rid)
-            arrival = self._arrivals.pop(id(st.request), st.admitted_time)
+            self.release_slot(i)
+
+    def release_slot(self, i: int, record_result: bool = True) -> None:
+        """Free slot ``i``: pages decref'd, occupancy promoted/reset, rid
+        retired.  ``record_result=False`` is the cluster handoff path
+        (``cluster/handoff.py``): a prefill worker that just shipped the
+        slot's KV pages releases the slot WITHOUT minting a
+        ``RequestResult`` — the receiving decode worker owns the request's
+        lifecycle from here.  No device dispatch either way — the slot's
+        stale table and length rows are harmless because every decode/chunk
+        write is masked to live rows, and re-admission overwrites both."""
+        st = self.slots[i]
+        if st is None:
+            return
+        # free the slot's pages on the host: refcounts drop, and pages
+        # nobody else holds (no other slot, not the prefix index) return
+        # to the free list.
+        self.pool.decref(self._slot_pages[i])
+        self._slot_pages[i] = []
+        self._alloc_len[i] = 0
+        self._shared_len[i] = 0
+        # promote the finished request's measured footprint into its
+        # tenant's online routing profile BEFORE the row resets — this
+        # is how leaf hints self-calibrate (ROADMAP: learn leaf hints
+        # online).  _measured gates out rows that only ever held a
+        # seeded prior (telemetry off / no FFF stats landed).
+        if self.profiles is not None and self._measured[i] and \
+                self.occupancy[i].any():
+            self.profiles.update(st.request.tenant, self.occupancy[i])
+        self.occupancy[i] = 0.0
+        self._measured[i] = False
+        self._prefill_counts[i] = 0.0
+        if self.spec:
+            self._tlen[i] = 0
+            self._dlen[i] = 0
+        # what this freed slot will decode while idle: the occupant's
+        # last NON-EOS token — replaying the EOS id itself would pile
+        # every freed slot's phantom routing onto the EOS token's leaf
+        spread = [t for t in st.tokens if t != st.request.eos_id]
+        self._free_tok[i] = (spread[-1] if spread
+                             else int(st.request.prompt[-1]))
+        self._live_rids.discard(st.request.rid)
+        arrival = self._arrivals.pop(id(st.request), st.admitted_time)
+        if record_result:
             self.results.append(RequestResult(
                 rid=st.request.rid, prompt=st.request.prompt,
                 tokens=np.asarray(st.tokens, np.int32),
@@ -726,7 +769,7 @@ class ContinuousBatchingEngine:
                 tenant=st.request.tenant,
                 n_drafted=st.n_drafted,
                 n_accepted=st.n_accepted))
-            self.slots[i] = None
+        self.slots[i] = None
 
     def _bucket_for(self, n: int) -> int:
         return next(b for b in self.ecfg.buckets() if b >= n)
@@ -1040,13 +1083,13 @@ class ContinuousBatchingEngine:
         # deliberately separate from wm, which guards KV writes)
         lv = np.zeros((self.ecfg.num_slots,), bool)
         lv[live] = True
-        t0 = time.monotonic()
+        t0 = self._clock()
         with self._ctx():
             logits, self.caches, stats = self._decode_jit(
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(offs), jnp.asarray(wm), jnp.asarray(lv))
         logits = np.asarray(jax.block_until_ready(logits))
-        t1 = time.monotonic()
+        t1 = self._clock()
         self.decode_lat.append(t1 - t0)
         if self._last_decode_end is not None:
             self.decode_interval_s.append(t1 - self._last_decode_end)
@@ -1106,7 +1149,7 @@ class ContinuousBatchingEngine:
         # unverified — vlen clips the verify slab identically)
         wm = lv[None, :] & ((pos0[None, :] + np.arange(k + 1)[:, None])
                             < self._alloc_len[None, :])
-        t0 = time.monotonic()
+        t0 = self._clock()
         with self._ctx():
             (drafts, q_logits, p_logits, self.caches, self.draft_caches,
              dstats, vstats) = self._spec_jit(
@@ -1124,7 +1167,7 @@ class ContinuousBatchingEngine:
         # drops their counts); self-drafts share the target's leaf space.
         self._update_occupancy(live, self._stats_rows(dstats, "draft"),
                                measured=False)
-        t1 = time.monotonic()
+        t1 = self._clock()
         self.decode_lat.append(t1 - t0)
         if self._last_decode_end is not None:
             self.decode_interval_s.append(t1 - self._last_decode_end)
@@ -1215,9 +1258,16 @@ class ContinuousBatchingEngine:
             if not self.has_work():
                 self._last_decode_end = None    # idle gap, not a stall
                 if pending:
-                    time.sleep(min(
-                        max(t_start + pending[0].arrival_time - self.now(),
-                            0.0), 0.05))
+                    wait = max(t_start + pending[0].arrival_time - self.now(),
+                               0.0)
+                    adv = getattr(self._clock, "advance", None)
+                    if adv is not None:
+                        # virtual time: jump straight to the next arrival —
+                        # sleeping would stall forever on a clock that only
+                        # moves when told to
+                        adv(wait)
+                    else:
+                        time.sleep(min(wait, 0.05))
                 continue
             self.step()
         elapsed = self.now() - t_start
@@ -1292,6 +1342,18 @@ class ContinuousBatchingEngine:
                 m.tenants.setdefault(t, {})["profile"] = snap
         return m
 
+    def occupancy_snapshot(self) -> Optional[np.ndarray]:
+        """Mean leaf-occupancy EWMA across active slots — the worker's live
+        FFF footprint, consumed by cluster placement (``cluster/placement``)
+        to steer tenants whose learned profiles overlap it elsewhere.  None
+        when the model has no FFF site; zeros when idle."""
+        if not self.num_leaves:
+            return None
+        act = [i for i, s in enumerate(self.slots) if s is not None]
+        if not act:
+            return np.zeros((self.num_leaves,), np.float64)
+        return self.occupancy[act].mean(axis=0)
+
     # -- fixed-shape accounting ----------------------------------------------
 
     def compiled_shapes(self) -> Dict[str, int]:
@@ -1310,4 +1372,9 @@ class ContinuousBatchingEngine:
             out["prefill_chunk"] = n(self._chunk_jit)
         if self.spec:
             out["spec_round"] = n(self._spec_jit)
+        install = getattr(self, "_cluster_install_jit", None)
+        if install is not None:
+            # the cluster handoff-receive dispatch (cluster/handoff.py):
+            # part of a decode worker's compile family, same <= 1 contract
+            out["install"] = n(install)
         return out
