@@ -6,7 +6,10 @@
   table2 -> paper Table 2 (FFF vs MoE vs FF + epochs-to-train)
   fig34  -> paper Figures 3-4 (mechanism latency scaling, BERT dims)
   table3 -> paper Table 3 (ViT with FFF layers)
-  roofline -> formats the dry-run roofline artifact (assignment)
+  roofline -> formats the dry-run roofline artifact AND measures the fused
+             decode megakernel vs the 3-dispatch kernel path at decode
+             shape, asserting the one-pallas_call dispatch contract
+             (DESIGN.md §13; writes BENCH_roofline.json)
   ep_dispatch -> grouped_ep dispatch-locality curve: tokens/s, per-shard
                  capacity and bytes moved vs model-shard count (DESIGN.md §5)
   serving -> continuous-batching engine under Poisson load, fcfs vs

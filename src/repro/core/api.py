@@ -337,7 +337,16 @@ def _pallas_supported(params: dict, cfg: fff_lib.FFFConfig) -> bool:
             and "leaf_b2" not in params)
 
 
-def _resolve_auto(params: dict, cfg: fff_lib.FFFConfig, mode: str) -> str:
+def _kernels_native() -> bool:
+    """Whether Pallas kernels compile natively here (TPU).  The interpret
+    fallback keeps them *correct* everywhere, but auto never picks an
+    interpreted kernel over a compiled XLA path — tests monkeypatch this to
+    exercise the kernel branches of the resolver on CPU."""
+    return jax.default_backend() == "tpu"
+
+
+def _resolve_auto(params: dict, cfg: fff_lib.FFFConfig, mode: str,
+                  x_shape: Optional[tuple] = None) -> str:
     """Backend choice for ``backend="auto"`` (DESIGN.md §3 regime map):
 
     train: the ST-grouped estimator when the config asks for it (MoE-scale
@@ -346,12 +355,16 @@ def _resolve_auto(params: dict, cfg: fff_lib.FFFConfig, mode: str) -> str:
     infer: expert-parallel a2a dispatch (grouped_ep) whenever a mesh with a
            model axis >1 is installed and the leaf count divides over it —
            sharded serving's whole point is that tokens travel to the leaf
-           shards (§5); else Pallas kernels when on TPU and kernel-eligible
-           (the kernels are single-device); grouped dispatch for wide sites
-           — always, regardless of token count, because wide sites are the
+           shards (§5); else, on TPU with a kernel-eligible config: the
+           fused decode MEGAKERNEL (``pallas_decode``, §13) for seq-len-1
+           shapes — serving decode's forever-shape — and the three-kernel
+           ``pallas`` path otherwise; grouped dispatch for wide sites —
+           always, regardless of token count, because wide sites are the
            EP-sharded ones and the per-token gather would allgather their
            sharded leaf weights; the exact gather reference otherwise
-           (small sites, depth 0)."""
+           (small sites, depth 0).  ``x_shape`` is the call's input shape
+           when known (apply() passes it); shape-blind resolution simply
+           never picks the decode-shaped fast path."""
     override = getattr(_thread_state, "override", None)
     if override is not None:
         o_name, o_mode = override
@@ -365,7 +378,11 @@ def _resolve_auto(params: dict, cfg: fff_lib.FFFConfig, mode: str) -> str:
     if (dist_act.model_shard_count() > 1
             and _backend_supported("infer", "grouped_ep", params, cfg)):
         return "grouped_ep"
-    if (jax.default_backend() == "tpu"
+    if (x_shape is not None and len(x_shape) >= 3 and x_shape[-2] == 1
+            and _kernels_native()
+            and _backend_supported("infer", "pallas_decode", params, cfg)):
+        return "pallas_decode"
+    if (_kernels_native()
             and _backend_supported("infer", "pallas", params, cfg)):
         return "pallas"
     if cfg.num_leaves * cfg.leaf_width >= AUTO_GROUPED_MIN_WIDTH:
@@ -374,14 +391,17 @@ def _resolve_auto(params: dict, cfg: fff_lib.FFFConfig, mode: str) -> str:
 
 
 def resolve_backend(params: dict, cfg: "fff_lib.FFFConfig",
-                    mode: str = "infer") -> str:
+                    mode: str = "infer",
+                    x_shape: Optional[tuple] = None) -> str:
     """The backend ``apply(backend="auto")`` would run under the CURRENT
     trace-time context (installed mesh, ``use_backend`` override, supports
     predicates) — for consumers that must predict dispatch behavior without
     running it, e.g. the serving scheduler's capacity proxy (DESIGN.md §9).
     Pass the site's params when available; ``{}`` is an acceptable proxy for
-    bias-free configs (the predicates only probe bias keys)."""
-    return _resolve_auto(params, cfg, mode)
+    bias-free configs (the predicates only probe bias keys).  ``x_shape``
+    (the ``(..., seq, dim)`` input shape) enables the shape-dependent picks
+    — without it the decode-shaped fast path is never predicted."""
+    return _resolve_auto(params, cfg, mode, x_shape=x_shape)
 
 
 def apply(params: dict, cfg: fff_lib.FFFConfig, x: jax.Array,
@@ -397,7 +417,7 @@ def apply(params: dict, cfg: fff_lib.FFFConfig, x: jax.Array,
     spec.validate()
     name = spec.backend
     if name == "auto":
-        name = _resolve_auto(params, cfg, spec.mode)
+        name = _resolve_auto(params, cfg, spec.mode, x_shape=x.shape)
     return get_backend(spec.mode, name)(params, cfg, x, spec)
 
 
@@ -487,6 +507,38 @@ def _infer_pallas(params, cfg, x, spec):
                       overflow_fraction=jnp.zeros((), jnp.float32)))
 
 
+def _infer_pallas_decode(params, cfg, x, spec):
+    """FORWARD_I on the fused decode MEGAKERNEL (DESIGN.md §13): tree
+    routing, the selected leaf's MLP and the forest combine in ONE
+    ``pl.pallas_call`` — built for the serving engine's ``(num_slots, 1)``
+    decode shape, where the three-dispatch pallas path pays two extra
+    kernel launches and an HBM round trip of the hidden activation per
+    token.  Exact for any batch (per-token, no capacity bound), so
+    ``spec.valid`` does not change outputs; it only masks the reported
+    ``leaf_idx`` to the sentinel leaf so phantom rows (a serving engine's
+    free slots) stay out of routing telemetry — ``routing_stats_from``'s
+    bincount drops the sentinel id, same contract as the capacity-bounded
+    backends (DESIGN.md §9)."""
+    if cfg.depth == 0:
+        # a depth-0 FFF is one dense leaf: no tree to descend, nothing to
+        # fuse.  The supports predicate keeps auto away from this case;
+        # an explicit request stays correct via the reference path.
+        return _infer_reference(params, cfg, x, spec)
+    # imported here, not at module scope: repro.kernels sits above repro.core
+    # in the layering and itself imports this package
+    from repro.kernels.fused_decode import ops as fd_ops
+    xf, lead = utils.flatten_leading(x)
+    y, leaf_idx = fd_ops.fused_decode(xf, params, cfg,
+                                      interpret=spec.interpret,
+                                      return_leaf_idx=True)
+    if spec.valid is not None:
+        vf = jnp.broadcast_to(spec.valid, x.shape[:-1]).reshape(-1)
+        leaf_idx = jnp.where(vf[:, None], leaf_idx, cfg.num_leaves)
+    return (utils.unflatten_leading(y, lead),
+            FFFOutput(leaf_idx=utils.unflatten_leading(leaf_idx, lead),
+                      overflow_fraction=jnp.zeros((), jnp.float32)))
+
+
 register_backend("train", "reference", _train_reference)
 register_backend("train", "grouped", _train_grouped)
 register_backend("infer", "reference", _infer_reference)
@@ -504,4 +556,12 @@ register_backend(
     # single-device kernels: ineligible under an SPMD mesh (sharded serving
     # wants the partitionable grouped dispatch, DESIGN.md §5)
     supports=lambda params, cfg: (_pallas_supported(params, cfg)
+                                  and not dist_act.mesh_installed()))
+register_backend(
+    "infer", "pallas_decode", _infer_pallas_decode,
+    # same single-device + kernel-eligibility constraints as "pallas", plus
+    # a tree to descend (the megakernel's routing phase is the fusion's
+    # whole point; depth-0 sites are a plain dense MLP)
+    supports=lambda params, cfg: (cfg.depth > 0
+                                  and _pallas_supported(params, cfg)
                                   and not dist_act.mesh_installed()))

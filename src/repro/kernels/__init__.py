@@ -4,15 +4,18 @@
   leaf_gemm    — ragged grouped GEMM over sorted tokens (batch serving)
   fused_fff    — per-token gathered leaf matmul (decode; the paper's
                  offset-load, expressed as a scalar-prefetch index map)
+  fused_decode — the decode MEGAKERNEL: routing + selected-leaf MLP +
+                 forest combine in ONE dispatch for the serving engine's
+                 (num_slots, 1) shape (DESIGN.md §13)
 
 Each kernel ships ops.py (jit wrapper) and ref.py (pure-jnp oracle); tests
 sweep shapes x dtypes in interpret mode against the oracle.
 
-Consumers do not call these directly: the package is wired into the
-execution-backend registry as the ``"pallas"`` backend of
-``repro.core.api.apply()`` (selected automatically on TPU for kernel-eligible
-configs, or explicitly via ``ExecutionSpec(backend="pallas")``).  The raw
-``fff_infer`` / ``fff_decode`` wrappers remain exported for kernel-level
-tests and benchmarking.
+Consumers do not call these directly: the packages are wired into the
+execution-backend registry as the ``"pallas"`` and ``"pallas_decode"``
+backends of ``repro.core.api.apply()`` (selected automatically on TPU for
+kernel-eligible configs, or explicitly via ``ExecutionSpec(backend=...)``).
+The raw ``fff_infer`` / ``fff_decode`` / ``fused_decode`` wrappers remain
+exported for kernel-level tests and benchmarking.
 """
-from repro.kernels import fused_fff, leaf_gemm, tree_router
+from repro.kernels import fused_decode, fused_fff, leaf_gemm, tree_router

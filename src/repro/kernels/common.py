@@ -1,4 +1,6 @@
-"""Shared kernel plumbing: interpret-mode autodetection, tiling helpers."""
+"""Shared kernel plumbing: interpret-mode autodetection, tiling helpers,
+and the dispatch-count probe the roofline benchmark and the CI compile
+gate use to assert kernel fusion (DESIGN.md §13)."""
 from __future__ import annotations
 
 import jax
@@ -14,9 +16,54 @@ def default_interpret() -> bool:
 
 
 def pick_tile(n: int, preferred: int, align: int = 8) -> int:
-    """Largest tile <= preferred that divides n, preferring MXU-aligned."""
-    preferred = min(preferred, n)
+    """Largest tile <= preferred that divides n, preferring MXU-aligned.
+
+    Guarantees: the result always divides ``n`` exactly (callers size Pallas
+    grids as ``n // tile``); an ``align``-multiple divisor wins when one
+    exists <= preferred; ``n <= preferred`` returns ``n`` itself (one whole
+    tile beats splitting).  ``n <= 0`` raises — the old fall-through
+    returned 1 for an empty axis, silently building a 0-step grid."""
+    if n <= 0:
+        raise ValueError(f"pick_tile needs a positive axis size, got n={n}")
+    if align <= 0:
+        raise ValueError(f"pick_tile needs a positive alignment, got {align}")
+    if n <= preferred:
+        return n
+    preferred = max(1, preferred)
+    best = 1
     for t in range(preferred, 0, -1):
-        if n % t == 0 and (t % align == 0 or t == n or t < align):
-            return t
-    return 1
+        if n % t == 0:
+            if t % align == 0:
+                return t            # largest aligned divisor <= preferred
+            best = max(best, t)
+    return best                     # largest divisor <= preferred (unaligned)
+
+
+def count_pallas_calls(fn, *args, **kwargs) -> int:
+    """Number of ``pallas_call`` dispatches in ``fn``'s traced program,
+    counted by walking the jaxpr (recursing through pjit / scan / cond
+    sub-jaxprs).  Trace-time and cache-independent — unlike a counter inside
+    the kernel wrappers, it cannot be fooled by an already-warm inner jit —
+    this is the probe that pins the fused decode path at ONE dispatch where
+    the router + two gathered matmuls issue three (DESIGN.md §13)."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return _count_jaxpr(closed.jaxpr)
+
+
+def _count_jaxpr(jaxpr) -> int:
+    try:                              # jax >= 0.4.33 public home; jax.core
+        from jax.extend import core as jcore   # deprecates these on newer
+    except ImportError:                        # versions of the CI matrix
+        import jax.core as jcore
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            items = v if isinstance(v, (tuple, list)) else (v,)
+            for item in items:
+                if isinstance(item, jcore.ClosedJaxpr):
+                    n += _count_jaxpr(item.jaxpr)
+                elif isinstance(item, jcore.Jaxpr):
+                    n += _count_jaxpr(item)
+    return n

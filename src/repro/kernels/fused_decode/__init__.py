@@ -1,0 +1,3 @@
+from repro.kernels.fused_decode.kernel import fused_forest_decode
+from repro.kernels.fused_decode.ops import (collapse_nodes, fused_decode,
+                                            fused_decode_ref)

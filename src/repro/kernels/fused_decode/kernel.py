@@ -1,0 +1,150 @@
+"""Pallas TPU megakernel: the WHOLE FFF decode forward in one dispatch.
+
+The serving engine's decode step is ``(num_slots, 1)`` forever (DESIGN.md
+§9), and the existing kernel path covers it with THREE dispatches —
+``tree_router`` then two gathered leaf matmuls — with the ``(B, l)`` hidden
+activation making an HBM round trip between them and three kernel-launch
+overheads per emitted token.  This kernel fuses tree routing, the selected
+leaf's MLP (plain or SwiGLU) and the forest combine into ONE
+``pl.pallas_call`` (DESIGN.md §13): the token's hidden activation never
+leaves VMEM, and the descent's leaf choice feeds the leaf-weight loads
+*inside the same kernel* — the paper's "conditionality is just an offset in
+the data load" claim, taken to its limit on TPU.
+
+Grid: ``(B,)`` — one token per step, matching decode's tiny batch (the
+grouped/sorted paths win at prefill widths; ``core/api`` only routes
+seq-len-1 inference here).  Per step:
+
+1. node logits: ONE ``(1, D) @ (D, N)`` MXU matmul against the collapsed
+   node hyperplanes (node_width == 1 folds the two node layers into one);
+2. descent: ``depth`` register-level dynamic picks from the logit row —
+   bit m of the leaf index is the sign of the chosen level-m logit;
+3. leaf MLP: the computed ``idx`` drives ``pl.load(w_ref, (t, dslice(idx,
+   1), ...))`` — only the routed leaf's weights are touched — with f32
+   accumulation and the activation applied in-register;
+4. combine: tree outputs accumulate in an f32 register tile; one store of
+   ``y`` and the per-tree leaf indices (the telemetry contract: consumers
+   get the same ``(B, trees)`` leaf_idx every other backend returns).
+
+Memory layout note: the leaf-weight operands are declared whole (index_map
+pinned to block 0) so the in-kernel dynamic index can select among them;
+on real TPU the production variant keeps them HBM-resident
+(``pltpu.ANY`` + an async copy of the selected leaf issued after the
+descent) because 2^d leaves do not fit VMEM at paper scale — the interpret
+path used on this CPU container executes the identical selection semantics
+either way, which is what the differential harness pins down.  HBM traffic
+per token is O(N·D + l·(D + O)) — the routed leaf only — vs the dense
+layer's O(2^d·l·D), and vs the 3-dispatch path it additionally saves the
+``(B, l)`` activation round trip plus two kernel launches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ACTS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def _descend(logits_row, depth: int):
+    """Register-level hard descent over one token's node-logit row
+    (N = 2^depth - 1, level-major layout): bit m of the returned leaf index
+    is the sign of the level-m logit chosen by the prefix path."""
+    idx = jnp.zeros((), jnp.int32)
+    off = 0
+    for m in range(depth):
+        cur = jax.lax.dynamic_index_in_dim(logits_row, off + idx,
+                                           keepdims=False)
+        idx = 2 * idx + (cur >= 0.0).astype(jnp.int32)
+        off += 2 ** m
+    return idx
+
+
+def _leaf_slab(w_ref, t: int, idx):
+    """Load exactly one leaf's weight slab: (T, E, A, B) ref -> (A, B).
+    ``idx`` is the in-kernel descent result — the offset-load."""
+    return pl.load(w_ref, (pl.dslice(t, 1), pl.dslice(idx, 1),
+                           slice(None), slice(None)))[0, 0]
+
+
+def _fused_decode_kernel(x_ref, nw_ref, nb_ref, *refs, depth: int, trees: int,
+                         act: str, out_dtype):
+    if act == "swiglu":
+        wg_ref, wu_ref, wd_ref, y_ref, idx_ref = refs
+    else:
+        w1_ref, w2_ref, y_ref, idx_ref = refs
+    x = x_ref[...]                                            # (1, D)
+    acc = jnp.zeros((1, y_ref.shape[-1]), jnp.float32)
+    idxs = []
+    for t in range(trees):
+        logits = jax.lax.dot_general(
+            x, nw_ref[t], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)               # (1, N)
+        logits = logits + nb_ref[t][None, :].astype(jnp.float32)
+        idx = _descend(logits[0], depth)
+        if act == "swiglu":
+            g = jax.lax.dot_general(
+                x, _leaf_slab(wg_ref, t, idx), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            u = jax.lax.dot_general(
+                x, _leaf_slab(wu_ref, t, idx), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            h = jax.nn.silu(g) * u                            # (1, l) f32
+            w_down = _leaf_slab(wd_ref, t, idx)
+        else:
+            h = _ACTS[act](jax.lax.dot_general(
+                x, _leaf_slab(w1_ref, t, idx), (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32))          # (1, l) f32
+            w_down = _leaf_slab(w2_ref, t, idx)
+        acc += jax.lax.dot_general(
+            h.astype(x.dtype), w_down, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        idxs.append(idx)
+    y_ref[...] = acc.astype(out_dtype)
+    idx_ref[...] = jnp.stack(idxs).astype(jnp.int32)[None, :]
+
+
+def fused_forest_decode(x: jax.Array, nw: jax.Array, nb: jax.Array,
+                        leaf_w: tuple, *, depth: int, act: str = "gelu",
+                        interpret: bool = False,
+                        out_dtype=None) -> tuple[jax.Array, jax.Array]:
+    """One fused dispatch: route + selected-leaf MLP + forest combine.
+
+    Args:
+        x:      (B, D) decode tokens.
+        nw:     (T, N, D) collapsed node hyperplanes, N = 2^depth - 1.
+        nb:     (T, N) collapsed node biases.
+        leaf_w: ``(w1 (T, E, D, l), w2 (T, E, l, O))`` for plain leaves, or
+                ``(wg, wu (T, E, D, l), wd (T, E, l, O))`` for SwiGLU
+                (then ``act`` must be ``"swiglu"``).
+
+    Returns ``(y (B, O), leaf_idx (B, T) int32)``.
+    """
+    B, D = x.shape
+    T, N, _ = nw.shape
+    assert B >= 1, "fused decode needs at least one token"
+    assert depth >= 1 and N == 2 ** depth - 1, (N, depth)
+    assert (len(leaf_w) == 3) == (act == "swiglu"), (len(leaf_w), act)
+    E = leaf_w[0].shape[1]
+    O = leaf_w[-1].shape[-1]
+    out_dtype = out_dtype or x.dtype
+    whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    return pl.pallas_call(
+        functools.partial(_fused_decode_kernel, depth=depth, trees=T,
+                          act=act, out_dtype=out_dtype),
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, D), lambda i: (i, 0)),
+                  whole(nw), whole(nb)] + [whole(w) for w in leaf_w],
+        out_specs=[pl.BlockSpec((1, O), lambda i: (i, 0)),
+                   pl.BlockSpec((1, T), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, O), out_dtype),
+                   jax.ShapeDtypeStruct((B, T), jnp.int32)],
+        interpret=interpret,
+    )(x, nw, nb, *leaf_w)

@@ -1,0 +1,79 @@
+"""Wrapper for the fused decode megakernel: node-parameter collapse,
+eligibility checks, and the ``(y, leaf_idx)`` contract the execution
+registry's ``("infer", "pallas_decode")`` backend exposes (DESIGN.md §13).
+
+Unlike ``fused_fff.fff_decode`` (router kernel + two gathered-matmul
+kernels, one set PER TREE), this path is ONE ``pl.pallas_call`` for the
+whole forest — the dispatch count the roofline benchmark and the CI
+compile gate pin at 1.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fff as fff_lib
+from repro.kernels import common
+from repro.kernels.fused_decode import kernel as K
+from repro.kernels.fused_decode import ref as R
+
+
+def collapse_nodes(params: dict, cfg: fff_lib.FFFConfig
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Fold the node_width-1 two-layer node net into one hyperplane per
+    node: w = w1[..., 0] * w2[..., 0], b = b1[..., 0] * w2[..., 0] + b2
+    (same collapse as ``fused_fff.fff_decode``, all trees at once).
+    Returns ``(nw (T, N, D), nb (T, N))``."""
+    nw = params["node_w1"][:, :, :, 0] * params["node_w2"][:, :, 0:1]
+    nb = params["node_b1"][:, :, 0] * params["node_w2"][:, :, 0] \
+        + params["node_b2"]
+    return nw, nb
+
+
+def _leaf_weights(params: dict, cfg: fff_lib.FFFConfig) -> tuple[tuple, str]:
+    if "leaf_b1" in params or "leaf_b2" in params:
+        raise ValueError("fused decode kernel requires bias-free leaves")
+    if cfg.activation == "swiglu":
+        return ((params["leaf_wg"], params["leaf_wu"], params["leaf_wd"]),
+                "swiglu")
+    return (params["leaf_w1"], params["leaf_w2"]), cfg.activation
+
+
+def fused_decode(x: jax.Array, params: dict, cfg: fff_lib.FFFConfig, *,
+                 interpret: Optional[bool] = None,
+                 return_leaf_idx: bool = False):
+    """Exact FORWARD_I for decode-shaped batches in ONE kernel dispatch.
+
+    x (B, D) -> (B, dim_out), summed over forest trees; with
+    ``return_leaf_idx=True`` returns ``(y, leaf_idx (B, trees))``.  Exact
+    for ANY batch size (per-token, no capacity bound) — the single-dispatch
+    fusion is simply tuned for decode's ``(num_slots, 1)`` shape."""
+    if cfg.node_width != 1:
+        raise ValueError("kernel path supports node_width == 1 (paper default)")
+    if cfg.depth < 1:
+        raise ValueError("fused decode needs a tree to descend (depth >= 1)")
+    if interpret is None:
+        interpret = common.default_interpret()
+    nw, nb = collapse_nodes(params, cfg)
+    leaf_w, act = _leaf_weights(params, cfg)
+    y, leaf_idx = K.fused_forest_decode(x, nw, nb, leaf_w, depth=cfg.depth,
+                                        act=act, interpret=interpret)
+    if return_leaf_idx:
+        return y, leaf_idx
+    return y
+
+
+def fused_decode_ref(x: jax.Array, params: dict, cfg: fff_lib.FFFConfig, *,
+                     return_leaf_idx: bool = False):
+    """The oracle at the same params/cfg contract as ``fused_decode``."""
+    if cfg.node_width != 1:
+        raise ValueError("kernel path supports node_width == 1 (paper default)")
+    nw, nb = collapse_nodes(params, cfg)
+    leaf_w, act = _leaf_weights(params, cfg)
+    y, leaf_idx = R.fused_decode_ref(x, nw, nb, leaf_w, depth=cfg.depth,
+                                     act=act)
+    if return_leaf_idx:
+        return y, leaf_idx
+    return y

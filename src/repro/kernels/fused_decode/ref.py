@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the fused decode megakernel: hard descent + the
+selected leaf's MLP + forest combine, all in fp32 (paper Algorithm 1
+FORWARD_I, node_width 1, bias-free leaves)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import utils
+
+
+def fused_decode_ref(x: jax.Array, nw: jax.Array, nb: jax.Array,
+                     leaf_w: tuple, *, depth: int, act: str = "gelu"
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Same contract as ``kernel.fused_forest_decode``: x (B, D), collapsed
+    nodes nw (T, N, D) / nb (T, N), ``leaf_w`` = (w1, w2) or (wg, wu, wd)
+    with leading (T, E) axes -> ``(y (B, O), leaf_idx (B, T) int32)``."""
+    B = x.shape[0]
+    T = nw.shape[0]
+    xf = x.astype(jnp.float32)
+    y = None
+    idxs = []
+    for t in range(T):
+        idx = jnp.zeros((B,), jnp.int32)
+        for m in range(depth):
+            g = (2 ** m - 1) + idx
+            w = jnp.take(nw[t], g, axis=0).astype(jnp.float32)   # (B, D)
+            b = jnp.take(nb[t], g, axis=0).astype(jnp.float32)   # (B,)
+            logit = jnp.einsum("bd,bd->b", xf, w) + b
+            idx = 2 * idx + (logit >= 0.0).astype(jnp.int32)
+        if act == "swiglu":
+            wg, wu, wd = (jnp.take(w[t], idx, axis=0).astype(jnp.float32)
+                          for w in leaf_w)
+            h = jax.nn.silu(jnp.einsum("bd,bdh->bh", xf, wg)) \
+                * jnp.einsum("bd,bdh->bh", xf, wu)
+            yt = jnp.einsum("bh,bho->bo", h, wd)
+        else:
+            w1, w2 = (jnp.take(w[t], idx, axis=0).astype(jnp.float32)
+                      for w in leaf_w)
+            h = utils.get_activation(act)(jnp.einsum("bd,bdh->bh", xf, w1))
+            yt = jnp.einsum("bh,bho->bo", h, w2)
+        y = yt if y is None else y + yt
+        idxs.append(idx)
+    return y.astype(x.dtype), jnp.stack(idxs, axis=1)

@@ -68,6 +68,12 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["auto"] + api.list_backends("infer"),
                     help="execution backend for every FFF site (auto = "
                          "per-site resolution; see core/api.py)")
+    ap.add_argument("--pallas-decode", action="store_true",
+                    help="engine: steer one-token decode (and speculative "
+                         "draft rollout) through the fused megakernel "
+                         "backend — routing + selected-leaf MLP + forest "
+                         "combine in ONE dispatch (DESIGN.md §13); prefill "
+                         "and verify slabs keep normal backend resolution")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--engine", default="continuous",
                     choices=["continuous", "off"],
@@ -286,6 +292,7 @@ def run_engine(args) -> None:
         prefill_chunk=args.prefill_chunk,
         prefill_budget=args.prefill_budget,
         fff_backend=args.fff_backend,
+        pallas_decode=args.pallas_decode,
         spec_k=args.spec_k,
         draft_config=args.draft_config or None,
         page_size=args.page_size,
@@ -359,6 +366,7 @@ def run_cluster(args) -> None:
             prefill_chunk=args.prefill_chunk,
             prefill_budget=args.prefill_budget,
             fff_backend=args.fff_backend,
+            pallas_decode=args.pallas_decode,
             spec_k=args.spec_k,
             draft_config=args.draft_config or None,
             page_size=page, seed=args.seed)

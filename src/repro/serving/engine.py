@@ -174,6 +174,15 @@ class EngineConfig:
     scheduler: str = "fcfs"
     scheduler_kw: dict = dataclasses.field(default_factory=dict)
     fff_backend: str = "auto"            # api.use_backend override, "auto" = none
+    # fused decode megakernel (DESIGN.md §13): steer the DECODE dispatch
+    # (and the draft rollout's seq-len-1 steps under spec_k) to the
+    # ("infer", "pallas_decode") backend — routing + selected-leaf MLP +
+    # combine in ONE pl.pallas_call instead of three.  Decode-only by
+    # design: prefill/verify slabs keep fff_backend's resolution.  The
+    # backend's supports predicate still applies (kernel-ineligible sites
+    # and EP meshes fall through to the normal auto heuristics), so the
+    # flag degrades gracefully rather than crashing a sharded engine.
+    pallas_decode: bool = False
     capacity_factor: Optional[float] = None   # scheduler's overflow proxy;
                                               # None = the dispatch default of
                                               # the configured backend
@@ -451,7 +460,12 @@ class ContinuousBatchingEngine:
                 spec_lib.spec_round(
                     p, cfg, dp, dcfg, t0, c, dc, tl, dl, p0, wm, vl, lv, tp,
                     jax.random.fold_in(jax.random.PRNGKey(ecfg.seed), rnd),
-                    verify_cf=self._verify_cf()),
+                    verify_cf=self._verify_cf(),
+                    # the rollout's k+1 scanned draft steps are seq-len-1 —
+                    # the megakernel's shape; the verify slab is not and
+                    # keeps the normal resolution (DESIGN.md §13)
+                    draft_backend=("pallas_decode" if ecfg.pallas_decode
+                                   else None)),
                 **_don(3, 4))
         else:
             self._prefill_jits = {
@@ -589,6 +603,16 @@ class ContinuousBatchingEngine:
             es.enter_context(api.collect_routing())
         return es
 
+    def _decode_backend_ctx(self):
+        """The decode-only backend steer: under ``ecfg.pallas_decode`` the
+        decode dispatch traces with the fused megakernel backend
+        (DESIGN.md §13) while every other dispatch keeps ``fff_backend``'s
+        resolution.  Trace-time thread-local, so it costs nothing once the
+        decode jit is compiled."""
+        if not self.ecfg.pallas_decode:
+            return contextlib.nullcontext()
+        return api.use_backend("pallas_decode", mode="infer")
+
     def _dispatch_topology(self) -> Tuple[int, Optional[float]]:
         """(token-axis shard count, capacity factor) the live FFF dispatch
         actually runs with — the scheduler's overflow proxy must match it,
@@ -607,7 +631,7 @@ class ContinuousBatchingEngine:
                 if backend == "auto":
                     backend = (api.resolve_backend({}, self._site_cfg)
                                if self._site_cfg is not None else "reference")
-            if backend in ("reference", "pallas"):
+            if backend in ("reference", "pallas", "pallas_decode"):
                 self._topology = (1, None)     # exact: no capacity bound
             else:
                 shards = g * m if backend == "grouped_ep" else g
@@ -1084,7 +1108,7 @@ class ContinuousBatchingEngine:
         lv = np.zeros((self.ecfg.num_slots,), bool)
         lv[live] = True
         t0 = self._clock()
-        with self._ctx():
+        with self._ctx(), self._decode_backend_ctx():
             logits, self.caches, stats = self._decode_jit(
                 self.params, jnp.asarray(toks), self.caches,
                 jnp.asarray(offs), jnp.asarray(wm), jnp.asarray(lv))

@@ -137,7 +137,8 @@ def draft_rollout(draft_params: Params, dcfg, tok0: jax.Array,
                   target_caches: list, draft_caches: list,
                   target_len: jax.Array, draft_len: jax.Array,
                   pos0: jax.Array, write_masks: jax.Array,
-                  live: jax.Array, temps: jax.Array, key: jax.Array):
+                  live: jax.Array, temps: jax.Array, key: jax.Array,
+                  draft_backend: Optional[str] = None):
     """The whole draft phase in one traced computation (jitted by the
     engine; fixed shapes — compiles once).
 
@@ -164,6 +165,12 @@ def draft_rollout(draft_params: Params, dcfg, tok0: jax.Array,
                      to the sentinel leaf, DESIGN.md §9).
         temps:       (S,) float32 — per-row sampling temperature.
         key:         PRNG key for on-device draft sampling.
+        draft_backend: optional FFF backend name steered (``use_backend``)
+                     around the scanned draft steps only — the engine
+                     passes ``"pallas_decode"`` so the rollout's seq-len-1
+                     decode steps trace onto the fused megakernel
+                     (DESIGN.md §13) while the verify slab keeps its own
+                     resolution.  None = no steer.
 
     Returns ``(drafts (k, S), q_logits (k+1, S, V), target_caches,
     draft_caches, stats)`` — ``drafts[j]`` was sampled from
@@ -189,8 +196,11 @@ def draft_rollout(draft_params: Params, dcfg, tok0: jax.Array,
 
     xs = (jnp.arange(k_plus_1), write_masks,
           jax.random.split(key, k_plus_1))
-    (_, draft_caches), (sampled, q_logits, stats) = jax.lax.scan(
-        step, (tok0, draft_caches), xs)
+    steer = (api.use_backend(draft_backend, mode="infer")
+             if draft_backend is not None else contextlib.nullcontext())
+    with steer:      # trace-time: applies to the scanned step body only
+        (_, draft_caches), (sampled, q_logits, stats) = jax.lax.scan(
+            step, (tok0, draft_caches), xs)
     # the last step exists only to append d_k's KV; its sample is unused
     return (sampled[:-1], q_logits, target_caches, draft_caches,
             _agg_stats(stats))
@@ -201,7 +211,8 @@ def spec_round(params: Params, cfg, draft_params: Params, dcfg,
                target_len: jax.Array, draft_len: jax.Array,
                pos0: jax.Array, write_masks: jax.Array, verify_len: jax.Array,
                live: jax.Array, temps: jax.Array, key: jax.Array,
-               verify_cf: Optional[float] = None):
+               verify_cf: Optional[float] = None,
+               draft_backend: Optional[str] = None):
     """One whole speculative round in a single traced computation: the draft
     rollout followed immediately by the target's batched verify over the
     ``(num_slots, k + 1)`` slab ``[pending, d_1 .. d_k]``.
@@ -231,7 +242,8 @@ def spec_round(params: Params, cfg, draft_params: Params, dcfg,
         # acceptance loss — one early drop rejects the whole suffix
         drafts, q_logits, caches, draft_caches, dstats = draft_rollout(
             draft_params, dcfg, tok0, caches, draft_caches, target_len,
-            draft_len, pos0, write_masks, live, temps, key)
+            draft_len, pos0, write_masks, live, temps, key,
+            draft_backend=draft_backend)
         vtoks = jnp.concatenate([tok0, drafts.T], axis=1)  # (S, k+1)
         p_logits, caches, vstats = lm.verify_chunk(
             params, cfg, vtoks, verify_len, caches, pos0)

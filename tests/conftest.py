@@ -1,8 +1,49 @@
 """Test fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
 benchmarks must see the real single CPU device; only launch/dryrun.py forces
-512 placeholder devices (and tests exercise it via a subprocess)."""
+512 placeholder devices (and tests exercise it via a subprocess).
+
+Also home of the shared dtype-keyed comparison-tolerance policy: every
+kernel-vs-oracle assertion (tests/test_kernels.py, tests/test_kernel_diff.py)
+routes through ``dtype_tol`` / ``assert_close`` so a tolerance change is one
+edit, not an audit of scattered ad-hoc atol literals.
+"""
 import jax
+import jax.numpy as jnp
+import numpy as np
 import pytest
+
+# (rtol, atol) by dtype and comparison kind:
+#   kernel — one kernel vs its pure-jnp oracle, same op order modulo tiling
+#   e2e    — a whole FFF forward vs the reference backend (router + two
+#            matmul layers of fp32 accumulation drift compound)
+# bf16 carries ~8 mantissa bits, so anything through a matmul is only good
+# to ~0.4%; 5e-2 absorbs that plus accumulation-order noise.
+_TOLS = {
+    "kernel": {"float32": (1e-4, 1e-4), "bfloat16": (5e-2, 5e-2)},
+    "e2e": {"float32": (1e-3, 1e-3), "bfloat16": (5e-2, 5e-2)},
+}
+
+
+def dtype_tol(dtype, kind: str = "kernel") -> tuple:
+    """(rtol, atol) for comparing arrays of ``dtype`` under policy ``kind``."""
+    name = jnp.dtype(dtype).name
+    try:
+        return _TOLS[kind][name]
+    except KeyError:
+        raise KeyError(f"no tolerance policy for kind={kind!r} "
+                       f"dtype={name!r} (have {sorted(_TOLS)} x "
+                       f"{sorted(_TOLS['kernel'])})") from None
+
+
+def assert_close(got, want, dtype=None, kind: str = "kernel",
+                 err_msg: str = ""):
+    """allclose with the shared policy; compares in fp32 so bf16 inputs
+    don't lose further precision inside numpy's subtraction."""
+    got = jnp.asarray(got)
+    rtol, atol = dtype_tol(got.dtype if dtype is None else dtype, kind)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(jnp.asarray(want), np.float32),
+                               rtol=rtol, atol=atol, err_msg=err_msg)
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,510 @@
+"""Differential kernel-testing harness (DESIGN.md §13).
+
+Every kernel package under ``repro.kernels`` ships a pure-jnp ``ref.py``
+oracle next to its Pallas ``kernel.py``; this suite drives each pair through
+one shared parameter matrix — dtypes (fp32/bf16), tree depths, leaf widths,
+non-power-of-two batch sizes, skewed and degenerate routings (all tokens in
+one leaf, sentinel-masked phantom rows) — instead of the per-kernel ad-hoc
+shapes in tests/test_kernels.py.  Tolerances come from the shared
+dtype-keyed policy in conftest.py.
+
+Also the home of:
+* the unit tests for ``kernels/common.py`` (``pick_tile`` divisibility
+  guarantees, ``default_interpret``, the jaxpr-walking dispatch counter);
+* the dispatch-count gate the CI serving job runs by name
+  (``test_fused_decode_dispatch_count``): the legacy decode path issues
+  THREE ``pallas_call``s, the fused megakernel exactly ONE;
+* property tests (hypothesis where available — the container may not have
+  it, so they are import-guarded like tests/test_serving_paged.py, with
+  seeded sweeps that always run covering the same invariants).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import api, fff
+from repro.kernels import common
+from repro.kernels.fused_decode import ops as fd_ops
+from repro.kernels.fused_decode import fused_forest_decode
+from repro.kernels.fused_decode.ref import fused_decode_ref as fd_kernel_ref
+from repro.kernels.fused_fff import (fff_decode, gathered_matmul,
+                                     gathered_matmul_ref)
+from repro.kernels.leaf_gemm import grouped_matmul, grouped_matmul_ref
+from repro.kernels.tree_router import route, tree_router_ref
+from repro.models import lm
+from repro.serving import ContinuousBatchingEngine, EngineConfig, Request
+
+from conftest import assert_close
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # container has no
+    HAVE_HYPOTHESIS = False                           # hypothesis; the
+                                                      # seeded sweeps below
+                                                      # cover the properties
+
+# the shared differential matrix: every kernel-vs-oracle test draws its
+# axes from here so adding a case exercises the whole kernel surface
+DTYPES = [jnp.float32, jnp.bfloat16]
+DEPTHS = [1, 2, 4]
+LEAF_WIDTHS = [4, 8]
+ODD_BATCHES = [1, 7, 37]            # non-power-of-two: no tile evenly fits
+
+
+def _fff_cfg(depth=3, act="gelu", trees=1, dim=16, leaf=8):
+    return fff.FFFConfig(dim_in=dim, dim_out=dim, depth=depth,
+                         leaf_width=leaf, activation=act, trees=trees,
+                         leaf_bias=False)
+
+
+def _fff(seed, **kw):
+    cfg = _fff_cfg(**kw)
+    return fff.init(jax.random.PRNGKey(seed), cfg), cfg
+
+
+def _cast(tree, dtype):
+    return jax.tree_util.tree_map(lambda a: a.astype(dtype), tree)
+
+
+# ---------------------------------------------------------------------------
+# kernels/common.py units
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 7, 8, 20, 37, 96, 100, 128, 1000])
+@pytest.mark.parametrize("preferred", [1, 8, 12, 64, 128])
+def test_pick_tile_always_divides(n, preferred):
+    t = common.pick_tile(n, preferred)
+    assert 1 <= t <= max(n, preferred)
+    assert n % t == 0, (n, preferred, t)       # grids are sized n // tile
+
+
+def test_pick_tile_small_n_is_whole():
+    # n <= preferred: one whole tile, never split (the edge the old
+    # fall-through mishandled for n below the alignment)
+    for n in (1, 2, 3, 5, 7):
+        assert common.pick_tile(n, 8) == n
+        assert common.pick_tile(n, 128, align=8) == n
+
+
+def test_pick_tile_prefers_aligned_divisor():
+    assert common.pick_tile(128, 64) == 64             # aligned, divides
+    assert common.pick_tile(96, 64) == 48              # largest aligned
+    assert common.pick_tile(20, 12, align=2) == 10     # largest 2-aligned
+    assert common.pick_tile(20, 12, align=8) == 10     # none 8-aligned:
+    assert common.pick_tile(13, 8) == 1                # largest divisor wins
+
+
+def test_pick_tile_rejects_degenerate_axes():
+    with pytest.raises(ValueError):
+        common.pick_tile(0, 8)
+    with pytest.raises(ValueError):
+        common.pick_tile(-4, 8)
+    with pytest.raises(ValueError):
+        common.pick_tile(16, 8, align=0)
+
+
+def test_default_interpret_tracks_backend():
+    assert common.default_interpret() == (jax.default_backend() != "tpu")
+    assert common.default_interpret() is True          # this container: CPU
+
+
+def test_count_pallas_calls_sees_through_jit():
+    p, cfg = _fff(0, depth=2)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.dim_in))
+    fn = jax.jit(lambda x: fd_ops.fused_decode(x, p, cfg, interpret=True))
+    assert common.count_pallas_calls(fn, x) == 1       # recurses pjit
+
+
+# ---------------------------------------------------------------------------
+# the dispatch-count gate (CI runs this by name): 3 -> 1
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("act,trees", [("gelu", 1), ("swiglu", 2)])
+def test_fused_decode_dispatch_count(act, trees):
+    """The whole point of the megakernel: the legacy decode path costs a
+    router dispatch plus two gathered-matmul dispatches per tree; the fused
+    path is ONE ``pallas_call`` for the entire forest."""
+    p, cfg = _fff(0, depth=3, act=act, trees=trees)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.dim_in))
+    legacy = lambda x: fff_decode(x, p, cfg, interpret=True)
+    fused = lambda x: fd_ops.fused_decode(x, p, cfg, interpret=True)
+    # legacy: router + up-projection (dual for swiglu) + down, PER TREE
+    assert common.count_pallas_calls(legacy, x) == 3 * trees
+    assert common.count_pallas_calls(fused, x) == 1
+
+
+def test_pallas_decode_backend_dispatch_count():
+    """Same gate one level up, through the execution registry — what the
+    serving engine's decode step actually traces."""
+    p, cfg = _fff(0, depth=3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 1, cfg.dim_in))
+    spec = api.ExecutionSpec(mode="infer", backend="pallas_decode",
+                             interpret=True)
+    assert common.count_pallas_calls(
+        lambda x: api.apply(p, cfg, x, spec)[0], x) == 1
+
+
+# ---------------------------------------------------------------------------
+# differential matrix: tree_router
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B", ODD_BATCHES)
+@pytest.mark.parametrize("depth", DEPTHS)
+def test_diff_router(depth, B):
+    N, dim = 2 ** depth - 1, 32
+    x = jax.random.normal(jax.random.PRNGKey(depth), (B, dim))
+    nw = jax.random.normal(jax.random.PRNGKey(B), (N, dim)) / np.sqrt(dim)
+    nb = jax.random.normal(jax.random.PRNGKey(B + 1), (N,)) * 0.1
+    got = route(x, nw, nb, depth=depth, interpret=True)
+    want = tree_router_ref(x, nw, nb, depth=depth)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_diff_router_dtypes(dtype):
+    depth, dim, B = 4, 32, 64
+    N = 2 ** depth - 1
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, dim)).astype(dtype)
+    nw = (jax.random.normal(jax.random.PRNGKey(1), (N, dim)) / 8).astype(dtype)
+    nb = jnp.zeros((N,), dtype)
+    got = route(x, nw, nb, depth=depth, interpret=True)
+    want = tree_router_ref(x, nw, nb, depth=depth)
+    if dtype == jnp.float32:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:          # bf16 can flip near-zero boundary decisions
+        assert float((got == want).mean()) > 0.99
+
+
+def test_diff_router_degenerate_all_one_leaf():
+    """Hyperplanes rigged so every token descends to the same leaf —
+    the skew that breaks anything assuming balanced occupancy."""
+    depth, dim, B = 3, 16, 37
+    N, E = 2 ** depth - 1, 2 ** depth
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, dim))
+    nw = jnp.zeros((N, dim))
+    for target, bias in [(0, -1.0), (E - 1, 1.0)]:     # all-left / all-right
+        nb = jnp.full((N,), bias)
+        got = route(x, nw, nb, depth=depth, interpret=True)
+        want = tree_router_ref(x, nw, nb, depth=depth)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert int(got[0]) == target and bool((got == got[0]).all())
+
+
+# ---------------------------------------------------------------------------
+# differential matrix: leaf_gemm (grouped) and fused_fff (gathered)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("H", LEAF_WIDTHS)
+def test_diff_grouped_matmul(dtype, H):
+    E, C, D = 3, 16, 32
+    k = jax.random.PRNGKey(H)
+    gs = jax.random.randint(jax.random.fold_in(k, 0), (E,), 0, C + 1)
+    mask = (jnp.arange(C)[None, :] < gs[:, None])
+    x = (jax.random.normal(jax.random.fold_in(k, 1), (E, C, D))
+         * mask[..., None]).astype(dtype)
+    w = (jax.random.normal(jax.random.fold_in(k, 2), (E, D, H))
+         / np.sqrt(D)).astype(dtype)
+    got = grouped_matmul(x, w, gs.astype(jnp.int32), act="gelu", block_c=8,
+                         block_h=4, block_k=8, interpret=True)
+    want = grouped_matmul_ref(x, w, gs.astype(jnp.int32), act="gelu")
+    assert_close(got, want, dtype=dtype)
+
+
+def test_diff_grouped_matmul_skew_one_group():
+    # degenerate grouping: every token in group 0, the rest empty
+    E, C, D, H = 4, 16, 16, 8
+    k = jax.random.PRNGKey(9)
+    gs = jnp.array([C, 0, 0, 0], jnp.int32)
+    mask = (jnp.arange(C)[None, :] < gs[:, None])
+    x = jax.random.normal(jax.random.fold_in(k, 1), (E, C, D)) \
+        * mask[..., None]
+    w = jax.random.normal(jax.random.fold_in(k, 2), (E, D, H)) / np.sqrt(D)
+    got = grouped_matmul(x, w, gs, act="relu", block_c=8, block_h=8,
+                         block_k=8, interpret=True)
+    assert_close(got, grouped_matmul_ref(x, w, gs, act="relu"))
+    assert float(jnp.abs(got[1:]).max()) == 0.0
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B", ODD_BATCHES)
+def test_diff_gathered_matmul(dtype, B):
+    E, D, H = 8, 16, 8
+    x = jax.random.normal(jax.random.PRNGKey(B), (B, D)).astype(dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(B + 1), (E, D, H))
+         / np.sqrt(D)).astype(dtype)
+    idx = jax.random.randint(jax.random.PRNGKey(B + 2), (B,), 0, E)
+    got = gathered_matmul(x, w, idx, act="gelu", block_h=8, block_k=8,
+                          interpret=True)
+    assert_close(got, gathered_matmul_ref(x, w, idx, act="gelu"), dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# differential matrix: fused_decode (the megakernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B", ODD_BATCHES)
+@pytest.mark.parametrize("leaf", LEAF_WIDTHS)
+@pytest.mark.parametrize("depth", DEPTHS)
+@pytest.mark.parametrize("act,trees", [("gelu", 1), ("relu", 2),
+                                       ("swiglu", 1), ("swiglu", 2)])
+def test_diff_fused_decode(act, trees, depth, leaf, B):
+    p, cfg = _fff(depth * 10 + B, depth=depth, act=act, trees=trees,
+                  leaf=leaf)
+    x = jax.random.normal(jax.random.PRNGKey(B), (B, cfg.dim_in))
+    y, idx = fd_ops.fused_decode(x, p, cfg, interpret=True,
+                                 return_leaf_idx=True)
+    y_ref, idx_ref = fd_ops.fused_decode_ref(x, p, cfg, return_leaf_idx=True)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_ref))
+    assert_close(y, y_ref)
+    assert idx.shape == (B, trees) and y.shape == (B, cfg.dim_out)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_diff_fused_decode_dtypes(dtype):
+    p, cfg = _fff(3, depth=3, act="gelu", trees=1)
+    p = _cast(p, dtype)
+    x = jax.random.normal(jax.random.PRNGKey(4), (32, cfg.dim_in)) \
+        .astype(dtype)
+    y, idx = fd_ops.fused_decode(x, p, cfg, interpret=True,
+                                 return_leaf_idx=True)
+    y_ref, idx_ref = fd_ops.fused_decode_ref(x, p, cfg, return_leaf_idx=True)
+    assert y.dtype == dtype
+    if dtype == jnp.float32:
+        np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_ref))
+        assert_close(y, y_ref)
+    else:
+        # bf16 routing can flip near-zero boundary logits between the
+        # kernel's and the oracle's accumulation orders: require near-total
+        # path agreement and value parity on the agreeing rows
+        agree = np.asarray((idx == idx_ref).all(axis=1))
+        assert float(agree.mean()) >= 0.9
+        assert_close(jnp.asarray(y)[agree], jnp.asarray(y_ref)[agree],
+                     dtype=dtype)
+
+
+def test_diff_fused_decode_degenerate_routing():
+    """All-one-leaf forest: zero hyperplanes with a uniform bias sign push
+    every token down one side; the fused output must equal that single
+    leaf's MLP applied to every token."""
+    depth, dim, leaf, B = 3, 16, 8, 21
+    N, E = 2 ** depth - 1, 2 ** depth
+    k = jax.random.PRNGKey(5)
+    x = jax.random.normal(k, (B, dim))
+    nw = jnp.zeros((1, N, dim))
+    w1 = jax.random.normal(jax.random.fold_in(k, 1), (1, E, dim, leaf)) \
+        / np.sqrt(dim)
+    w2 = jax.random.normal(jax.random.fold_in(k, 2), (1, E, leaf, dim)) \
+        / np.sqrt(leaf)
+    for target, bias in [(0, -1.0), (E - 1, 1.0)]:
+        nb = jnp.full((1, N), bias)
+        y, idx = fused_forest_decode(x, nw, nb, (w1, w2), depth=depth,
+                                     act="gelu", interpret=True)
+        assert bool((idx == target).all())
+        h = jax.nn.gelu(x.astype(jnp.float32) @ w1[0, target])
+        assert_close(y, h @ w2[0, target])
+
+
+def test_diff_fused_decode_rejects_unsupported():
+    cfg = _fff_cfg(depth=2)
+    p = fff.init(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((2, cfg.dim_in))
+    bad = fff.FFFConfig(dim_in=16, dim_out=16, depth=2, leaf_width=8,
+                        node_width=2, leaf_bias=False)
+    with pytest.raises(ValueError, match="node_width"):
+        fd_ops.fused_decode(x, fff.init(jax.random.PRNGKey(0), bad), bad)
+    biased = fff.FFFConfig(dim_in=16, dim_out=16, depth=2, leaf_width=8,
+                           leaf_bias=True)
+    with pytest.raises(ValueError, match="bias-free"):
+        fd_ops.fused_decode(x, fff.init(jax.random.PRNGKey(0), biased),
+                            biased)
+    with pytest.raises(ValueError, match="depth"):
+        zero = fff.FFFConfig(dim_in=16, dim_out=16, depth=0, leaf_width=8,
+                             leaf_bias=False)
+        fd_ops.fused_decode(x, fff.init(jax.random.PRNGKey(0), zero), zero)
+
+
+# ---------------------------------------------------------------------------
+# registry integration: resolution, sentinel masking, telemetry
+# ---------------------------------------------------------------------------
+
+def test_resolver_routes_decode_shape_to_fused(monkeypatch):
+    """On kernel-native platforms the auto resolver sends seq-len-1 infer
+    to the megakernel and wider shapes to the grouped pallas path; on this
+    CPU container everything stays on reference."""
+    p, cfg = _fff(0, depth=3)
+    assert api.resolve_backend(p, cfg, "infer",
+                               x_shape=(4, 1, cfg.dim_in)) == "reference"
+    monkeypatch.setattr(api, "_kernels_native", lambda: True)
+    assert api.resolve_backend(p, cfg, "infer",
+                               x_shape=(4, 1, cfg.dim_in)) == "pallas_decode"
+    assert api.resolve_backend(p, cfg, "infer",
+                               x_shape=(4, 16, cfg.dim_in)) == "pallas"
+    assert api.resolve_backend(p, cfg, "infer",
+                               x_shape=(4, cfg.dim_in)) == "pallas"
+
+
+def test_pallas_decode_backend_matches_reference():
+    for act, trees in [("gelu", 1), ("swiglu", 2)]:
+        p, cfg = _fff(1, depth=3, act=act, trees=trees)
+        x = jax.random.normal(jax.random.PRNGKey(2), (5, 1, cfg.dim_in))
+        y, out = api.apply(p, cfg, x, api.ExecutionSpec(
+            mode="infer", backend="pallas_decode", interpret=True))
+        y_ref, out_ref = api.apply(p, cfg, x, api.ExecutionSpec(
+            mode="infer", backend="reference"))
+        np.testing.assert_array_equal(np.asarray(out.leaf_idx),
+                                      np.asarray(out_ref.leaf_idx))
+        assert_close(y, y_ref, kind="e2e")
+
+
+def test_pallas_decode_sentinel_masking_and_telemetry():
+    """``ExecutionSpec.valid`` must mask leaf telemetry to the sentinel id
+    (num_leaves) for phantom rows — the engine's free slots — while outputs
+    stay per-token exact; routing_stats drops the sentinel column."""
+    p, cfg = _fff(2, depth=2, trees=1)
+    B = 4
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, 1, cfg.dim_in))
+    valid = jnp.array([True, False, True, False])[:, None]
+    spec = api.ExecutionSpec(mode="infer", backend="pallas_decode",
+                             interpret=True, valid=valid)
+    y, out = api.apply(p, cfg, x, spec)
+    y_all, out_all = api.apply(p, cfg, x, api.ExecutionSpec(
+        mode="infer", backend="pallas_decode", interpret=True))
+    # outputs exact for every row (exact backend ignores valid for y)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_all))
+    idx = np.asarray(out.leaf_idx)[:, 0, :]
+    assert (idx[1] == cfg.num_leaves).all()
+    assert (idx[3] == cfg.num_leaves).all()
+    np.testing.assert_array_equal(idx[0], np.asarray(out_all.leaf_idx)[0, 0])
+    stats = api.routing_stats_from(out, cfg)
+    assert stats.leaf_counts.shape[-1] == cfg.num_leaves  # sentinel dropped
+    assert float(stats.slots) == 2.0 * cfg.trees          # only valid rows
+    np.testing.assert_array_equal(
+        np.asarray(stats.leaf_counts).sum(axis=-1),
+        np.array([1.0, 0.0, 1.0, 0.0]) * cfg.trees)
+
+
+# ---------------------------------------------------------------------------
+# engine parity under the flag
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = registry.get_config("internlm2-20b", ffn="fff").reduced()
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_engine_pallas_decode_matches_lm_generate(model):
+    """Greedy engine output with the fused-decode flag on must equal the
+    synchronous lm.generate path — the acceptance gate for wiring the
+    megakernel into serving (DESIGN.md §13)."""
+    cfg, params = model
+    rng = np.random.default_rng(6)
+    reqs = [Request(rid=i, prompt=rng.integers(1, 256, int(rng.integers(3, 9))),
+                    max_new_tokens=5) for i in range(3)]
+    eng = ContinuousBatchingEngine(params, cfg, EngineConfig(
+        num_slots=2, max_len=32, max_prompt_len=8, seed=0,
+        pallas_decode=True))
+    results, _ = eng.run(reqs)
+    assert sorted(r.rid for r in results) == [0, 1, 2]
+    for r in results:
+        want = lm.generate(params, cfg, jnp.asarray(r.prompt[None]),
+                           steps=r.n_generated, max_len=32)
+        np.testing.assert_array_equal(
+            np.asarray(want)[0], np.concatenate([r.prompt, r.tokens]),
+            err_msg=f"rid {r.rid}")
+
+
+# ---------------------------------------------------------------------------
+# property tests: descent bit-path and telemetry bit-mask invariants
+# ---------------------------------------------------------------------------
+
+def _heap_descent(logits, depth):
+    """Independent formulation of FORWARD_I: walk the heap-ordered tree
+    (level-major; node g at level m sits at offset 2^m - 1 + its in-level
+    index), taking the right child on a nonnegative logit."""
+    idx = 0
+    for m in range(depth):
+        idx = 2 * idx + (1 if logits[2 ** m - 1 + idx] >= 0.0 else 0)
+    return idx
+
+
+def _check_descent_bits(logits, depth):
+    nw = jnp.zeros((1, 2 ** depth - 1, 4))
+    nb = jnp.asarray(logits, jnp.float32)[None, :]
+    E, leaf = 2 ** depth, 2
+    w1 = jnp.ones((1, E, 4, leaf))
+    w2 = jnp.ones((1, E, leaf, 4))
+    _, idx = fused_forest_decode(jnp.zeros((1, 4)), nw, nb, (w1, w2),
+                                 depth=depth, act="none", interpret=True)
+    want = _heap_descent(list(logits), depth)
+    assert int(idx[0, 0]) == want, (list(logits), depth, int(idx[0, 0]), want)
+    # bit m of the leaf index == sign bit of the level-m logit on the path
+    path, node = [], 0
+    for m in range(depth):
+        bit = (want >> (depth - 1 - m)) & 1
+        assert bit == (1 if logits[2 ** m - 1 + node] >= 0.0 else 0)
+        node = 2 * node + bit
+
+
+def test_descent_bit_path_seeded_sweep():
+    rng = np.random.default_rng(0)
+    for depth in (1, 2, 3, 5):
+        for _ in range(10):
+            logits = rng.normal(size=2 ** depth - 1) * rng.choice([1e-3, 1.0])
+            _check_descent_bits(logits, depth)
+    _check_descent_bits(np.zeros(7), 3)        # ties: >= 0 goes right
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(depth=st.integers(1, 5), data=st.data())
+    def test_descent_bit_path_property(depth, data):
+        logits = data.draw(st.lists(
+            st.floats(-4.0, 4.0, allow_nan=False, width=32),
+            min_size=2 ** depth - 1, max_size=2 ** depth - 1))
+        _check_descent_bits(np.asarray(logits), depth)
+
+
+def _check_mask_invariant(ids, E):
+    """routing_stats must drop exactly the sentinel column: per-row counts
+    sum to the row's non-sentinel entries and the histogram is a bincount."""
+    ids = np.asarray(ids, np.int32).reshape(-1, 1)
+    cfg = _fff_cfg(depth=int(np.log2(E)))
+    out = api.FFFOutput(leaf_idx=jnp.asarray(ids),
+                        overflow_fraction=jnp.zeros((), jnp.float32))
+    stats = api.routing_stats_from(out, cfg)
+    counts = np.asarray(stats.leaf_counts)
+    assert counts.shape == (ids.shape[0], E)
+    want = np.zeros((ids.shape[0], E))
+    for b, row in enumerate(ids):
+        for v in row:
+            if v < E:                           # sentinel id E is dropped
+                want[b, v] += 1
+    np.testing.assert_array_equal(counts, want)
+    assert float(stats.slots) == float((ids < E).sum())
+
+
+def test_routing_mask_invariant_seeded_sweep():
+    rng = np.random.default_rng(1)
+    for E in (2, 4, 8):
+        for _ in range(10):
+            n = int(rng.integers(1, 12))
+            ids = rng.integers(0, E + 1, n)     # includes the sentinel id E
+            _check_mask_invariant(ids, E)
+    _check_mask_invariant(np.full(5, 4), 4)     # all-sentinel (no valid rows)
+    _check_mask_invariant(np.zeros(6), 4)       # all-one-leaf skew
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=50, deadline=None)
+    @given(e_pow=st.integers(1, 3), data=st.data())
+    def test_routing_mask_invariant_property(e_pow, data):
+        E = 2 ** e_pow
+        ids = data.draw(st.lists(st.integers(0, E), min_size=1, max_size=16))
+        _check_mask_invariant(ids, E)

@@ -1,5 +1,9 @@
 """Pallas kernel correctness: shape/dtype sweeps vs the pure-jnp oracles,
-all in interpret mode (CPU container; TPU is the lowering target)."""
+all in interpret mode (CPU container; TPU is the lowering target).
+
+Tolerances come from the shared dtype-keyed policy in conftest.py
+(``assert_close``) — the differential harness in test_kernel_diff.py uses
+the same one, so both suites move together."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +19,8 @@ from repro.kernels.leaf_gemm import (fff_infer, grouped_matmul,
                                      grouped_matmul_dual_ref,
                                      grouped_matmul_ref)
 from repro.kernels.tree_router import route, tree_router_ref
+
+from conftest import assert_close
 
 
 # ---------------------------------------------------------------------------
@@ -91,8 +97,7 @@ def test_grouped_matmul_sweep(act, shape):
     got = grouped_matmul(x, w, gs, act=act, block_c=8, block_h=8, block_k=8,
                          interpret=True)
     want = grouped_matmul_ref(x, w, gs, act=act)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+    assert_close(got, want)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -101,10 +106,7 @@ def test_grouped_matmul_dtypes(dtype):
     got = grouped_matmul(x, w, gs, act="gelu", block_c=8, block_h=8,
                          block_k=16, interpret=True)
     want = grouped_matmul_ref(x, w, gs, act="gelu")
-    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
-    np.testing.assert_allclose(np.asarray(got, np.float32),
-                               np.asarray(want, np.float32),
-                               rtol=tol, atol=tol)
+    assert_close(got, want, dtype=dtype)
 
 
 def test_grouped_matmul_dual_swiglu():
@@ -114,8 +116,7 @@ def test_grouped_matmul_dual_swiglu():
     got = grouped_matmul_dual(x, wg, wu, gs, block_c=8, block_h=8, block_k=8,
                               interpret=True)
     want = grouped_matmul_dual_ref(x, wg, wu, gs)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+    assert_close(got, want)
 
 
 def test_grouped_empty_groups_produce_zeros():
@@ -143,8 +144,7 @@ def test_gathered_matmul_sweep(act, E, B, D, H):
     got = gathered_matmul(x, w, idx, act=act, block_h=8, block_k=8,
                           interpret=True)
     want = gathered_matmul_ref(x, w, idx, act=act)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+    assert_close(got, want)
 
 
 def test_gathered_dual():
@@ -156,8 +156,7 @@ def test_gathered_dual():
     got = gathered_matmul_dual(x, wg, wu, idx, block_h=8, block_k=8,
                                interpret=True)
     want = gathered_matmul_dual_ref(x, wg, wu, idx)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+    assert_close(got, want)
 
 
 # ---------------------------------------------------------------------------
@@ -175,10 +174,8 @@ def test_fff_infer_matches_forward_hard(act, trees):
                         api.ExecutionSpec(mode="infer", backend="reference"))
     got_grouped = fff_infer(x, p, cfg, capacity_factor=8.0, interpret=True)
     got_decode = fff_decode(x, p, cfg, interpret=True)
-    np.testing.assert_allclose(np.asarray(got_grouped), np.asarray(want),
-                               rtol=1e-3, atol=1e-3)
-    np.testing.assert_allclose(np.asarray(got_decode), np.asarray(want),
-                               rtol=1e-3, atol=1e-3)
+    assert_close(got_grouped, want, kind="e2e")
+    assert_close(got_decode, want, kind="e2e")
 
 
 def test_fff_infer_overflow_fallback_exact():
@@ -189,8 +186,7 @@ def test_fff_infer_overflow_fallback_exact():
     want, _ = api.apply(p, cfg, x,
                         api.ExecutionSpec(mode="infer", backend="reference"))
     got = fff_infer(x, p, cfg, capacity_factor=0.2, interpret=True)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-3, atol=1e-3)
+    assert_close(got, want, kind="e2e")
 
 
 def test_fff_leaf_mlp_skewed_overflow_exact():
@@ -218,5 +214,4 @@ def test_fff_leaf_mlp_skewed_overflow_exact():
                                preferred_element_type=jnp.float32))
     want = jnp.einsum("bh,bho->bo", h, w2,
                       preferred_element_type=jnp.float32)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
+    assert_close(got, want)
