@@ -35,7 +35,11 @@ ROW_KEYS = {"name", "us_per_call"}
 #                record kind: "engine" = EngineMetrics.as_dict() runs,
 #                "rows" = kernel-benchmark CSV rows)
 SCHEMAS = {
-    "serving_load": ({"bench", "quick", "slots", "classes", "runs"}, "runs",
+    # serving_load additionally carries the capacity<1.0 overflow-policy
+    # sections (DESIGN.md §14): policy throughput gate, balanced-training
+    # overflow gate, and the approximate-repair error bound
+    "serving_load": ({"bench", "quick", "slots", "classes", "policy_compare",
+                      "balance_compare", "repair_error", "runs"}, "runs",
                      "engine"),
     "serving_chunked": ({"bench", "quick", "slots", "chunk",
                          "decode_interval_p99_drop", "stall_bound_tokens",

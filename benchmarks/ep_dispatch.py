@@ -74,8 +74,19 @@ def run(ms: list[int], quick: bool = False) -> list[dict]:
         cap = dispatch_lib.ep_capacity(tokens_per_shard, E, CAPACITY_FACTOR)
         moved = (dispatch_lib.ep_bytes_moved(E, m, DIM, DIM, cap)
                  if m > 1 else 0)
+        # overflow-policy traffic accounting (DESIGN.md §14): exact_dense
+        # pays a worst-case repair round on top of the two all_to_alls;
+        # master_leaf / drop statically omit it
+        repair_exact = (dispatch_lib.ep_bytes_moved(
+            E, m, DIM, DIM, cap, overflow_policy="exact_dense",
+            tokens_per_shard=tokens_per_shard) - moved if m > 1 else 0)
+        repair_master = (dispatch_lib.ep_bytes_moved(
+            E, m, DIM, DIM, cap, overflow_policy="master_leaf",
+            tokens_per_shard=tokens_per_shard) - moved if m > 1 else 0)
         rows.append(dict(m=m, us=us, tokens_per_s=BATCH / (us * 1e-6),
-                         capacity=cap, bytes_moved=moved))
+                         capacity=cap, bytes_moved=moved,
+                         repair_bytes_exact_dense=repair_exact,
+                         repair_bytes_master_leaf=repair_master))
     return rows
 
 
@@ -87,7 +98,20 @@ def main(quick: bool = True):
         print(f"ep_dispatch/model_shards_{r['m']},{r['us']:.1f},"
               f"tokens_per_s={r['tokens_per_s']:.0f};"
               f"per_shard_capacity={r['capacity']};"
-              f"bytes_moved_per_shard={r['bytes_moved']}")
+              f"bytes_moved_per_shard={r['bytes_moved']};"
+              f"repair_bytes_exact_dense={r['repair_bytes_exact_dense']};"
+              f"repair_bytes_master_leaf={r['repair_bytes_master_leaf']}")
+    # the policy gate (DESIGN.md §14): master_leaf must report ZERO repair
+    # bytes on every sharded point while exact_dense pays a real round —
+    # the static-omission claim of grouped_leaf_apply_ep, in numbers
+    sharded = [r for r in rows if r["m"] > 1]
+    bad = [r["m"] for r in sharded if r["repair_bytes_master_leaf"] != 0]
+    assert not bad, f"master_leaf repair bytes nonzero at M={bad}"
+    assert all(r["repair_bytes_exact_dense"] > 0 for r in sharded), \
+        "exact_dense repair round reported as free"
+    print(f"# overflow-policy gate: master_leaf repair bytes == 0 on "
+          f"{len(sharded)} sharded points (exact_dense pays "
+          f"{[r['repair_bytes_exact_dense'] for r in sharded]})")
     return rows
 
 

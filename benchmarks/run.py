@@ -11,10 +11,16 @@
              shape, asserting the one-pallas_call dispatch contract
              (DESIGN.md §13; writes BENCH_roofline.json)
   ep_dispatch -> grouped_ep dispatch-locality curve: tokens/s, per-shard
-                 capacity and bytes moved vs model-shard count (DESIGN.md §5)
+                 capacity and bytes moved vs model-shard count, plus the
+                 overflow-policy traffic gate (master_leaf repair bytes == 0,
+                 exact_dense pays a real round) (DESIGN.md §5, §14)
   serving -> continuous-batching engine under Poisson load, fcfs vs
              leaf_aware admission: throughput / TTFT / per-token latency /
-             overflow_fraction (DESIGN.md §9; writes BENCH_serving.json)
+             overflow_fraction; plus the capacity<1.0 overflow-policy
+             sections — master_leaf-vs-exact_dense decode tok/s gate,
+             balanced-vs-unbalanced training overflow gate, approximate-
+             repair error bound (DESIGN.md §9, §14; writes
+             BENCH_serving_load.json)
   serving_chunked -> chunked vs monolithic prefill under long-prompt
              arrivals: decode-interval p99 / throughput / TTFT
              (DESIGN.md §9; writes BENCH_serving_chunked.json)

@@ -11,12 +11,24 @@ routing-profile story from DESIGN.md §9).  Under the capacity-bounded
 overflow_fraction: FCFS admits bursts wholesale (one hot leaf), while the
 ``leaf_aware`` scheduler interleaves classes to balance leaf load.
 
+On top of the scheduler comparison, three capacity-under-provisioned
+(``capacity_factor < 1.0``) sections measure the DESIGN.md §14 contract:
+
+* ``policy_compare`` — master-leaf overflow repair vs the exact dense
+  fallback at equal slots: decode-phase tokens/s ratio (gate >= 1.2x);
+* ``balance_compare`` — a briefly load-balance-trained checkpoint vs the
+  same steps without the balance aux, served on a leaf-colliding workload:
+  decode overflow must drop;
+* ``repair_error`` — per-token output delta of the approximate master-leaf
+  repair vs the exact output on dropped tokens (bounded and reported).
+
 Emits CSV rows
 ``serving,<sched>,<rate>,<tok_s>,<ttft_p50_ms>,<per_tok_p50_ms>,<ovf>,<ovf_decode>``
-and writes ``experiments/BENCH_serving.json``.
+and writes ``experiments/BENCH_serving_load.json``.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 
@@ -25,17 +37,41 @@ import jax.numpy as jnp
 import numpy as np
 
 ARTIFACT = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "experiments", "BENCH_serving.json")
+    os.path.abspath(__file__))), "experiments", "BENCH_serving_load.json")
 
 PROMPT_LEN = 16
 GEN = 12
 N_CLASSES = 4
+
+# the capacity-under-provisioned sections (DESIGN.md §14)
+POLICY_CF = 0.5             # per-leaf capacity deliberately halved
+POLICY_GEN = 24             # decode-heavy: the phase the policy governs
+TOK_S_RATIO_GATE = 1.2      # master_leaf decode tok/s vs exact_dense
+REPAIR_ERROR_BOUND = 1.0    # mean per-token relative delta on dropped tokens
 
 
 def _model(seed: int = 0):
     from repro.configs import registry
     from repro.models import lm
     cfg = registry.get_config("internlm2-20b", ffn="fff").reduced()
+    params = lm.init(jax.random.PRNGKey(seed), cfg)
+    return cfg, params
+
+
+def _policy_model(seed: int = 0, balance: float = 0.0):
+    """The §14 sections' model: the reduced config with a fatter FFF site
+    (deeper tree, wider leaves, two trees) so the FFF dispatch — the thing
+    the overflow policy governs — actually dominates the decode step, plus
+    the always-on master leaf the ``master_leaf`` policy repairs with."""
+    from repro.configs import registry
+    from repro.models import lm
+    cfg = registry.get_config("internlm2-20b", ffn="fff").reduced()
+    period = tuple(
+        dataclasses.replace(b, ffn=dataclasses.replace(
+            b.ffn, fff_master_leaf=True, fff_depth=4, fff_leaf_width=128,
+            fff_trees=2, balance_scale=balance))
+        if b.ffn.kind == "fff" else b for b in cfg.period)
+    cfg = dataclasses.replace(cfg, period=period)
     params = lm.init(jax.random.PRNGKey(seed), cfg)
     return cfg, params
 
@@ -54,7 +90,8 @@ def calibrate_classes(params, cfg, n_classes: int, max_probe: int = 64):
 
     def footprint(tok: int) -> np.ndarray:
         caches = lm.init_caches(cfg, 1, PROMPT_LEN + 1)
-        with api.collect_routing(), api.use_backend("grouped", mode="infer"):
+        with api.collect_routing(), \
+                api.overrides(backend="grouped", mode="infer"):
             _, _, stats = probe(params,
                                 jnp.full((1, PROMPT_LEN), tok, jnp.int32),
                                 caches)
@@ -77,6 +114,37 @@ def calibrate_classes(params, cfg, n_classes: int, max_probe: int = 64):
     return classes
 
 
+def calibrate_collisions(params, cfg, n_classes: int, max_probe: int = 64):
+    """The inverse calibration: ``n_classes`` prompt tokens whose prompts all
+    route dominantly to the SAME leaf — the workload a load-balancing aux
+    loss exists to fix (DESIGN.md §14).  Returns [(token, footprint)] with a
+    shared leading leaf."""
+    from repro.core import api
+    from repro.models import lm
+
+    probe = jax.jit(lambda p, t, c: lm.prefill_padded(
+        p, cfg, {"tokens": t}, c, jnp.full((1,), PROMPT_LEN, jnp.int32)))
+    by_leaf: dict = {}
+    for tok in range(1, max_probe):
+        caches = lm.init_caches(cfg, 1, PROMPT_LEN + 1)
+        with api.collect_routing(), \
+                api.overrides(backend="grouped", mode="infer"):
+            _, _, stats = probe(params,
+                                jnp.full((1, PROMPT_LEN), tok, jnp.int32),
+                                caches)
+        c = np.asarray(next(s.leaf_counts[0] for s in stats if s is not None),
+                       np.float64)
+        f = c / max(c.sum(), 1e-9)
+        by_leaf.setdefault(int(f.argmax()), []).append((tok, f))
+        if max(len(v) for v in by_leaf.values()) >= n_classes:
+            break
+    leaf, group = max(by_leaf.items(), key=lambda kv: len(kv[1]))
+    if len(group) < n_classes:
+        raise RuntimeError(f"collision calibration found only {len(group)} "
+                           f"tokens sharing leaf {leaf} in {max_probe} probes")
+    return group[:n_classes]
+
+
 def make_workload(classes, *, n_requests: int, burst: int, rate: float,
                   seed: int, gen: int = GEN, prompt_len: int = PROMPT_LEN):
     """Per-class bursts of ``burst`` requests with Poisson arrivals at
@@ -96,18 +164,196 @@ def make_workload(classes, *, n_requests: int, burst: int, rate: float,
     return reqs
 
 
-def run_one(params, cfg, *, scheduler: str, slots: int, reqs, seed: int):
+def run_one(params, cfg, *, scheduler: str, slots: int, reqs, seed: int,
+            gen: int = GEN, capacity_factor=None, overflow_policy=None,
+            warm: bool = False):
     from repro.serving import ContinuousBatchingEngine, EngineConfig
     kw = {"window": 4 * slots} if scheduler == "leaf_aware" else {}
     ecfg = EngineConfig(
-        num_slots=slots, max_len=PROMPT_LEN + GEN + 1,
+        num_slots=slots, max_len=PROMPT_LEN + gen + 1,
         max_prompt_len=PROMPT_LEN, scheduler=scheduler, scheduler_kw=kw,
         fff_backend="grouped",          # capacity-bounded dispatch: the
         max_prefills_per_step=slots,    # regime where composition matters
+        capacity_factor=capacity_factor,
+        overflow_policy=overflow_policy,
         seed=seed)
     engine = ContinuousBatchingEngine(params, cfg, ecfg)
+    if warm:
+        engine.run(reqs)                # compile outside the measured run
     _, m = engine.run(reqs)
     return m
+
+
+def decode_tok_s(m) -> float:
+    """Decode-phase tokens/s: every generated token comes out of a decode
+    dispatch, so this is the equal-slots throughput the overflow policy
+    governs (whole-run tok/s also counts prefill + host scheduling)."""
+    dec_s = m.decode_step.mean_ms / 1e3 * m.decode_step.n
+    return m.n_tokens / max(dec_s, 1e-9)
+
+
+def train_checkpoint(params0, class_tokens, *, balance: float, steps: int,
+                     seed: int = 0, batch: int = 32, seq: int = 24,
+                     lr: float = 3e-3):
+    """Fine-tune the policy model on repeated-class-token rows for ``steps``
+    adamw steps; ``balance`` weights the FFF load-balancing aux (0 = the
+    unbalanced baseline trained identically otherwise).  Returns (params,
+    per-step metric dicts)."""
+    from repro import optim
+    from repro.models import lm
+    cfg, _ = _policy_model(balance=balance)
+    params = jax.tree.map(lambda a: a, params0)
+    opt = optim.chain_clip(optim.adamw(
+        optim.cosine_warmup(lr, steps // 10 + 1, steps)), 1.0)
+    ostate = opt.init(params)
+    rng = np.random.default_rng(seed)
+
+    def step(params, ostate, batch_d, key):
+        def loss(p):
+            return lm.loss_fn(p, cfg, batch_d, key)
+        (_, m), g = jax.value_and_grad(loss, has_aux=True)(params)
+        up, ostate = opt.update(g, ostate, params)
+        return optim.apply_updates(params, up), ostate, m
+
+    step_jit = jax.jit(step)
+    history = []
+    for i in range(steps):
+        rows = np.stack([np.full((seq,), class_tokens[
+            rng.integers(len(class_tokens))], np.int32)
+            for _ in range(batch)])
+        params, ostate, m = step_jit(params, ostate,
+                                     {"tokens": rows, "labels": rows},
+                                     jax.random.PRNGKey(seed * 10_000 + i))
+        history.append({k: float(v) for k, v in m.items()})
+    return params, history
+
+
+def policy_compare_section(runs: list, quick: bool, seed: int) -> dict:
+    """Master-leaf overflow repair vs the exact dense fallback at equal
+    slots, capacity_factor < 1.0, on the skewed class-burst workload: the
+    repair trades the dense gather round for the already-paid master term,
+    so decode-phase tokens/s must win by >= TOK_S_RATIO_GATE while the
+    output degrades only on dropped tokens (repair_error_section bounds
+    that)."""
+    slots = 128
+    n_requests = 2 * slots
+    cfg, params = _policy_model(seed)
+    classes = calibrate_classes(params, cfg, N_CLASSES)
+    reqs = make_workload(classes, n_requests=n_requests, burst=slots,
+                         rate=0.0, seed=seed + 1, gen=POLICY_GEN)
+    out = {"slots": slots, "n_requests": n_requests,
+           "capacity_factor": POLICY_CF, "gen": POLICY_GEN,
+           "gate_tok_s_ratio": TOK_S_RATIO_GATE}
+    for policy in ("exact_dense", "master_leaf"):
+        m = run_one(params, cfg, scheduler="fcfs", slots=slots, reqs=reqs,
+                    seed=seed, gen=POLICY_GEN, capacity_factor=POLICY_CF,
+                    overflow_policy=policy, warm=True)
+        d = decode_tok_s(m)
+        out[policy] = {"tok_s": m.throughput_tok_s, "decode_tok_s": d,
+                       "overflow_decode_mean": m.overflow_decode_mean,
+                       "overflow_repairs": m.overflow_repairs,
+                       "master_leaf_fraction": m.master_leaf_fraction}
+        runs.append({"section": "policy_compare", "overflow_policy": policy,
+                     "scheduler": "fcfs", "rate_req_s": 0.0, "slots": slots,
+                     "n_requests": n_requests, **m.as_dict()})
+        print(f"serving_policy,{policy},{m.throughput_tok_s:.1f},{d:.0f},"
+              f"{m.overflow_decode_mean:.4f},{m.overflow_repairs}",
+              flush=True)
+    ratio = (out["master_leaf"]["decode_tok_s"]
+             / max(out["exact_dense"]["decode_tok_s"], 1e-9))
+    out["decode_tok_s_ratio"] = ratio
+    out["ok"] = bool(ratio >= TOK_S_RATIO_GATE)
+    print(f"# master_leaf decode tok/s {out['master_leaf']['decode_tok_s']:.0f}"
+          f" vs exact_dense {out['exact_dense']['decode_tok_s']:.0f} at "
+          f"cf={POLICY_CF} -> {ratio:.2f}x "
+          f"(gate {TOK_S_RATIO_GATE}x: {'OK' if out['ok'] else 'FAIL'})")
+    return out
+
+
+def balance_compare_section(runs: list, quick: bool, seed: int) -> dict:
+    """Load-balanced training vs the identical loop without the balance aux:
+    fine-tune the policy model on a leaf-COLLIDING class set (all classes
+    route to one leaf at init), then serve the mixed-class workload at
+    capacity_factor < 1.0 from each checkpoint — the balanced one must
+    spread the classes across leaves and cut decode overflow."""
+    slots = 64
+    steps = 80 if quick else 120
+    n_collide = 8
+    cfg, params0 = _policy_model(seed)
+    collide = calibrate_collisions(params0, cfg, n_collide)
+    toks = [t for t, _ in collide]
+    print(f"# collision classes (shared leaf "
+          f"{int(collide[0][1].argmax())}): {toks}")
+    reqs = make_workload(collide, n_requests=2 * slots, burst=1, rate=0.0,
+                         seed=seed + 1, gen=POLICY_GEN)
+    out = {"slots": slots, "capacity_factor": POLICY_CF, "steps": steps,
+           "balance_weight": 1.0, "collision_tokens": toks,
+           "collision_leaf": int(collide[0][1].argmax())}
+    for label, balance in (("balanced", 1.0), ("unbalanced", 0.0)):
+        params, hist = train_checkpoint(params0, toks, balance=balance,
+                                        steps=steps, seed=seed)
+        m = run_one(params, cfg, scheduler="fcfs", slots=slots, reqs=reqs,
+                    seed=seed, gen=POLICY_GEN, capacity_factor=POLICY_CF,
+                    overflow_policy="master_leaf")
+        out[label] = {
+            "loss_first": hist[0]["loss"], "loss_last": hist[-1]["loss"],
+            "balance_first": hist[0]["balance"],
+            "balance_last": hist[-1]["balance"],
+            "overflow_decode_mean": m.overflow_decode_mean,
+            "tok_s": m.throughput_tok_s}
+        runs.append({"section": "balance_compare", "checkpoint": label,
+                     "scheduler": "fcfs", "rate_req_s": 0.0, "slots": slots,
+                     "n_requests": 2 * slots, **m.as_dict()})
+        print(f"serving_balance,{label},{m.throughput_tok_s:.1f},"
+              f"{m.overflow_decode_mean:.4f},"
+              f"{hist[-1]['loss']:.3f}", flush=True)
+    out["ok"] = bool(out["balanced"]["overflow_decode_mean"]
+                     < out["unbalanced"]["overflow_decode_mean"])
+    print(f"# balanced decode overflow "
+          f"{out['balanced']['overflow_decode_mean']:.4f} vs unbalanced "
+          f"{out['unbalanced']['overflow_decode_mean']:.4f} after {steps} "
+          f"steps -> {'LOWER (OK)' if out['ok'] else 'NOT LOWER (FAIL)'}")
+    return out
+
+
+def repair_error_section(seed: int) -> dict:
+    """Per-token output delta of the approximate master-leaf repair vs the
+    exact dense fallback, on a standalone FFF site at capacity_factor < 1.0:
+    kept tokens are bit-identical (same dispatch), dropped tokens lose one
+    tree's leaf term and keep the master + remaining trees — the relative
+    delta must stay under REPAIR_ERROR_BOUND."""
+    from repro.core import api, fff
+    cfg = fff.FFFConfig(dim_in=64, dim_out=64, depth=4, leaf_width=64,
+                        trees=2, activation="gelu", leaf_bias=False,
+                        master_leaf=True)
+    params = fff.init(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (256, 64))
+
+    def y_for(policy):
+        spec = api.ExecutionSpec(mode="infer", backend="grouped",
+                                 capacity_factor=0.25,
+                                 overflow_policy=policy)
+        return np.asarray(api.apply(params, cfg, x, spec)[0], np.float64)
+
+    y_exact = y_for("exact_dense")
+    y_master = y_for("master_leaf")
+    delta = np.linalg.norm(y_master - y_exact, axis=-1)
+    rel = delta / (np.linalg.norm(y_exact, axis=-1) + 1e-9)
+    dropped = rel > 1e-7            # kept tokens ride the identical path
+    out = {"batch": int(x.shape[0]), "capacity_factor": 0.25,
+           "dropped_fraction": float(dropped.mean()),
+           "rel_delta_mean": float(rel[dropped].mean()) if dropped.any()
+           else 0.0,
+           "rel_delta_max": float(rel[dropped].max()) if dropped.any()
+           else 0.0,
+           "bound": REPAIR_ERROR_BOUND}
+    out["ok"] = bool(dropped.any()
+                     and out["rel_delta_mean"] <= REPAIR_ERROR_BOUND)
+    print(f"# repair error: {out['dropped_fraction']:.2f} of tokens dropped, "
+          f"rel delta mean {out['rel_delta_mean']:.3f} / max "
+          f"{out['rel_delta_max']:.3f} (bound {REPAIR_ERROR_BOUND}: "
+          f"{'OK' if out['ok'] else 'FAIL'})")
+    return out
 
 
 def main(quick: bool = True) -> None:
@@ -151,11 +397,19 @@ def main(quick: bool = True) -> None:
           f"{aware['throughput_tok_s']:.0f}/{fcfs['throughput_tok_s']:.0f} "
           f"tok/s -> {'LOWER' if verdict else 'NOT LOWER'}")
 
+    # DESIGN.md §14: the capacity-under-provisioned sections
+    policy_compare = policy_compare_section(runs, quick, seed)
+    balance_compare = balance_compare_section(runs, quick, seed)
+    repair_error = repair_error_section(seed)
+
     with open(ARTIFACT, "w") as f:
         json.dump({"bench": "serving_load", "quick": quick, "slots": slots,
                    "prompt_len": PROMPT_LEN, "gen": GEN,
                    "classes": [(int(t), int(fp.argmax()))
                                for t, fp in classes],
+                   "policy_compare": policy_compare,
+                   "balance_compare": balance_compare,
+                   "repair_error": repair_error,
                    "runs": runs}, f, indent=1)
     print(f"# wrote {ARTIFACT}")
 

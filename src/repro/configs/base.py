@@ -33,7 +33,13 @@ class FFNSpec:
     fff_node_width: int = 1
     fff_st: bool = False           # straight-through top-1 training (MoE-scale
                                    # sites; DESIGN.md §8) vs faithful FORWARD_T
+    fff_master_leaf: bool = False  # always-on master leaf (arxiv 2405.16836,
+                                   # DESIGN.md §14); doubles as the approximate
+                                   # overflow repair under capacity bounds
+    fff_master_width: int = 0      # master hidden width; 0 = leaf width
     hardening_scale: float = 1.0
+    balance_scale: float = 0.0     # load-balancing aux weight over soft leaf
+                                   # usage (0 = off; DESIGN.md §14)
     # --- moe ---
     moe_experts: int = 0
     moe_top_k: int = 2

@@ -8,17 +8,23 @@ grouped / pallas / user-registered) — see ``core/api.py`` and DESIGN.md §2.
 """
 from repro.core import api, ff, fff, moe, regions, routing
 from repro.core.api import (ExecutionSpec, FFFOutput, apply, get_backend,
-                            list_backends, register_backend, use_backend)
-from repro.core.fff import (FFFConfig, bernoulli_entropy, decisive_fraction,
-                            hardening_loss, mixture_weights, route_hard)
+                            list_backends, overrides, register_backend,
+                            use_backend, use_capacity_factor,
+                            use_overflow_policy)
+from repro.core.fff import (FFFConfig, balance_loss, bernoulli_entropy,
+                            decisive_fraction, hardening_loss, leaf_usage,
+                            master_apply, mixture_weights, route_hard)
 
 __all__ = [
     "api", "ff", "fff", "moe", "regions", "routing",
     # the FFF execution API
     "apply", "ExecutionSpec", "FFFOutput",
-    "register_backend", "get_backend", "list_backends", "use_backend",
+    "register_backend", "get_backend", "list_backends", "overrides",
+    # deprecated single-purpose override aliases (use ``overrides``)
+    "use_backend", "use_capacity_factor", "use_overflow_policy",
     # layer config + math
     "FFFConfig", "route_hard",
     "mixture_weights", "hardening_loss", "bernoulli_entropy",
+    "balance_loss", "leaf_usage", "master_apply",
     "decisive_fraction",
 ]

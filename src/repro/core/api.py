@@ -27,14 +27,19 @@ Adding a backend::
                        api.ExecutionSpec(mode="infer", backend="mine"))
 
 The launch layer can steer ``backend="auto"`` call sites wholesale with
-``with api.use_backend("grouped"): ...`` (same thread-local pattern as
-``repro.distributed.act.use_mesh`` — read at trace time).
+``with api.overrides(backend="grouped"): ...`` (same thread-local pattern
+as ``repro.distributed.act.use_mesh`` — read at trace time).  The same
+context manager composes every trace-time override — backend, capacity
+factor and overflow policy — and nests (inner wins per field); the old
+single-purpose ``use_backend`` / ``use_capacity_factor`` /
+``use_overflow_policy`` names survive as thin deprecated aliases.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
 import threading
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -59,6 +64,13 @@ DEFAULT_CAPACITY_EP = 1.25
 #: gathered decode kernel over the sorted-dispatch grouped GEMM (DESIGN.md §3)
 PALLAS_DECODE_MAX_TOKENS = 32
 
+#: what happens to tokens a capacity-bounded backend drops (DESIGN.md §14):
+#: "exact_dense" repairs them with the per-token dense fallback (exact,
+#: all_gather traffic under EP), "master_leaf" lets the always-on master-leaf
+#: term stand in (approximate, zero repair traffic, needs cfg.master_leaf),
+#: "drop" leaves them at zero output (historical grouped behaviour)
+OVERFLOW_POLICIES = ("exact_dense", "master_leaf", "drop")
+
 
 def default_capacity_factor(backend: str, mode: str = "infer") -> float:
     """The capacity factor a capacity-bounded backend runs with when
@@ -69,6 +81,17 @@ def default_capacity_factor(backend: str, mode: str = "infer") -> float:
         return DEFAULT_CAPACITY_TRAIN_ST
     return DEFAULT_CAPACITY_EP if backend == "grouped_ep" \
         else DEFAULT_CAPACITY_INFER
+
+
+def default_overflow_policy(backend: str) -> str:
+    """The overflow policy a capacity-bounded backend runs with when
+    ``ExecutionSpec.overflow_policy`` is None — the historical per-backend
+    behaviour the first-class policy replaced (DESIGN.md §14): grouped_ep
+    repaired exactly, grouped dropped.  Exact backends have no overflow, so
+    the answer only matters for capacity-bounded ones; consumers that must
+    predict repair behaviour (serving metrics, ``dispatch.ep_bytes_moved``)
+    read it from here."""
+    return "exact_dense" if backend == "grouped_ep" else "drop"
 
 #: per-tree training width at which "auto" inference switches from the exact
 #: per-token gather to capacity-bounded grouped dispatch (DESIGN.md §3)
@@ -86,6 +109,15 @@ class ExecutionSpec:
                      backends (grouped dispatch, pallas leaf GEMM); None =
                      each backend's own default (1.5 for ST training, 2.0
                      for serving — the pre-registry values)
+    overflow_policy: what a capacity-bounded backend does with tokens it
+                     drops — one of ``OVERFLOW_POLICIES`` ("exact_dense" |
+                     "master_leaf" | "drop", DESIGN.md §14); None = the
+                     backend's historical default
+                     (``default_overflow_policy``: "exact_dense" for
+                     grouped_ep, "drop" for grouped).  "master_leaf"
+                     requires ``cfg.master_leaf`` — the always-on master
+                     term is what stands in for the dropped leaf output.
+                     Exact (capacity-unbounded) backends ignore it.
     dense_levels:    tree levels routed by one dense logit matmul before
                      falling back to per-token gathers (DESIGN.md §3)
     rng:             PRNG key for stochastic training features (child
@@ -105,6 +137,7 @@ class ExecutionSpec:
     mode: str = "infer"
     backend: str = "auto"
     capacity_factor: Optional[float] = None
+    overflow_policy: Optional[str] = None
     dense_levels: int = 8
     rng: Optional[jax.Array] = None
     interpret: Optional[bool] = None
@@ -113,6 +146,11 @@ class ExecutionSpec:
     def validate(self) -> "ExecutionSpec":
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode!r}")
+        if (self.overflow_policy is not None
+                and self.overflow_policy not in OVERFLOW_POLICIES):
+            raise ValueError(
+                f"overflow_policy must be one of {OVERFLOW_POLICIES} or None, "
+                f"got {self.overflow_policy!r}")
         return self
 
 
@@ -275,59 +313,107 @@ def list_backends(mode: Optional[str] = None) -> list[str]:
     return sorted(n for m, n in _REGISTRY if m == mode)
 
 
-@contextlib.contextmanager
-def use_backend(name: str, mode: Optional[str] = None):
-    """Steer every ``backend="auto"`` apply() in this thread to ``name``.
+def overrides(*, backend: Optional[str] = None, mode: Optional[str] = None,
+              capacity_factor: Optional[float] = None,
+              overflow_policy: Optional[str] = None):
+    """One composable trace-time override context for ``apply()`` (DESIGN.md
+    §2/§14): steer ``backend="auto"`` resolution, fill in unset
+    ``capacity_factor``s, and fill in unset ``overflow_policy``s — any
+    subset at once, for the dynamic extent of a trace in this thread.
 
-    Installed for the dynamic extent of a trace (launch-layer batching
-    policy); explicit non-auto specs are unaffected.  ``mode`` restricts the
-    override to one mode — pass ``mode="infer"`` when a name exists for both
-    modes with different math (``"grouped"`` is exact dispatch for inference
-    but the ST top-1 *estimator* for training; an unrestricted override
-    would silently change training semantics).  Backends missing for an
-    applicable mode — or failing their registered ``supports`` predicate for
-    a given (params, cfg) — fall through to the normal auto heuristics, so
-    e.g. ``use_backend("pallas")`` serves kernel-eligible inference sites
-    with the kernels while biased-leaf sites and training keep their normal
-    paths.  A name registered for no mode at all raises up front — otherwise
-    a typo would silently run auto."""
-    if mode is not None and mode not in MODES:
-        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
-    if not any(n == name for _, n in _REGISTRY):
-        raise KeyError(f"no backend {name!r} registered for any mode; "
-                       f"available: {list_backends()}")
-    prev = getattr(_thread_state, "override", None)
-    _thread_state.override = (name, mode)
-    try:
-        yield
-    finally:
-        _thread_state.override = prev
+    ``backend`` steers every ``backend="auto"`` apply() to the named
+    implementation; explicit non-auto specs are unaffected.  ``mode``
+    restricts the backend override to one mode — pass ``mode="infer"`` when
+    a name exists for both modes with different math (``"grouped"`` is exact
+    dispatch for inference but the ST top-1 *estimator* for training; an
+    unrestricted override would silently change training semantics).
+    Backends missing for an applicable mode — or failing their registered
+    ``supports`` predicate for a given (params, cfg) — fall through to the
+    normal auto heuristics, so e.g. ``overrides(backend="pallas")`` serves
+    kernel-eligible inference sites with the kernels while biased-leaf sites
+    and training keep their normal paths.  A name registered for no mode at
+    all raises up front — otherwise a typo would silently run auto.
 
-
-@contextlib.contextmanager
-def use_capacity_factor(cf: float):
-    """Override the capacity factor of every ``apply()`` in this thread whose
-    spec leaves ``capacity_factor`` unset, for the dynamic extent of a trace.
-
-    Same thread-local trace-time pattern as ``use_backend``; explicit
-    per-spec capacity factors win.  The motivating consumer is the serving
+    ``capacity_factor`` fills in every spec that leaves its own unset;
+    explicit per-spec values win.  The motivating consumer is the serving
     engine's speculative verify dispatch (DESIGN.md §10): a verify slab is
     k+1 decode steps fused onto one token axis, so its per-leaf capacity
-    must scale with that axis — otherwise each verify token would see less
-    capacity than the identical token in plain decode (the ``max(8, ...)``
-    per-leaf floor in core/routing is generous to single-token steps), and
-    speculation would *change serving numerics* instead of just batching
-    them.  Capacity-free exact backends ignore capacity factors entirely,
-    so the override is harmless there."""
-    cf = float(cf)
-    if cf <= 0:
-        raise ValueError(f"capacity factor must be positive, got {cf}")
-    prev = getattr(_thread_state, "capacity_override", None)
-    _thread_state.capacity_override = cf
-    try:
-        yield
-    finally:
-        _thread_state.capacity_override = prev
+    must scale with that axis — otherwise speculation would *change serving
+    numerics* instead of just batching them.  Capacity-free exact backends
+    ignore capacity factors entirely, so the override is harmless there.
+
+    ``overflow_policy`` (one of ``OVERFLOW_POLICIES``) likewise fills in
+    specs that leave theirs unset — how the serving engine selects
+    master-leaf overflow repair for a whole trace without touching call
+    sites.
+
+    Contexts nest: each ``overrides()`` saves and restores exactly the
+    fields it sets, so an inner context wins per field and unrelated fields
+    compose (``overrides(backend=...)`` inside
+    ``overrides(capacity_factor=...)`` leaves the capacity override
+    active).  Validation is eager — bad arguments raise at the call, before
+    the ``with`` body runs."""
+    if mode is not None and mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if mode is not None and backend is None:
+        raise ValueError("mode= only restricts a backend override; pass "
+                         "backend= as well")
+    if backend is not None and not any(n == backend for _, n in _REGISTRY):
+        raise KeyError(f"no backend {backend!r} registered for any mode; "
+                       f"available: {list_backends()}")
+    if capacity_factor is not None:
+        capacity_factor = float(capacity_factor)
+        if capacity_factor <= 0:
+            raise ValueError(
+                f"capacity factor must be positive, got {capacity_factor}")
+    if overflow_policy is not None and overflow_policy not in OVERFLOW_POLICIES:
+        raise ValueError(f"overflow_policy must be one of {OVERFLOW_POLICIES},"
+                         f" got {overflow_policy!r}")
+
+    sets = []
+    if backend is not None:
+        sets.append(("override", (backend, mode)))
+    if capacity_factor is not None:
+        sets.append(("capacity_override", capacity_factor))
+    if overflow_policy is not None:
+        sets.append(("overflow_override", overflow_policy))
+
+    @contextlib.contextmanager
+    def _installed():
+        prev = [(a, getattr(_thread_state, a, None)) for a, _ in sets]
+        for a, v in sets:
+            setattr(_thread_state, a, v)
+        try:
+            yield
+        finally:
+            for a, v in prev:
+                setattr(_thread_state, a, v)
+
+    return _installed()
+
+
+def _deprecated_alias(old: str, new: str) -> None:
+    warnings.warn(f"api.{old} is deprecated; use api.{new}",
+                  DeprecationWarning, stacklevel=3)
+
+
+def use_backend(name: str, mode: Optional[str] = None):
+    """Deprecated alias for ``overrides(backend=name, mode=mode)``."""
+    _deprecated_alias("use_backend(name)", "overrides(backend=name)")
+    return overrides(backend=name, mode=mode)
+
+
+def use_capacity_factor(cf: float):
+    """Deprecated alias for ``overrides(capacity_factor=cf)``."""
+    _deprecated_alias("use_capacity_factor(cf)", "overrides(capacity_factor=cf)")
+    return overrides(capacity_factor=cf)
+
+
+def use_overflow_policy(policy: str):
+    """Deprecated alias for ``overrides(overflow_policy=policy)``."""
+    _deprecated_alias("use_overflow_policy(policy)",
+                      "overrides(overflow_policy=policy)")
+    return overrides(overflow_policy=policy)
 
 
 def _pallas_supported(params: dict, cfg: fff_lib.FFFConfig) -> bool:
@@ -410,15 +496,34 @@ def apply(params: dict, cfg: fff_lib.FFFConfig, x: jax.Array,
     """Apply one FFF layer: x (..., dim_in) -> (..., dim_out), FFFOutput.
 
     The only supported invocation of the layer outside ``repro.core``; the
-    backend registry does the rest (module docstring has the map)."""
+    backend registry does the rest (module docstring has the map).
+
+    When ``cfg.master_leaf`` is set the always-on master-leaf term
+    (``fff.master_apply``, DESIGN.md §14) is added HERE, after backend
+    dispatch, so every backend — reference, grouped, grouped_ep, pallas —
+    gets identical master semantics without per-backend code and without an
+    extra pallas_call (the addition is plain jnp and fuses into the
+    surrounding XLA program).  The one exception is the fused decode
+    megakernel, which folds the master MLP into its single kernel."""
     cf = getattr(_thread_state, "capacity_override", None)
     if cf is not None and spec.capacity_factor is None:
         spec = dataclasses.replace(spec, capacity_factor=cf)
+    op = getattr(_thread_state, "overflow_override", None)
+    if op is not None and spec.overflow_policy is None:
+        spec = dataclasses.replace(spec, overflow_policy=op)
     spec.validate()
+    if spec.overflow_policy == "master_leaf" and not cfg.master_leaf:
+        raise ValueError(
+            'overflow_policy="master_leaf" requires cfg.master_leaf=True — '
+            "without the always-on master term, dropped tokens would "
+            'silently degrade to zeros (use "drop" to ask for that)')
     name = spec.backend
     if name == "auto":
         name = _resolve_auto(params, cfg, spec.mode, x_shape=x.shape)
-    return get_backend(spec.mode, name)(params, cfg, x, spec)
+    y, out = get_backend(spec.mode, name)(params, cfg, x, spec)
+    if cfg.master_leaf and not (name == "pallas_decode" and cfg.depth > 0):
+        y = y + fff_lib.master_apply(params, cfg, x).astype(y.dtype)
+    return y, out
 
 
 # ---------------------------------------------------------------------------
@@ -454,12 +559,16 @@ def _infer_reference(params, cfg, x, spec):
 
 
 def _infer_grouped(params, cfg, x, spec):
-    """FORWARD_I via capacity-bounded grouped dispatch (EP-shardable)."""
+    """FORWARD_I via capacity-bounded grouped dispatch (EP-shardable).
+    ``spec.overflow_policy`` governs dropped tokens (default "drop",
+    the historical behaviour; DESIGN.md §14)."""
     cf = (spec.capacity_factor if spec.capacity_factor is not None
           else DEFAULT_CAPACITY_INFER)
+    policy = (spec.overflow_policy if spec.overflow_policy is not None
+              else default_overflow_policy("grouped"))
     y, aux = fff_lib._forward_hard_grouped(
         params, cfg, x, capacity_factor=cf, dense_levels=spec.dense_levels,
-        valid=spec.valid)
+        valid=spec.valid, overflow_policy=policy)
     return y, FFFOutput(leaf_idx=aux["leaf_idx"],
                         overflow_fraction=aux["overflow_fraction"])
 
@@ -467,16 +576,20 @@ def _infer_grouped(params, cfg, x, spec):
 def _infer_grouped_ep(params, cfg, x, spec):
     """FORWARD_I via expert-parallel shard_map + all_to_all dispatch
     (DESIGN.md §5).  Leaf weights stay sharded on the model axis; tokens
-    travel to their routed leaf's shard and back.  EXACT: over-capacity
-    tokens take the overflow-to-dense repair, and overflow_fraction reports
-    the true repair rate.  Degrades to local grouped dispatch + the same
-    repair when no mesh is installed (so the contract is testable
+    travel to their routed leaf's shard and back.  Exact under the default
+    ``overflow_policy="exact_dense"``: over-capacity tokens take the
+    overflow-to-dense repair, and overflow_fraction reports the true repair
+    rate.  "master_leaf"/"drop" (§14) omit the repair round — and its
+    all_gather traffic — entirely.  Degrades to local grouped dispatch +
+    the same policy when no mesh is installed (so the contract is testable
     unsharded)."""
     cf = (spec.capacity_factor if spec.capacity_factor is not None
           else DEFAULT_CAPACITY_EP)
+    policy = (spec.overflow_policy if spec.overflow_policy is not None
+              else default_overflow_policy("grouped_ep"))
     y, aux = fff_lib._forward_hard_ep(
         params, cfg, x, capacity_factor=cf, dense_levels=spec.dense_levels,
-        valid=spec.valid)
+        valid=spec.valid, overflow_policy=policy)
     return y, FFFOutput(leaf_idx=aux["leaf_idx"],
                         overflow_fraction=aux["overflow_fraction"])
 

@@ -39,6 +39,11 @@ Beyond-paper extensions (all default-off; the defaults reproduce the paper):
 * ``st_training``    — straight-through top-1 training (O(l) instead of
   O(2^d * l) per token); DESIGN.md §8.
 * SwiGLU leaves      — LLM-style gated leaves for transformer FFN sites.
+* ``master_leaf``    — an always-on small MLP added to every token's output
+  in both modes (arxiv 2405.16836); doubles as the cheap approximate
+  overflow repair under ``overflow_policy="master_leaf"`` (DESIGN.md §14).
+* ``balance_loss``   — load-balancing auxiliary loss over the soft leaf
+  usage (same source, surfaced through ``FFNSpec.balance_scale``).
 """
 from __future__ import annotations
 
@@ -71,6 +76,8 @@ class FFFConfig:
     freeze_tree: bool = False       # paper's h = inf: boundaries not trainable
     leaf_bias: bool = True          # LLM FFNs conventionally drop biases
     st_training: bool = False       # straight-through top-1 training (beyond paper)
+    master_leaf: bool = False       # always-on master MLP added to every token
+    master_width: int = 0           # master hidden width; 0 = leaf_width
     param_dtype: Any = jnp.float32
     accum_dtype: Any = jnp.float32
 
@@ -99,11 +106,18 @@ class FFFConfig:
     def inference_size(self) -> int:
         return self.trees * (self.depth * self.node_width + self.leaf_width)
 
+    @property
+    def master_hidden(self) -> int:
+        """Hidden width of the master leaf (0 defaults to leaf_width)."""
+        return self.master_width or self.leaf_width
+
     def validate(self) -> "FFFConfig":
         if self.depth < 0:
             raise ValueError("depth must be >= 0")
         if self.leaf_width < 1 or self.node_width < 1 or self.trees < 1:
             raise ValueError("leaf_width, node_width, trees must be >= 1")
+        if self.master_width < 0:
+            raise ValueError("master_width must be >= 0 (0 = leaf_width)")
         if self.activation != "swiglu":
             utils.get_activation(self.activation)
         return self
@@ -134,6 +148,9 @@ def init(key: jax.Array, cfg: FFFConfig) -> Params:
       gelu/relu: leaf_w1 (T, L, dim_in, l), leaf_b1 (T, L, l),
                  leaf_w2 (T, L, l, dim_out), leaf_b2 (T, L, dim_out)
       swiglu:    leaf_wg, leaf_wu (T, L, dim_in, l), leaf_wd (T, L, l, dim_out)
+    master leaf (cfg.master_leaf, bias-free, shared across the forest):
+      gelu/relu: master_w1 (dim_in, mw), master_w2 (mw, dim_out)
+      swiglu:    master_wg, master_wu (dim_in, mw), master_wd (mw, dim_out)
     """
     cfg.validate()
     T, N, L = cfg.trees, cfg.num_nodes, cfg.num_leaves
@@ -162,6 +179,21 @@ def init(key: jax.Array, cfg: FFFConfig) -> Params:
         if cfg.leaf_bias:
             params["leaf_b1"] = jnp.zeros((T, L, l), pd)
             params["leaf_b2"] = jnp.zeros((T, L, O), pd)
+    if cfg.master_leaf:
+        # ks[5..7] were always split off but unused, so adding the master
+        # leaf never perturbs the node/leaf init of existing checkpoints
+        mw = cfg.master_hidden
+        if cfg.activation == "swiglu":
+            params.update({
+                "master_wg": utils.truncated_init(ks[5], (D, mw), 1.0 / math.sqrt(D), pd),
+                "master_wu": utils.truncated_init(ks[6], (D, mw), 1.0 / math.sqrt(D), pd),
+                "master_wd": utils.truncated_init(ks[7], (mw, O), 1.0 / math.sqrt(mw), pd),
+            })
+        else:
+            params.update({
+                "master_w1": utils.he_normal(ks[5], (D, mw), pd, fan_in_axis=-2),
+                "master_w2": utils.lecun_normal(ks[6], (mw, O), pd, fan_in_axis=-2),
+            })
     return params
 
 
@@ -284,6 +316,32 @@ def _leaf_forward_gather(params: Params, cfg: FFFConfig, x: jax.Array,
     leaf_names = [k for k in params if k.startswith("leaf_")]
     tree_params = {k: params[k] for k in leaf_names}
     return jax.vmap(per_tree, in_axes=(0, 1), out_axes=1)(tree_params, leaf_idx)
+
+
+def master_apply(params: Params, cfg: FFFConfig, x: jax.Array) -> jax.Array:
+    """The master leaf (arxiv 2405.16836): one small always-on MLP shared by
+    every token, x (..., dim_in) -> (..., dim_out).
+
+    Added to the routed output in BOTH modes by ``api.apply`` (so train and
+    infer see the same function), and the whole output for tokens dropped
+    under ``overflow_policy="master_leaf"`` — the cheap approximate overflow
+    repair (DESIGN.md §14).  Dense math, no routing, no dispatch: a plain
+    (D, mw) + (mw, O) matmul pair riding whatever program already runs."""
+    ad = cfg.accum_dtype
+    xf = x.astype(ad)
+    if cfg.activation == "swiglu":
+        g = jnp.einsum("...d,dh->...h", xf, params["master_wg"],
+                       preferred_element_type=ad)
+        u = jnp.einsum("...d,dh->...h", xf, params["master_wu"],
+                       preferred_element_type=ad)
+        h = jax.nn.silu(g) * u
+        return jnp.einsum("...h,ho->...o", h, params["master_wd"],
+                          preferred_element_type=ad)
+    act = utils.get_activation(cfg.activation)
+    h = act(jnp.einsum("...d,dh->...h", xf, params["master_w1"],
+                       preferred_element_type=ad))
+    return jnp.einsum("...h,ho->...o", h, params["master_w2"],
+                      preferred_element_type=ad)
 
 
 # ---------------------------------------------------------------------------
@@ -463,7 +521,8 @@ def _overflow_from_kept(kept_all: list, vfp: Optional[jax.Array], B: int,
 def _forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
                           capacity_factor: float = 2.0,
                           dense_levels: int = 8,
-                          valid: Optional[jax.Array] = None
+                          valid: Optional[jax.Array] = None,
+                          overflow_policy: str = "drop"
                           ) -> tuple[jax.Array, dict]:
     """FORWARD_I via capacity-bounded grouped dispatch (pure jnp, EP-shardable).
 
@@ -471,7 +530,16 @@ def _forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
     structure, expressed in einsums so pjit/SPMD can partition it.  Used by
     the serving path for MoE-scale FFF sites (DESIGN.md §3).  ``valid``
     (broadcastable to x's leading shape) routes phantom tokens to the
-    sentinel leaf: zero capacity use, zero output, excluded from overflow."""
+    sentinel leaf: zero capacity use, zero output, excluded from overflow.
+
+    ``overflow_policy`` (DESIGN.md §14): "drop" (historical behaviour;
+    over-capacity tokens contribute zeros), "exact_dense" (a lax.cond-gated
+    per-token dense repair of dropped tokens, same mechanism as the EP
+    backend's overflow-to-dense round), or "master_leaf" (identical to
+    "drop" at this layer — the always-on master-leaf term api.apply adds
+    centrally IS the approximate repair, so dropped tokens degrade to the
+    master output instead of zero).  ``overflow_fraction`` always reports
+    the true over-capacity rate regardless of policy."""
     xf, lead = utils.flatten_leading(x)
     xf = xf.astype(cfg.accum_dtype)
     xf, B = _pad_for_dispatch(xf, dist_act.data_shard_count())
@@ -490,6 +558,18 @@ def _forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
             xf, leaf_idx[:, t], tree_leaves, cfg.activation,
             capacity_factor=capacity_factor, accum_dtype=cfg.accum_dtype,
             serving=True, return_kept=True)
+        if overflow_policy == "exact_dense":
+            # repair only REAL overflow (sentinel pads/invalids need none);
+            # the cond keeps the steady state free of gather traffic
+            dropped = ~kept & (leaf_idx[:, t] < cfg.num_leaves)
+
+            def repair(y, d=dropped, it=leaf_idx[:, t], tl=tree_leaves):
+                return jnp.where(
+                    d[:, None],
+                    routing_lib._dense_leaf_gather(
+                        xf, it, tl, cfg.activation, cfg.accum_dtype), y)
+
+            y = jax.lax.cond(dropped.any(), repair, lambda y: y, y)
         out = y if out is None else out + y
         kept_all.append(kept[:B])
     overflow = _overflow_from_kept(kept_all, vfp, B, cfg.accum_dtype)
@@ -501,16 +581,20 @@ def _forward_hard_grouped(params: Params, cfg: FFFConfig, x: jax.Array,
 def _forward_hard_ep(params: Params, cfg: FFFConfig, x: jax.Array,
                      capacity_factor: float = 1.25,
                      dense_levels: int = 8,
-                     valid: Optional[jax.Array] = None
+                     valid: Optional[jax.Array] = None,
+                     overflow_policy: str = "exact_dense"
                      ) -> tuple[jax.Array, dict]:
-    """FORWARD_I via expert-parallel all_to_all dispatch (EXACT).
+    """FORWARD_I via expert-parallel all_to_all dispatch.
 
     Routing runs data-parallel (node nets are replicated); leaf execution
     crosses shards deliberately: tokens travel over the model axis to the
     shard owning their routed leaf (``routing.grouped_leaf_apply_ep``,
-    DESIGN.md §5).  Over-capacity tokens are repaired by the overflow-to-
-    dense round, so outputs match the reference backend exactly and
-    ``overflow_fraction`` reports the true repair rate."""
+    DESIGN.md §5).  Under the default ``overflow_policy="exact_dense"``
+    over-capacity tokens are repaired by the overflow-to-dense round, so
+    outputs match the reference backend exactly; "master_leaf" and "drop"
+    (DESIGN.md §14) skip the all_gather repair round entirely — dropped
+    tokens fall back to the central master-leaf term or to zeros — and
+    ``overflow_fraction`` reports the true over-capacity rate either way."""
     xf, lead = utils.flatten_leading(x)
     xf = xf.astype(cfg.accum_dtype)
     xf, B = _pad_for_dispatch(
@@ -529,7 +613,7 @@ def _forward_hard_ep(params: Params, cfg: FFFConfig, x: jax.Array,
         y, kept = routing_lib.grouped_leaf_apply_ep(
             xf, leaf_idx[:, t], tree_leaves, cfg.activation,
             capacity_factor=capacity_factor, accum_dtype=cfg.accum_dtype,
-            return_kept=True)
+            overflow_policy=overflow_policy, return_kept=True)
         out = y if out is None else out + y
         kept_all.append(kept[:B])
     overflow = _overflow_from_kept(kept_all, vfp, B, cfg.accum_dtype)
@@ -604,6 +688,32 @@ def hardening_loss(node_probs: jax.Array, reduction: str = "mean") -> jax.Array:
     if reduction == "sum":
         return ent.sum()
     return ent.mean()
+
+
+def balance_loss(node_probs: jax.Array, depth: int) -> jax.Array:
+    """Load-balancing auxiliary loss over soft leaf usage (arxiv 2405.16836).
+
+    node_probs (B, T, N) -> scalar ``E * sum_e mean_batch(P)_e^2 - 1``, mean
+    over trees, where P is each token's soft leaf mixture
+    (``mixture_weights``).  By Cauchy-Schwarz the sum-of-squares term is
+    >= 1/E with equality exactly at uniform mean usage, so the loss is 0 at
+    balance and grows with skew — pushing the node hyperplanes to split
+    traffic evenly, which is what lets serving run capacity factors < 1
+    without overflow (DESIGN.md §14).  Differentiable through the same soft
+    probabilities the hardening loss uses, so it works for both the soft
+    FORWARD_T reference and the ST grouped estimator."""
+    if depth == 0:
+        return jnp.zeros((), node_probs.dtype)
+    mix = mixture_weights(node_probs, depth)           # (B, T, E)
+    usage = mix.mean(axis=0)                           # (T, E) mean leaf prob
+    E = mix.shape[-1]
+    return (E * jnp.square(usage).sum(axis=-1) - 1.0).mean()
+
+
+def leaf_usage(node_probs: jax.Array, depth: int) -> jax.Array:
+    """Mean soft leaf usage per tree: (B, T, N) -> (T, 2^depth) distribution
+    (the quantity ``balance_loss`` penalizes the skew of)."""
+    return mixture_weights(node_probs, depth).mean(axis=0)
 
 
 def decision_entropy_per_node(node_probs: jax.Array) -> jax.Array:

@@ -298,8 +298,9 @@ def _dense_leaf_gather(x: jax.Array, leaf_idx: jax.Array, params: dict,
 
 def grouped_leaf_apply_ep(x: jax.Array, leaf_idx: jax.Array, params: dict,
                           activation: str, capacity_factor: float = 1.25,
-                          accum_dtype=jnp.float32, return_kept: bool = False):
-    """EXACT expert-parallel grouped leaf execution (DESIGN.md §5).
+                          accum_dtype=jnp.float32, return_kept: bool = False,
+                          overflow_policy: str = "exact_dense"):
+    """Expert-parallel grouped leaf execution (DESIGN.md §5), exact by default.
 
     A ``shard_map`` over the installed mesh: the token axis is split over
     (data x model), leaf weights over the model axis.  Each source shard
@@ -317,10 +318,18 @@ def grouped_leaf_apply_ep(x: jax.Array, leaf_idx: jax.Array, params: dict,
     grouped dispatch plus the same dense repair — still exact, so parity
     tests exercise the identical contract unsharded.
 
+    ``overflow_policy`` selects what happens to over-capacity tokens
+    (DESIGN.md §14): "exact_dense" (default) runs the repair round above;
+    "master_leaf" and "drop" statically omit it — dropped tokens keep their
+    zeros (the caller's central master-leaf term, when enabled, is what
+    turns those zeros into the approximate master output), and the
+    all_gather/psum traffic of the repair disappears from the program
+    entirely (``dispatch.ep_bytes_moved`` models the same distinction).
+
     Returns (B, O), or with ``return_kept=True`` a ``(y, kept)`` pair;
-    ``kept`` False marks tokens that overflowed capacity and took the dense
-    repair (their outputs are exact either way) — the honest
-    ``overflow_fraction`` the aux reports.
+    ``kept`` False marks tokens that overflowed capacity and took the
+    policy's overflow path (exact repair, master fallback, or zeros) — the
+    honest ``overflow_fraction`` the aux reports.
     """
     B, D = x.shape
     swiglu = "leaf_wg" in params
@@ -334,18 +343,20 @@ def grouped_leaf_apply_ep(x: jax.Array, leaf_idx: jax.Array, params: dict,
         y, kept = grouped_leaf_apply(
             x, leaf_idx, params, activation, capacity_factor=capacity_factor,
             accum_dtype=accum_dtype, serving=True, return_kept=True)
-        # repair only REAL overflow: callers may pass sentinel-padded tokens
-        # (leaf id E, kept=False by construction) which need no repair — a
-        # kept.all() predicate would fire the dense pass on every padded call
-        dropped = ~kept & (leaf_idx < E)
-        y = jax.lax.cond(
-            dropped.any(),
-            lambda y: jnp.where(
-                dropped[:, None],
-                _dense_leaf_gather(x, leaf_idx, params, activation,
-                                   accum_dtype), y),
-            lambda y: y,
-            y)
+        if overflow_policy == "exact_dense":
+            # repair only REAL overflow: callers may pass sentinel-padded
+            # tokens (leaf id E, kept=False by construction) which need no
+            # repair — a kept.all() predicate would fire the dense pass on
+            # every padded call
+            dropped = ~kept & (leaf_idx < E)
+            y = jax.lax.cond(
+                dropped.any(),
+                lambda y: jnp.where(
+                    dropped[:, None],
+                    _dense_leaf_gather(x, leaf_idx, params, activation,
+                                       accum_dtype), y),
+                lambda y: y,
+                y)
         return (y, kept) if return_kept else y
 
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -370,6 +381,11 @@ def grouped_leaf_apply_ep(x: jax.Array, leaf_idx: jax.Array, params: dict,
         yr = _leaf_mlp_on_buffers(xr, leaves_l, activation, accum_dtype)
         y_flat = dispatch_lib.ep_combine(yr, "model", plan)  # (E*C, O)
         y_l = dispatch_lib.ep_gather(y_flat, plan)
+
+        if overflow_policy != "exact_dense":
+            # master_leaf / drop: over-capacity tokens keep zeros; no
+            # all_gather round exists in the lowered program at all
+            return y_l, plan.kept
 
         dropped = valid & ~plan.kept
         n_drop = jax.lax.psum(dropped.sum(), all_axes)
@@ -408,8 +424,9 @@ def grouped_leaf_apply_ep(x: jax.Array, leaf_idx: jax.Array, params: dict,
 
 
 def leaf_histogram(leaf_idx: jax.Array, num_leaves: int) -> jax.Array:
-    """Load histogram over leaves; FFF needs no balancing loss (regions are
-    learned geometrically) but serving wants visibility into skew."""
+    """Load histogram over leaves.  Skew here is what capacity-bounded
+    dispatch pays for; ``fff.balance_loss`` (DESIGN.md §14) trains it flat
+    so serving can drop the capacity factor below 1.0."""
     return jnp.bincount(leaf_idx.reshape(-1), length=num_leaves)
 
 

@@ -111,10 +111,27 @@ def ep_gather(y_flat: jax.Array, plan: EPPlan) -> jax.Array:
 
 
 def ep_bytes_moved(num_groups: int, num_shards: int, dim_in: int,
-                   dim_out: int, capacity: int, itemsize: int = 4) -> int:
+                   dim_out: int, capacity: int, itemsize: int = 4, *,
+                   overflow_policy: str = "drop",
+                   tokens_per_shard: int = 0) -> int:
     """Cross-shard bytes per source shard for one dispatch round trip: two
     all_to_alls of the (E, C, *) buffers, of which (M-1)/M leaves the shard.
-    The dispatch-locality benchmark reports this next to measured tokens/s."""
+    The dispatch-locality benchmark reports this next to measured tokens/s.
+
+    ``overflow_policy="exact_dense"`` (with ``tokens_per_shard`` > 0) adds
+    the worst-case dense-repair round an overflowing dispatch pays
+    (DESIGN.md §14): an all_gather of each shard's Bl token activations,
+    leaf ids and drop mask over the model axis, plus the psum assembling
+    the (M*Bl, O) repaired outputs.  Under "master_leaf" / "drop" the
+    repair round is statically absent from the lowered program
+    (``core/routing.grouped_leaf_apply_ep``), so its term here is zero —
+    the collective traffic the approximate policy buys back."""
+    M = max(num_shards, 1)
     slots = num_groups * capacity
-    return int(slots * (dim_in + dim_out) * itemsize
-               * (num_shards - 1) / max(num_shards, 1))
+    a2a = int(slots * (dim_in + dim_out) * itemsize * (num_shards - 1) / M)
+    if overflow_policy != "exact_dense" or not tokens_per_shard:
+        return a2a
+    Bl = tokens_per_shard
+    gathered = Bl * (dim_in * itemsize + 4 + 1) * (num_shards - 1)
+    psum = int(2 * M * Bl * dim_out * itemsize * (num_shards - 1) / M)
+    return a2a + gathered + psum

@@ -46,6 +46,10 @@ PARAM_RULES: list[tuple[str, tuple]] = [
     (r".*leaf_b[12]$", ((MODEL, None),)),              # (T,L,l)
     (r".*node_w1$", ((None, FSDP, None),)),            # (T,N,D,n)
     (r".*node_(b1|w2|b2)$", ((None, None),)),
+    # master leaf (DESIGN.md §14): one small always-on MLP, no tree/leaf
+    # axis — every token needs it, so keep it off the model axis (FSDP only)
+    (r".*master_w[gu1]$", ((FSDP, None),)),            # (D,mw)
+    (r".*master_w[d2]$", ((None, FSDP),)),             # (mw,O)
     # --- MoE ---
     (r".*expert_w1$", ((MODEL, FSDP, None),            # (E,D,H)
                        (None, FSDP, MODEL))),

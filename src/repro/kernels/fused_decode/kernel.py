@@ -75,7 +75,11 @@ def _leaf_slab(w_ref, t: int, idx):
 
 
 def _fused_decode_kernel(x_ref, nw_ref, nb_ref, *refs, depth: int, trees: int,
-                         act: str, out_dtype):
+                         act: str, out_dtype, master: bool = False):
+    m_refs = ()
+    if master:
+        n_m = 3 if act == "swiglu" else 2
+        m_refs, refs = refs[-2 - n_m:-2], refs[:-2 - n_m] + refs[-2:]
     if act == "swiglu":
         wg_ref, wu_ref, wd_ref, y_ref, idx_ref = refs
     else:
@@ -107,12 +111,37 @@ def _fused_decode_kernel(x_ref, nw_ref, nb_ref, *refs, depth: int, trees: int,
             h.astype(x.dtype), w_down, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
         idxs.append(idx)
+    if master:
+        # always-on master leaf (DESIGN.md §14): one more MLP on the same
+        # in-VMEM token — fused here so the megakernel keeps its single
+        # dispatch (the other backends add the master term centrally in
+        # api.apply)
+        if act == "swiglu":
+            mg_ref, mu_ref, md_ref = m_refs
+            g = jax.lax.dot_general(
+                x, mg_ref[...], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            u = jax.lax.dot_general(
+                x, mu_ref[...], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            h = jax.nn.silu(g) * u
+            m_down = md_ref[...]
+        else:
+            m1_ref, m2_ref = m_refs
+            h = _ACTS[act](jax.lax.dot_general(
+                x, m1_ref[...], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32))
+            m_down = m2_ref[...]
+        acc += jax.lax.dot_general(
+            h.astype(x.dtype), m_down, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
     y_ref[...] = acc.astype(out_dtype)
     idx_ref[...] = jnp.stack(idxs).astype(jnp.int32)[None, :]
 
 
 def fused_forest_decode(x: jax.Array, nw: jax.Array, nb: jax.Array,
                         leaf_w: tuple, *, depth: int, act: str = "gelu",
+                        master_w: tuple | None = None,
                         interpret: bool = False,
                         out_dtype=None) -> tuple[jax.Array, jax.Array]:
     """One fused dispatch: route + selected-leaf MLP + forest combine.
@@ -124,6 +153,10 @@ def fused_forest_decode(x: jax.Array, nw: jax.Array, nb: jax.Array,
         leaf_w: ``(w1 (T, E, D, l), w2 (T, E, l, O))`` for plain leaves, or
                 ``(wg, wu (T, E, D, l), wd (T, E, l, O))`` for SwiGLU
                 (then ``act`` must be ``"swiglu"``).
+        master_w: optional always-on master-leaf MLP (DESIGN.md §14), fused
+                into the same dispatch: ``(m1 (D, mw), m2 (mw, O))`` for
+                plain leaves or ``(mg, mu (D, mw), md (mw, O))`` for SwiGLU;
+                None (default) preserves the master-free contract.
 
     Returns ``(y (B, O), leaf_idx (B, T) int32)``.
     """
@@ -132,19 +165,24 @@ def fused_forest_decode(x: jax.Array, nw: jax.Array, nb: jax.Array,
     assert B >= 1, "fused decode needs at least one token"
     assert depth >= 1 and N == 2 ** depth - 1, (N, depth)
     assert (len(leaf_w) == 3) == (act == "swiglu"), (len(leaf_w), act)
+    if master_w is not None:
+        assert len(master_w) == len(leaf_w), (len(master_w), len(leaf_w))
     E = leaf_w[0].shape[1]
     O = leaf_w[-1].shape[-1]
     out_dtype = out_dtype or x.dtype
     whole = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    m_ops = tuple(master_w) if master_w is not None else ()
     return pl.pallas_call(
         functools.partial(_fused_decode_kernel, depth=depth, trees=T,
-                          act=act, out_dtype=out_dtype),
+                          act=act, out_dtype=out_dtype,
+                          master=master_w is not None),
         grid=(B,),
         in_specs=[pl.BlockSpec((1, D), lambda i: (i, 0)),
-                  whole(nw), whole(nb)] + [whole(w) for w in leaf_w],
+                  whole(nw), whole(nb)] + [whole(w) for w in leaf_w]
+                 + [whole(w) for w in m_ops],
         out_specs=[pl.BlockSpec((1, O), lambda i: (i, 0)),
                    pl.BlockSpec((1, T), lambda i: (i, 0))],
         out_shape=[jax.ShapeDtypeStruct((B, O), out_dtype),
                    jax.ShapeDtypeStruct((B, T), jnp.int32)],
         interpret=interpret,
-    )(x, nw, nb, *leaf_w)
+    )(x, nw, nb, *leaf_w, *m_ops)

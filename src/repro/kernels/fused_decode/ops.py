@@ -41,6 +41,17 @@ def _leaf_weights(params: dict, cfg: fff_lib.FFFConfig) -> tuple[tuple, str]:
     return (params["leaf_w1"], params["leaf_w2"]), cfg.activation
 
 
+def _master_weights(params: dict, cfg: fff_lib.FFFConfig):
+    """The always-on master-leaf MLP weights (DESIGN.md §14), fused into the
+    same single dispatch, or None for master-free configs."""
+    if not cfg.master_leaf:
+        return None
+    if cfg.activation == "swiglu":
+        return (params["master_wg"], params["master_wu"],
+                params["master_wd"])
+    return (params["master_w1"], params["master_w2"])
+
+
 def fused_decode(x: jax.Array, params: dict, cfg: fff_lib.FFFConfig, *,
                  interpret: Optional[bool] = None,
                  return_leaf_idx: bool = False):
@@ -59,7 +70,9 @@ def fused_decode(x: jax.Array, params: dict, cfg: fff_lib.FFFConfig, *,
     nw, nb = collapse_nodes(params, cfg)
     leaf_w, act = _leaf_weights(params, cfg)
     y, leaf_idx = K.fused_forest_decode(x, nw, nb, leaf_w, depth=cfg.depth,
-                                        act=act, interpret=interpret)
+                                        act=act,
+                                        master_w=_master_weights(params, cfg),
+                                        interpret=interpret)
     if return_leaf_idx:
         return y, leaf_idx
     return y
@@ -73,7 +86,8 @@ def fused_decode_ref(x: jax.Array, params: dict, cfg: fff_lib.FFFConfig, *,
     nw, nb = collapse_nodes(params, cfg)
     leaf_w, act = _leaf_weights(params, cfg)
     y, leaf_idx = R.fused_decode_ref(x, nw, nb, leaf_w, depth=cfg.depth,
-                                     act=act)
+                                     act=act,
+                                     master_w=_master_weights(params, cfg))
     if return_leaf_idx:
         return y, leaf_idx
     return y

@@ -10,11 +10,14 @@ from repro import utils
 
 
 def fused_decode_ref(x: jax.Array, nw: jax.Array, nb: jax.Array,
-                     leaf_w: tuple, *, depth: int, act: str = "gelu"
+                     leaf_w: tuple, *, depth: int, act: str = "gelu",
+                     master_w: tuple | None = None
                      ) -> tuple[jax.Array, jax.Array]:
     """Same contract as ``kernel.fused_forest_decode``: x (B, D), collapsed
     nodes nw (T, N, D) / nb (T, N), ``leaf_w`` = (w1, w2) or (wg, wu, wd)
-    with leading (T, E) axes -> ``(y (B, O), leaf_idx (B, T) int32)``."""
+    with leading (T, E) axes -> ``(y (B, O), leaf_idx (B, T) int32)``.
+    ``master_w`` (optional, same layout as one leaf minus the (T, E) axes)
+    adds the always-on master-leaf MLP to every token (DESIGN.md §14)."""
     B = x.shape[0]
     T = nw.shape[0]
     xf = x.astype(jnp.float32)
@@ -41,4 +44,12 @@ def fused_decode_ref(x: jax.Array, nw: jax.Array, nb: jax.Array,
             yt = jnp.einsum("bh,bho->bo", h, w2)
         y = yt if y is None else y + yt
         idxs.append(idx)
+    if master_w is not None:
+        if act == "swiglu":
+            mg, mu, md = (w.astype(jnp.float32) for w in master_w)
+            h = jax.nn.silu(xf @ mg) * (xf @ mu)
+            y = y + h @ md
+        else:
+            m1, m2 = (w.astype(jnp.float32) for w in master_w)
+            y = y + utils.get_activation(act)(xf @ m1) @ m2
     return y.astype(x.dtype), jnp.stack(idxs, axis=1)

@@ -127,7 +127,7 @@ def cost_model(cfg: ModelConfig, shape: ShapeSpec, mesh, rules) -> dict:
                 y, _, aux = transformer.stack_forward(
                     p1, cfg1, x, mode="train", enc_out=enc)
                 return (y.astype(jnp.float32).sum()
-                        + aux["hardening"] + aux["moe_aux"])
+                        + aux["hardening"] + aux["moe_aux"] + aux["balance"])
             fn = jax.grad(body, argnums=(0, 1))
             fl, by, co = _cost_of(fn, (stack1_struct, x_struct, enc_struct),
                                   (s_shardings, x_sh, enc_sh), mesh, rules)
@@ -135,7 +135,7 @@ def cost_model(cfg: ModelConfig, shape: ShapeSpec, mesh, rules) -> dict:
             def body(p1, x):
                 y, _, aux = transformer.stack_forward(p1, cfg1, x, mode="train")
                 return (y.astype(jnp.float32).sum()
-                        + aux["hardening"] + aux["moe_aux"])
+                        + aux["hardening"] + aux["moe_aux"] + aux["balance"])
             fn = jax.grad(body, argnums=(0, 1))
             fl, by, co = _cost_of(fn, (stack1_struct, x_struct),
                                   (s_shardings, x_sh), mesh, rules)

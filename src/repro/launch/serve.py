@@ -23,7 +23,8 @@ prefill + decode demo loop.  Operator guide: docs/serving.md.
 
 Both paths report p50/p90/p99 latency and tokens/s through
 ``repro.serving.metrics`` and steer every FFF site's execution strategy with
-``--fff-backend`` via ``api.use_backend`` (core/api.py, DESIGN.md §2).
+``--fff-backend`` / ``--capacity-factor`` / ``--overflow-policy`` via
+``api.overrides`` (core/api.py, DESIGN.md §2 + §14).
 
 ``--model-parallel M`` installs an (all-devices/M, M) (data, model) mesh and
 shards the params onto it — the expert-parallel serving topology the
@@ -68,6 +69,22 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=["auto"] + api.list_backends("infer"),
                     help="execution backend for every FFF site (auto = "
                          "per-site resolution; see core/api.py)")
+    ap.add_argument("--capacity-factor", type=float, default=None,
+                    help="capacity factor for capacity-bounded FFF backends "
+                         "(grouped / grouped_ep): per-(shard, leaf) slots "
+                         "scale with cf * tokens / leaves.  < 1.0 "
+                         "deliberately under-provisions — pair with "
+                         "--overflow-policy (DESIGN.md §14; default: the "
+                         "configured backend's dispatch default)")
+    ap.add_argument("--overflow-policy", default=None,
+                    choices=list(api.OVERFLOW_POLICIES),
+                    help="what over-capacity tokens get under a capacity-"
+                         "bounded backend: exact_dense = dense gather "
+                         "repair (exact, pays collective traffic), "
+                         "master_leaf = the always-on master term stands in "
+                         "alone (approximate, zero repair traffic; needs a "
+                         "model built with fff_master_leaf), drop = zeros "
+                         "(DESIGN.md §14; default: backend default)")
     ap.add_argument("--pallas-decode", action="store_true",
                     help="engine: steer one-token decode (and speculative "
                          "draft rollout) through the fused megakernel "
@@ -293,6 +310,8 @@ def run_engine(args) -> None:
         prefill_budget=args.prefill_budget,
         fff_backend=args.fff_backend,
         pallas_decode=args.pallas_decode,
+        capacity_factor=args.capacity_factor,
+        overflow_policy=args.overflow_policy,
         spec_k=args.spec_k,
         draft_config=args.draft_config or None,
         page_size=args.page_size,
@@ -367,6 +386,8 @@ def run_cluster(args) -> None:
             prefill_budget=args.prefill_budget,
             fff_backend=args.fff_backend,
             pallas_decode=args.pallas_decode,
+            capacity_factor=args.capacity_factor,
+            overflow_policy=args.overflow_policy,
             spec_k=args.spec_k,
             draft_config=args.draft_config or None,
             page_size=page, seed=args.seed)
@@ -497,8 +518,14 @@ def run_legacy(args) -> None:
     # shape change retraces
     def backend_ctx():
         # mode="infer": never let a serving override redirect train-mode math
-        return (api.use_backend(args.fff_backend, mode="infer")
-                if args.fff_backend != "auto" else contextlib.nullcontext())
+        kw = {}
+        if args.fff_backend != "auto":
+            kw.update(backend=args.fff_backend, mode="infer")
+        if args.capacity_factor is not None:
+            kw["capacity_factor"] = args.capacity_factor
+        if args.overflow_policy is not None:
+            kw["overflow_policy"] = args.overflow_policy
+        return api.overrides(**kw) if kw else contextlib.nullcontext()
 
     caches = lm.init_caches(cfg, args.batch, max_len)
     t0 = time.time()

@@ -10,6 +10,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -24,6 +25,24 @@ from repro.data import tokens as tokens_lib
 from repro.distributed import act, fault, sharding, straggler
 from repro.launch import mesh as mesh_lib
 from repro.models import lm
+
+
+def _with_fff_training_opts(cfg, *, balance: float = 0.0,
+                            master: bool = False):
+    """Turn on the balance aux weight and/or master leaf on every FFF site
+    of ``cfg`` (decoder and encoder periods alike; DESIGN.md §14)."""
+    def upd(b):
+        if b.ffn.kind != "fff":
+            return b
+        return dataclasses.replace(b, ffn=dataclasses.replace(
+            b.ffn, balance_scale=balance, fff_master_leaf=master))
+
+    cfg = dataclasses.replace(cfg,
+                              period=tuple(upd(b) for b in cfg.period))
+    if cfg.encoder is not None and cfg.encoder.period:
+        cfg = dataclasses.replace(cfg, encoder=dataclasses.replace(
+            cfg.encoder, period=tuple(upd(b) for b in cfg.encoder.period)))
+    return cfg
 
 
 def main() -> None:
@@ -41,11 +60,21 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--mesh", default="host", choices=["host", "prod"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--balance-weight", type=float, default=0.0,
+                    help="load-balancing aux weight over FFF soft leaf usage "
+                         "(DESIGN.md §14); 0 = off")
+    ap.add_argument("--master-leaf", action="store_true",
+                    help="train with the always-on master leaf "
+                         "(arxiv 2405.16836) — enables master_leaf overflow "
+                         "repair at serving time")
     args = ap.parse_args()
 
     cfg = registry.get_config(args.arch, ffn=args.ffn)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.balance_weight or args.master_leaf:
+        cfg = _with_fff_training_opts(cfg, balance=args.balance_weight,
+                                      master=args.master_leaf)
     mesh = (mesh_lib.make_production_mesh() if args.mesh == "prod"
             else mesh_lib.make_host_mesh())
     rules = sharding.activation_rules(mesh)
@@ -95,7 +124,8 @@ def main() -> None:
             dt = time.time() - t0
             tracker.record([dt])
             print(f"step {i:4d} loss {loss:8.4f} ce {float(metrics['ce']):8.4f} "
-                  f"harden {float(metrics['hardening']):6.3f} {dt*1e3:7.1f}ms",
+                  f"harden {float(metrics['hardening']):6.3f} "
+                  f"balance {float(metrics['balance']):7.4f} {dt*1e3:7.1f}ms",
                   flush=True)
             return {"params": p2, "opt": o2}
 

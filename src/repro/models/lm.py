@@ -106,7 +106,8 @@ def cross_entropy(logits: jax.Array, labels: jax.Array,
 
 def loss_fn(params: Params, cfg: ModelConfig, batch: dict,
             rng: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
-    """Training loss: CE + hardening (FFF) + balancing (MoE) aux terms."""
+    """Training loss: CE + hardening (FFF) + load-balancing (FFF leaf usage,
+    DESIGN.md §14) + balancing (MoE) aux terms."""
     enc_out = None
     if cfg.encoder is not None:
         enc_out = encode(params, cfg, batch["enc_embeds"])
@@ -116,9 +117,10 @@ def loss_fn(params: Params, cfg: ModelConfig, batch: dict,
                                           enc_out=enc_out)
     logits = _head(params, cfg, x)
     ce, acc = cross_entropy(logits, batch["labels"])
-    loss = ce + aux["hardening"] + aux["moe_aux"]
+    loss = ce + aux["hardening"] + aux["moe_aux"] + aux["balance"]
     metrics = {"loss": loss, "ce": ce, "accuracy": acc,
-               "hardening": aux["hardening"], "moe_aux": aux["moe_aux"]}
+               "hardening": aux["hardening"], "moe_aux": aux["moe_aux"],
+               "balance": aux["balance"]}
     return loss, metrics
 
 

@@ -25,7 +25,8 @@ def make_fff_config(spec: FFNSpec, d_model: int, *, param_dtype, accum_dtype
         leaf_width=spec.fff_leaf_width, node_width=spec.fff_node_width,
         activation=spec.activation, trees=spec.fff_trees,
         hardening_scale=spec.hardening_scale, leaf_bias=False,
-        st_training=spec.fff_st,
+        st_training=spec.fff_st, master_leaf=spec.fff_master_leaf,
+        master_width=spec.fff_master_width,
         param_dtype=param_dtype, accum_dtype=accum_dtype)
 
 
@@ -64,7 +65,8 @@ def forward(params: Params, spec: FFNSpec, d_model: int, x: jax.Array, *,
             param_dtype, accum_dtype, train: bool = True,
             rng: Optional[jax.Array] = None,
             valid: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
-    """x (..., D) -> (..., D), aux {'hardening': scalar, 'moe_aux': scalar}.
+    """x (..., D) -> (..., D), aux {'hardening', 'moe_aux', 'balance'}
+    (scalars).
 
     ``valid`` (broadcastable to x's leading shape) marks phantom tokens —
     pad columns of a chunked-prefill slab, free slots of a serving decode
@@ -73,21 +75,27 @@ def forward(params: Params, spec: FFNSpec, d_model: int, x: jax.Array, *,
     kw = dict(param_dtype=param_dtype, accum_dtype=accum_dtype)
     zero = jnp.zeros((), jnp.float32)
     if spec.kind == "none":
-        return x, {"hardening": zero, "moe_aux": zero}
+        return x, {"hardening": zero, "moe_aux": zero, "balance": zero}
     if spec.kind == "dense":
         return ff.forward(params, make_ff_config(spec, d_model, **kw), x), \
-            {"hardening": zero, "moe_aux": zero}
+            {"hardening": zero, "moe_aux": zero, "balance": zero}
     if spec.kind == "fff":
         cfg = make_fff_config(spec, d_model, **kw)
         # one entry point; backend="auto" picks the execution strategy per
         # platform/site (and the launch layer can steer it via
-        # api.use_backend) — see core/api.py
+        # api.overrides) — see core/api.py
         y, out = api.apply(params, cfg, x, api.ExecutionSpec(
             mode="train" if train else "infer", rng=rng, valid=valid))
         if train:
             harden = spec.hardening_scale * fff.hardening_loss(out.node_probs)
+            # load-balancing over soft leaf usage (DESIGN.md §14); the soft
+            # node_probs exist in both the FORWARD_T and ST train paths
+            balance = (spec.balance_scale
+                       * fff.balance_loss(out.node_probs, cfg.depth)
+                       if spec.balance_scale else zero)
         aux = {"hardening": harden.astype(jnp.float32) if train else zero,
-               "moe_aux": zero}
+               "moe_aux": zero,
+               "balance": balance.astype(jnp.float32) if train else zero}
         if not train and api.routing_enabled():
             # serving telemetry rides the aux return (DESIGN.md §9): a side
             # list would capture scan-body tracers under scan_layers
@@ -98,7 +106,8 @@ def forward(params: Params, spec: FFNSpec, d_model: int, x: jax.Array, *,
         if train:
             y, aux = moe.forward(params, cfg, x, rng=rng, train=True)
             return y, {"hardening": zero,
-                       "moe_aux": aux["aux_loss"].astype(jnp.float32)}
+                       "moe_aux": aux["aux_loss"].astype(jnp.float32),
+                       "balance": zero}
         y, _ = moe.forward_sparse(params, cfg, x)
-        return y, {"hardening": zero, "moe_aux": zero}
+        return y, {"hardening": zero, "moe_aux": zero, "balance": zero}
     raise ValueError(f"unknown ffn kind {spec.kind!r}")

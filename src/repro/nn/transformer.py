@@ -203,7 +203,8 @@ def block_forward(params: Params, cfg: ModelConfig, spec: BlockSpec,
         x = act.shard(x, act.ACT_BSD)
 
     aux = {"hardening": jnp.zeros((), jnp.float32),
-           "moe_aux": jnp.zeros((), jnp.float32)}
+           "moe_aux": jnp.zeros((), jnp.float32),
+           "balance": jnp.zeros((), jnp.float32)}
     if spec.ffn.kind != "none":
         if token_valid is None and mode == "chunk" and chunk_valid is not None:
             token_valid = (jnp.arange(x.shape[1]) < chunk_valid[:, None])
@@ -285,6 +286,7 @@ def stack_forward(params: list[Params], cfg: ModelConfig, x: jax.Array, *,
         new_caches = []
         aux_h = jnp.zeros((), jnp.float32)
         aux_m = jnp.zeros((), jnp.float32)
+        aux_b = jnp.zeros((), jnp.float32)
         routing = []
         for pos, spec in enumerate(period):
             r = per_rngs[pos] if use_rng else None
@@ -296,14 +298,15 @@ def stack_forward(params: list[Params], cfg: ModelConfig, x: jax.Array, *,
             new_caches.append(nc)
             aux_h = aux_h + aux["hardening"]
             aux_m = aux_m + aux["moe_aux"]
+            aux_b = aux_b + aux["balance"]
             # per-position (not summed across positions): sites in one period
             # may have different leaf counts; summation happens across
             # *periods*, where position specs are identical
             routing.append(_routing_weighted(aux.get("routing")))
-        return x, new_caches, (aux_h, aux_m, tuple(routing))
+        return x, new_caches, (aux_h, aux_m, aux_b, tuple(routing))
 
-    def finish_aux(aux_h, aux_m, routing):
-        aux = {"hardening": aux_h, "moe_aux": aux_m}
+    def finish_aux(aux_h, aux_m, aux_b, routing):
+        aux = {"hardening": aux_h, "moe_aux": aux_m, "balance": aux_b}
         if any(r is not None for r in routing):
             aux["routing"] = tuple(_routing_finalize(r) for r in routing)
         return aux
@@ -325,14 +328,16 @@ def stack_forward(params: list[Params], cfg: ModelConfig, x: jax.Array, *,
         elif cfg.remat == "full" and mode == "train":
             body = jax.checkpoint(scan_body)
         xs = (params, caches, rngs)
-        x, (new_caches, (aux_h, aux_m, routing)) = jax.lax.scan(body, x, xs)
+        x, (new_caches, (aux_h, aux_m, aux_b, routing)) = jax.lax.scan(
+            body, x, xs)
         routing = jax.tree_util.tree_map(lambda a: a.sum(0), routing)
-        aux = finish_aux(aux_h.sum(), aux_m.sum(), routing)
+        aux = finish_aux(aux_h.sum(), aux_m.sum(), aux_b.sum(), routing)
         return x, (new_caches if caches is not None else None), aux
 
     # unrolled path (smoke tests / tiny models)
     aux_h = jnp.zeros((), jnp.float32)
     aux_m = jnp.zeros((), jnp.float32)
+    aux_b = jnp.zeros((), jnp.float32)
     routing_acc = None
     new_caches_acc = [[] for _ in period]
     for i in range(n_periods):
@@ -340,10 +345,11 @@ def stack_forward(params: list[Params], cfg: ModelConfig, x: jax.Array, *,
         per_caches = ([jax.tree_util.tree_map(lambda a: a[i], c) for c in caches]
                       if caches is not None else None)
         per_rngs = rngs[i]
-        x, ncs, (h_, m_, routing) = period_body(x, per_params, per_caches,
-                                                per_rngs)
+        x, ncs, (h_, m_, b_, routing) = period_body(x, per_params, per_caches,
+                                                    per_rngs)
         aux_h += h_
         aux_m += m_
+        aux_b += b_
         routing_acc = (routing if routing_acc is None else
                        jax.tree_util.tree_map(jnp.add, routing_acc, routing))
         for pos, nc in enumerate(ncs):
@@ -352,4 +358,4 @@ def stack_forward(params: list[Params], cfg: ModelConfig, x: jax.Array, *,
     if caches is not None:
         new_caches = [jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ncs)
                       for ncs in new_caches_acc]
-    return x, new_caches, finish_aux(aux_h, aux_m, routing_acc)
+    return x, new_caches, finish_aux(aux_h, aux_m, aux_b, routing_acc)

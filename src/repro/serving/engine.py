@@ -183,9 +183,17 @@ class EngineConfig:
     # and EP meshes fall through to the normal auto heuristics), so the
     # flag degrades gracefully rather than crashing a sharded engine.
     pallas_decode: bool = False
-    capacity_factor: Optional[float] = None   # scheduler's overflow proxy;
-                                              # None = the dispatch default of
-                                              # the configured backend
+    # capacity factor: None = the configured backend's dispatch default.  A
+    # value steers the LIVE dispatch (installed as the trace-time capacity
+    # override via api.overrides — cf < 1.0 deliberately under-provisions
+    # per-leaf capacity) and doubles as the scheduler's overflow proxy.
+    capacity_factor: Optional[float] = None
+    # overflow policy (DESIGN.md §14): what a capacity-bounded dispatch does
+    # with over-capacity tokens — "exact_dense" (dense gather repair),
+    # "master_leaf" (approximate: the always-on master term stands in alone;
+    # requires FFF sites built with fff_master_leaf), "drop" (zeros).
+    # None = the configured backend's default (api.default_overflow_policy).
+    overflow_policy: Optional[str] = None
     telemetry: bool = True               # collect FFF routing stats
     occupancy_ewma: float = 0.5
     # online per-tenant routing profiles (serving/profiles.py): finished
@@ -299,6 +307,11 @@ class ContinuousBatchingEngine:
             raise ValueError("draft_config is set but spec_k == 0 — "
                              "speculation is off, the draft would be dead "
                              "weight (set spec_k > 0 or drop draft_config)")
+        if (ecfg.overflow_policy is not None
+                and ecfg.overflow_policy not in api.OVERFLOW_POLICIES):
+            raise ValueError(
+                f"overflow_policy {ecfg.overflow_policy!r} not in "
+                f"{api.OVERFLOW_POLICIES}")
         self.params = params
         self.cfg = cfg
         self.ecfg = ecfg
@@ -313,10 +326,20 @@ class ContinuousBatchingEngine:
         self._site_cfg = None if fff_spec is None else mlp_lib.make_fff_config(
             fff_spec, cfg.d_model, param_dtype=cfg.param_dtype,
             accum_dtype=cfg.accum_dtype)
+        if (ecfg.overflow_policy == "master_leaf"
+                and self._site_cfg is not None
+                and not self._site_cfg.master_leaf):
+            # fail at construction, not at first trace: the repair term
+            # does not exist in this model (DESIGN.md §14)
+            raise ValueError(
+                'overflow_policy="master_leaf" needs FFF sites built with '
+                "fff_master_leaf=True — this model has no master term to "
+                "stand in for dropped tokens")
         self.scheduler = scheduler or make_scheduler(ecfg.scheduler,
                                                      **ecfg.scheduler_kw)
         self._trace_ctx = trace_ctx
         self._topology: Optional[Tuple[int, float]] = None
+        self._policy: Optional[str] = None    # set alongside _topology
 
         S, L = ecfg.num_slots, ecfg.max_len
         # the page pool (DESIGN.md §11): device side is a dumb pool + per-
@@ -596,9 +619,18 @@ class ContinuousBatchingEngine:
         es = contextlib.ExitStack()
         if self._trace_ctx is not None:
             es.enter_context(self._trace_ctx())
+        kw = {}
         if self.ecfg.fff_backend != "auto":
-            es.enter_context(api.use_backend(self.ecfg.fff_backend,
-                                             mode="infer"))
+            kw.update(backend=self.ecfg.fff_backend, mode="infer")
+        if self.ecfg.capacity_factor is not None:
+            # the engine's capacity factor steers the LIVE dispatch, not
+            # just the scheduler proxy — cf < 1.0 under-provisions on
+            # purpose and the overflow policy decides what happens then
+            kw["capacity_factor"] = self.ecfg.capacity_factor
+        if self.ecfg.overflow_policy is not None:
+            kw["overflow_policy"] = self.ecfg.overflow_policy
+        if kw:
+            es.enter_context(api.overrides(**kw))
         if self.ecfg.telemetry:
             es.enter_context(api.collect_routing())
         return es
@@ -611,7 +643,7 @@ class ContinuousBatchingEngine:
         decode jit is compiled."""
         if not self.ecfg.pallas_decode:
             return contextlib.nullcontext()
-        return api.use_backend("pallas_decode", mode="infer")
+        return api.overrides(backend="pallas_decode", mode="infer")
 
     def _dispatch_topology(self) -> Tuple[int, Optional[float]]:
         """(token-axis shard count, capacity factor) the live FFF dispatch
@@ -633,13 +665,42 @@ class ContinuousBatchingEngine:
                                if self._site_cfg is not None else "reference")
             if backend in ("reference", "pallas", "pallas_decode"):
                 self._topology = (1, None)     # exact: no capacity bound
+                self._policy = None
             else:
                 shards = g * m if backend == "grouped_ep" else g
                 cf = (self.ecfg.capacity_factor
                       if self.ecfg.capacity_factor is not None
                       else api.default_capacity_factor(backend))
                 self._topology = (shards, cf)
+                self._policy = (self.ecfg.overflow_policy
+                                if self.ecfg.overflow_policy is not None
+                                else api.default_overflow_policy(backend))
         return self._topology
+
+    def _overflow_policy(self) -> Optional[str]:
+        """The overflow policy the live dispatch runs with (DESIGN.md §14);
+        None when no capacity bound exists (exact backends never drop)."""
+        self._dispatch_topology()
+        return self._policy
+
+    def _repair_counters(self, ovf0: Optional[dict] = None
+                         ) -> Tuple[int, float]:
+        """Host-side overflow-policy accounting from the routing-stats
+        overflow accumulators: (estimated repaired (token, tree) slots,
+        fraction of slots served by the master leaf alone).  ``ovf0`` rebases
+        onto a per-run snapshot of ``self._overflow``; repairs are 0 under
+        policy "drop" (nothing stands in) and the master fraction is nonzero
+        only under "master_leaf"."""
+        policy = self._overflow_policy()
+        if policy in (None, "drop"):
+            return 0, 0.0
+        w = n = 0.0
+        for k, acc in self._overflow.items():
+            base = ovf0[k] if ovf0 else (0.0, 0.0)
+            w += acc[0] - base[0]
+            n += acc[1] - base[1]
+        frac = (w / n if n else 0.0) if policy == "master_leaf" else 0.0
+        return int(round(w)), frac
 
     def _verify_cf(self) -> Optional[float]:
         """Capacity factor for the speculative verify dispatch: the decode
@@ -1310,12 +1371,15 @@ class ContinuousBatchingEngine:
             n = sum(self._overflow[k][1] - ovf0[k][1] for k in keys)
             return w / n if n else 0.0
 
+        repairs, m_frac = self._repair_counters(ovf0)
         m = metrics_lib.from_results(
             results, elapsed_s=elapsed, n_steps=self.n_steps - n_steps0,
             n_prefills=self.n_prefills - n_prefills0,
             decode_lat_s=lat,
             overflow_mean=ovf_delta(list(self._overflow)),
             overflow_decode_mean=ovf_delta(["decode"]),
+            overflow_repairs=repairs,
+            master_leaf_fraction=m_frac,
             n_chunks=self.n_chunks - n_chunks0,
             decode_interval_s=intervals,
             hint_mismatches=self._hint_mismatches - hints0,
@@ -1338,11 +1402,14 @@ class ContinuousBatchingEngine:
         device work, safe to call from a monitoring thread between steps.
         ``serve.py --metrics-json`` dumps the same schema (docs/serving.md
         has the field glossary)."""
+        repairs, m_frac = self._repair_counters()
         m = metrics_lib.from_results(
             self.results, elapsed_s=self.now(), n_steps=self.n_steps,
             n_prefills=self.n_prefills, decode_lat_s=self.decode_lat,
             overflow_mean=self.overflow_mean(),
             overflow_decode_mean=self.overflow_mean("decode"),
+            overflow_repairs=repairs,
+            master_leaf_fraction=m_frac,
             n_chunks=self.n_chunks,
             decode_interval_s=self.decode_interval_s,
             hint_mismatches=self._hint_mismatches,

@@ -82,6 +82,12 @@ class EngineMetrics:
     overflow_fraction_mean: float = 0.0
     overflow_decode_mean: float = 0.0    # decode-phase only: the scheduler's
                                          # microbatch-composition signal
+    # overflow-policy accounting (DESIGN.md §14): estimated (token, tree)
+    # slots that took the configured overflow path instead of dropping to
+    # zeros, and the fraction of slots served by the master leaf alone
+    # (nonzero only under overflow_policy="master_leaf")
+    overflow_repairs: int = 0
+    master_leaf_fraction: float = 0.0
     hint_mismatches: int = 0             # leaf_hints dropped for size mismatch
     # speculative decoding (DESIGN.md §10): draft tokens proposed, accepted,
     # and wasted (= drafted - accepted, the verify compute thrown away);
@@ -132,6 +138,10 @@ class EngineMetrics:
             f"fff overflow_fraction mean {self.overflow_fraction_mean:.4f} "
             f"(decode-only {self.overflow_decode_mean:.4f})",
         ]
+        if self.overflow_repairs:
+            lines.append(
+                f"overflow policy: ~{self.overflow_repairs} slots repaired "
+                f"(master-leaf fraction {self.master_leaf_fraction:.4f})")
         if self.draft_tokens:
             lines.append(
                 f"speculative: {self.draft_tokens} drafted, "
@@ -171,6 +181,8 @@ class EngineMetrics:
             "decode_interval_ms": self.decode_interval.as_dict(),
             "overflow_fraction_mean": self.overflow_fraction_mean,
             "overflow_decode_mean": self.overflow_decode_mean,
+            "overflow_repairs": self.overflow_repairs,
+            "master_leaf_fraction": self.master_leaf_fraction,
             "hint_mismatches": self.hint_mismatches,
             "spec_acceptance": self.spec_acceptance,
             "draft_tokens": self.draft_tokens,
@@ -217,6 +229,8 @@ def from_results(results: Iterable, *, elapsed_s: float, n_steps: int,
                  n_prefills: int, decode_lat_s: Sequence[float],
                  overflow_mean: float,
                  overflow_decode_mean: float = 0.0,
+                 overflow_repairs: int = 0,
+                 master_leaf_fraction: float = 0.0,
                  n_chunks: int = 0,
                  decode_interval_s: Sequence[float] = (),
                  hint_mismatches: int = 0,
@@ -241,6 +255,8 @@ def from_results(results: Iterable, *, elapsed_s: float, n_steps: int,
         decode_interval=summarize(decode_interval_s),
         overflow_fraction_mean=overflow_mean,
         overflow_decode_mean=overflow_decode_mean,
+        overflow_repairs=overflow_repairs,
+        master_leaf_fraction=master_leaf_fraction,
         hint_mismatches=hint_mismatches,
         draft_tokens=draft_tokens,
         accepted_tokens=accepted_tokens,

@@ -196,7 +196,7 @@ def draft_rollout(draft_params: Params, dcfg, tok0: jax.Array,
 
     xs = (jnp.arange(k_plus_1), write_masks,
           jax.random.split(key, k_plus_1))
-    steer = (api.use_backend(draft_backend, mode="infer")
+    steer = (api.overrides(backend=draft_backend, mode="infer")
              if draft_backend is not None else contextlib.nullcontext())
     with steer:      # trace-time: applies to the scanned step body only
         (_, draft_caches), (sampled, q_logits, stats) = jax.lax.scan(
@@ -226,14 +226,15 @@ def spec_round(params: Params, cfg, draft_params: Params, dcfg,
     ``verify_len`` (S,) int32 in [0, k + 1]: tokens of the slab the target
     actually scores/appends per row (0 = free slot; rows near the cache edge
     clip, mirroring ``write_masks``).  ``verify_cf``: capacity factor for
-    the verify dispatch only (``api.use_capacity_factor``) — the engine
+    the verify dispatch only (``api.overrides(capacity_factor=...)``, which
+    nests inside and wins over the engine's own override) — the engine
     passes the decode capacity factor scaled by ``k + 1`` so each verify
     token sees the per-leaf capacity it would have seen in plain decode
     (None = backend default, for capacity-free backends).  Returns
     ``(drafts (k, S), q_logits (k+1, S, V), p_logits (S, k+1, V), caches,
     draft_caches, draft_stats, verify_stats)``.
     """
-    ctx = (api.use_capacity_factor(verify_cf) if verify_cf is not None
+    ctx = (api.overrides(capacity_factor=verify_cf) if verify_cf is not None
            else contextlib.nullcontext())
     with ctx:
         # the rollout runs at the scaled capacity too: draft dispatch

@@ -21,14 +21,15 @@ CASES = [(mode, backend)
 
 
 def _hardened_case(depth, trees, dtype, din=16, dout=12, leaf=8, batch=64,
-                   pool=512, seed=0):
+                   pool=512, seed=0, master=False):
     """Bias-free FFF params with decisively-hardened node boundaries, plus
     tokens filtered to a decision margin at every node (so bf16 rounding
     cannot flip a routing decision between backends; threshold probed
     empirically — routing still agrees at 0.02 across all backends)."""
     cfg = fff.FFFConfig(dim_in=din, dim_out=dout, depth=depth,
                         leaf_width=leaf, activation="gelu", trees=trees,
-                        leaf_bias=False, param_dtype=dtype)
+                        leaf_bias=False, param_dtype=dtype,
+                        master_leaf=master)
     params = fff.init(jax.random.PRNGKey(seed), cfg)
     x = jax.random.normal(jax.random.PRNGKey(seed + 1), (pool, din))
     if depth > 0:
@@ -69,6 +70,24 @@ def test_backend_parity(mode, backend, depth, trees, dtype):
         assert float(out.overflow_fraction) == 0.0
     if mode == "train":
         assert out.node_probs is not None and out.entropy is not None
+
+
+@pytest.mark.parametrize("depth,trees", [(0, 1), (3, 2)])
+@pytest.mark.parametrize("mode,backend", CASES,
+                         ids=[f"{m}-{b}" for m, b in CASES])
+def test_backend_parity_master_leaf(mode, backend, depth, trees):
+    """The master-leaf rows of the parity matrix: the always-on master term
+    must be added exactly once on EVERY backend (centrally by api.apply, or
+    fused in-kernel for pallas_decode) — double- or zero-addition shows up
+    as a systematic offset against the reference."""
+    cfg, params, x = _hardened_case(depth, trees, jnp.float32, master=True)
+    want, _ = api.apply(params, cfg, x, api.ExecutionSpec(
+        mode="infer", backend="reference"))
+    got, _ = api.apply(params, cfg, x, api.ExecutionSpec(
+        mode=mode, backend=backend, capacity_factor=8.0, interpret=True))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_auto_resolves_to_registered_backends():

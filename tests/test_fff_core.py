@@ -205,6 +205,86 @@ def test_dense_training_grads_flow_everywhere():
         assert float(jnp.abs(v).sum()) > 0, f"zero grad for {k}"
 
 
+def test_balance_loss_properties():
+    """0 at uniform soft usage, E-1 at fully collapsed usage, 0 at depth 0."""
+    depth, E = 3, 8
+    p_half = jnp.full((16, 2, E - 1), 0.5)         # uniform mixture
+    assert float(fff.balance_loss(p_half, depth)) == pytest.approx(0.0,
+                                                                   abs=1e-6)
+    p_hard = jnp.full((16, 2, E - 1), 1.0 - 1e-7)  # everyone to one leaf
+    assert float(fff.balance_loss(p_hard, depth)) == pytest.approx(E - 1,
+                                                                   rel=1e-3)
+    assert float(fff.balance_loss(p_half, 0)) == 0.0
+    u = fff.leaf_usage(p_half, depth)
+    assert u.shape == (2, E)
+    np.testing.assert_allclose(np.asarray(u), 1.0 / E, atol=1e-6)
+
+
+def test_balance_training_balances_skewed_usage():
+    """The toy skewed task: a tight input cluster routes (softly) to few
+    leaves at init; descending only the balance aux must spread mean soft
+    usage to near-uniform (entropy gate) without touching leaf params."""
+    cfg, p = make(depth=3, leaf=4, act="gelu", seed=3, leaf_bias=False)
+    # sharpen the node boundaries so the cluster's soft routing is decisively
+    # skewed at t=0 (untouched init sits near sigmoid(0): already uniform)
+    for k in ("node_w1", "node_b1"):
+        p[k] = p[k] * 3.0
+    base = jax.random.normal(jax.random.PRNGKey(30), (1, 16))
+    x = base + 0.05 * jax.random.normal(jax.random.PRNGKey(31), (256, 16))
+
+    def bal(p):
+        _, out = api.apply(p, cfg, x, TRAIN)
+        return fff.balance_loss(out.node_probs, cfg.depth)
+
+    def usage_entropy(p):
+        _, out = api.apply(p, cfg, x, TRAIN)
+        u = np.asarray(fff.leaf_usage(out.node_probs, cfg.depth),
+                       np.float64)[0]
+        u = u / u.sum()
+        return float(-(u * np.log(u + 1e-12)).sum())
+
+    l0, h0 = float(bal(p)), usage_entropy(p)
+    assert l0 > 0.5, "cluster not skewed enough to exercise the loss"
+    g = jax.jit(jax.grad(bal))
+    for _ in range(150):
+        grads = g(p)
+        p = {k: (v - 0.5 * grads[k] if k.startswith("node_") else v)
+             for k, v in p.items()}
+    l1, h1 = float(bal(p)), usage_entropy(p)
+    assert l1 < 0.1 * l0
+    assert h1 > h0
+    assert h1 > 0.9 * np.log(cfg.num_leaves)       # near-uniform usage
+
+
+def test_master_leaf_term_is_additive_and_grads_flow():
+    """cfg.master_leaf adds exactly master_apply(x) to every token in BOTH
+    modes (api.apply adds it centrally), and training gradients reach the
+    master weights alongside everything else."""
+    import dataclasses
+    for act, keys in [("gelu", ("master_w1", "master_w2")),
+                      ("swiglu", ("master_wg", "master_wu", "master_wd"))]:
+        cfg, p = make(depth=3, leaf=4, act=act, leaf_bias=False, seed=7,
+                      master_leaf=True)
+        assert all(k in p for k in keys)
+        x = jax.random.normal(jax.random.PRNGKey(13), (32, 16))
+        cfg0 = dataclasses.replace(cfg, master_leaf=False)
+        p0 = {k: v for k, v in p.items() if not k.startswith("master_")}
+        m = fff.master_apply(p, cfg, x)
+        for spec in (TRAIN, INFER):
+            y1, _ = api.apply(p, cfg, x, spec)
+            y0, _ = api.apply(p0, cfg0, x, spec)
+            np.testing.assert_allclose(np.asarray(y1 - y0), np.asarray(m),
+                                       rtol=2e-5, atol=2e-5)
+
+        def loss(p):
+            y, _ = api.apply(p, cfg, x, TRAIN)
+            return (y ** 2).mean()
+
+        g = jax.grad(loss)(p)
+        for k in keys:
+            assert float(jnp.abs(g[k]).sum()) > 0, f"zero grad for {k}"
+
+
 def test_child_transposition_changes_mixture():
     cfg, p = make(depth=3, leaf=4, transposition_prob=0.5)
     x = jax.random.normal(jax.random.PRNGKey(11), (32, 16))

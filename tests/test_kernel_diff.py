@@ -55,10 +55,10 @@ LEAF_WIDTHS = [4, 8]
 ODD_BATCHES = [1, 7, 37]            # non-power-of-two: no tile evenly fits
 
 
-def _fff_cfg(depth=3, act="gelu", trees=1, dim=16, leaf=8):
+def _fff_cfg(depth=3, act="gelu", trees=1, dim=16, leaf=8, master=False):
     return fff.FFFConfig(dim_in=dim, dim_out=dim, depth=depth,
                          leaf_width=leaf, activation=act, trees=trees,
-                         leaf_bias=False)
+                         leaf_bias=False, master_leaf=master)
 
 
 def _fff(seed, **kw):
@@ -285,6 +285,45 @@ def test_diff_fused_decode_dtypes(dtype):
         assert float(agree.mean()) >= 0.9
         assert_close(jnp.asarray(y)[agree], jnp.asarray(y_ref)[agree],
                      dtype=dtype)
+
+
+@pytest.mark.parametrize("act,trees", [("gelu", 1), ("relu", 2),
+                                       ("swiglu", 2)])
+def test_diff_fused_decode_master_leaf(act, trees):
+    """Master-leaf rows of the fused-decode differential matrix: the kernel
+    folds the always-on master MLP into the same dispatch, so kernel parity
+    vs the fp32 oracle must hold with the master term included — and the
+    output must differ from the master-free forest by exactly
+    ``fff.master_apply``."""
+    import dataclasses
+    p, cfg = _fff(6, depth=3, act=act, trees=trees, master=True)
+    x = jax.random.normal(jax.random.PRNGKey(7), (9, cfg.dim_in))
+    y, idx = fd_ops.fused_decode(x, p, cfg, interpret=True,
+                                 return_leaf_idx=True)
+    y_ref, idx_ref = fd_ops.fused_decode_ref(x, p, cfg, return_leaf_idx=True)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(idx_ref))
+    assert_close(y, y_ref)
+    cfg0 = dataclasses.replace(cfg, master_leaf=False)
+    p0 = {k: v for k, v in p.items() if not k.startswith("master_")}
+    y0, _ = fd_ops.fused_decode(x, p0, cfg0, interpret=True,
+                                return_leaf_idx=True)
+    assert_close(jnp.asarray(y) - jnp.asarray(y0),
+                 fff.master_apply(p, cfg, x), kind="e2e")
+
+
+def test_fused_decode_master_leaf_dispatch_count_unchanged():
+    """The §14 no-extra-dispatch gate: enabling the master leaf (and with it
+    the master_leaf overflow repair, which reuses the already-computed term)
+    must keep the megakernel at ONE pallas_call — through the raw op and
+    through the pallas_decode registry backend alike."""
+    p, cfg = _fff(0, depth=3, act="swiglu", trees=2, master=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.dim_in))
+    fused = lambda x: fd_ops.fused_decode(x, p, cfg, interpret=True)
+    assert common.count_pallas_calls(fused, x) == 1
+    spec = api.ExecutionSpec(mode="infer", backend="pallas_decode",
+                             interpret=True)
+    assert common.count_pallas_calls(
+        lambda x: api.apply(p, cfg, x[:, None, :], spec)[0], x) == 1
 
 
 def test_diff_fused_decode_degenerate_routing():

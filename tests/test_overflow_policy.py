@@ -1,0 +1,209 @@
+"""Overflow-policy contract tests (DESIGN.md §14): the first-class
+``ExecutionSpec.overflow_policy`` axis on capacity-bounded backends, the
+composable ``api.overrides()`` trace-time override surface (plus its
+deprecated aliases), the approximate master-leaf repair's error bound
+against the exact dense fallback, and the EP repair-traffic accounting.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api, fff
+from repro.distributed import dispatch
+
+
+def _master_case(seed=0, batch=128, din=16):
+    """A master-enabled forest plus a batch large enough that
+    capacity_factor=0.25 genuinely drops tokens (expected per-leaf load 16
+    vs the floor-clamped capacity of 8)."""
+    cfg = fff.FFFConfig(dim_in=din, dim_out=din, depth=3, leaf_width=8,
+                        activation="gelu", leaf_bias=False, trees=2,
+                        master_leaf=True)
+    params = fff.init(jax.random.PRNGKey(seed), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (batch, din))
+    return cfg, params, x
+
+
+def _apply(params, cfg, x, policy, cf=0.25):
+    spec = api.ExecutionSpec(mode="infer", backend="grouped",
+                             capacity_factor=cf, overflow_policy=policy)
+    return api.apply(params, cfg, x, spec)
+
+
+# ---------------------------------------------------------------------------
+# the policy axis on the grouped backend
+# ---------------------------------------------------------------------------
+
+def test_exact_dense_matches_reference_under_overflow():
+    """"exact_dense" is the lossless policy: even with real overflow the
+    repaired output must equal the capacity-unbounded reference."""
+    cfg, p, x = _master_case()
+    y, out = _apply(p, cfg, x, "exact_dense")
+    assert float(out.overflow_fraction) > 0.1   # the regime is real
+    y_ref, _ = api.apply(p, cfg, x, api.ExecutionSpec(mode="infer",
+                                                      backend="reference"))
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_master_leaf_repair_error_bounded():
+    """The approximate repair: kept tokens are bit-identical to exact_dense
+    (same dispatch), dropped tokens lose one tree's leaf term but keep the
+    master + the other tree — mean relative delta stays under 1.0."""
+    cfg, p, x = _master_case()
+    y_exact = np.asarray(_apply(p, cfg, x, "exact_dense")[0], np.float64)
+    y_rep, out = _apply(p, cfg, x, "master_leaf")
+    y_rep = np.asarray(y_rep, np.float64)
+    rel = (np.linalg.norm(y_rep - y_exact, axis=-1)
+           / (np.linalg.norm(y_exact, axis=-1) + 1e-9))
+    dropped = rel > 1e-6
+    assert dropped.any(), "cf=0.25 produced no dropped tokens"
+    assert not dropped.all(), "every token dropped — dispatch is broken"
+    assert float(rel[dropped].mean()) < 1.0
+    assert float(rel[dropped].max()) < 2.0
+
+
+def test_master_leaf_equals_drop_numerics_on_grouped():
+    """On the single-host grouped backend the master term is added centrally
+    for EVERY token, so "master_leaf" and "drop" produce identical arrays —
+    the policies differ in validation and serving-metrics accounting, not in
+    this layer's math."""
+    cfg, p, x = _master_case()
+    y_m, _ = _apply(p, cfg, x, "master_leaf")
+    y_d, _ = _apply(p, cfg, x, "drop")
+    np.testing.assert_array_equal(np.asarray(y_m), np.asarray(y_d))
+
+
+def test_master_leaf_policy_requires_master_leaf_config():
+    cfg = fff.FFFConfig(dim_in=8, dim_out=8, depth=2, leaf_width=4,
+                        activation="gelu", leaf_bias=False)
+    p = fff.init(jax.random.PRNGKey(0), cfg)
+    x = jnp.zeros((16, 8))
+    with pytest.raises(ValueError, match="master_leaf"):
+        _apply(p, cfg, x, "master_leaf")
+
+
+def test_spec_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="overflow_policy"):
+        api.ExecutionSpec(mode="infer", overflow_policy="densely").validate()
+
+
+def test_default_policies_are_the_historical_behaviours():
+    assert api.default_overflow_policy("grouped_ep") == "exact_dense"
+    assert api.default_overflow_policy("grouped") == "drop"
+    assert api.default_overflow_policy("pallas") == "drop"
+
+
+# ---------------------------------------------------------------------------
+# api.overrides(): composition, nesting, eager validation, aliases
+# ---------------------------------------------------------------------------
+
+def test_overrides_sets_any_subset_at_once():
+    st = api._thread_state
+    with api.overrides(backend="grouped", mode="infer", capacity_factor=4.0,
+                       overflow_policy="drop"):
+        assert st.override == ("grouped", "infer")
+        assert st.capacity_override == 4.0
+        assert st.overflow_override == "drop"
+    assert getattr(st, "override", None) is None
+    assert getattr(st, "capacity_override", None) is None
+    assert getattr(st, "overflow_override", None) is None
+
+
+def test_overrides_nesting_inner_wins_per_field():
+    """Each context saves/restores exactly the fields it sets, so unrelated
+    fields compose and an inner same-field context wins then restores."""
+    st = api._thread_state
+    with api.overrides(capacity_factor=2.0):
+        with api.overrides(backend="reference"):       # unrelated field
+            assert st.capacity_override == 2.0
+            assert st.override == ("reference", None)
+        with api.overrides(capacity_factor=0.5):       # same field: inner wins
+            assert st.capacity_override == 0.5
+        assert st.capacity_override == 2.0             # ...and restores
+        assert getattr(st, "override", None) is None
+    assert getattr(st, "capacity_override", None) is None
+
+
+def test_overrides_fills_unset_spec_fields_only():
+    """The override fills in specs that leave capacity/policy unset; explicit
+    per-spec values win (the speculative-verify contract, DESIGN.md §10)."""
+    seen = {}
+    orig = fff._forward_hard_grouped
+
+    def spy(*a, **kw):
+        seen["cf"] = kw["capacity_factor"]
+        seen["policy"] = kw["overflow_policy"]
+        return orig(*a, **kw)
+
+    cfg, p, x = _master_case(batch=32)
+    fff._forward_hard_grouped = spy
+    try:
+        with api.overrides(capacity_factor=4.0, overflow_policy="master_leaf"):
+            api.apply(p, cfg, x, api.ExecutionSpec(mode="infer",
+                                                   backend="grouped"))
+            assert seen == {"cf": 4.0, "policy": "master_leaf"}
+            api.apply(p, cfg, x, api.ExecutionSpec(
+                mode="infer", backend="grouped", capacity_factor=1.0,
+                overflow_policy="drop"))
+            assert seen == {"cf": 1.0, "policy": "drop"}
+    finally:
+        fff._forward_hard_grouped = orig
+
+
+def test_overrides_validation_is_eager():
+    """Bad arguments raise AT THE CALL, before the with-body runs."""
+    with pytest.raises(KeyError, match="any mode"):
+        api.overrides(backend="palas")
+    with pytest.raises(ValueError, match="mode"):
+        api.overrides(backend="grouped", mode="decode")
+    with pytest.raises(ValueError, match="backend"):
+        api.overrides(mode="infer")                    # mode needs backend
+    with pytest.raises(ValueError, match="positive"):
+        api.overrides(capacity_factor=0.0)
+    with pytest.raises(ValueError, match="overflow_policy"):
+        api.overrides(overflow_policy="dense")
+
+
+def test_deprecated_aliases_warn_and_still_work():
+    st = api._thread_state
+    for alias, kwargs, attr, want in [
+            (api.use_backend, ("reference",), "override", ("reference", None)),
+            (api.use_capacity_factor, (3.0,), "capacity_override", 3.0),
+            (api.use_overflow_policy, ("drop",), "overflow_override", "drop")]:
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            cm = alias(*kwargs)
+        assert any(issubclass(x.category, DeprecationWarning) for x in w), \
+            alias.__name__
+        assert any("overrides(" in str(x.message) for x in w), alias.__name__
+        with cm:
+            assert getattr(st, attr) == want
+        assert getattr(st, attr, None) is None
+
+
+# ---------------------------------------------------------------------------
+# EP repair-traffic accounting (dispatch.ep_bytes_moved)
+# ---------------------------------------------------------------------------
+
+def test_ep_bytes_moved_policy_accounting():
+    base = dispatch.ep_bytes_moved(32, 4, 128, 128, 8)
+    assert base > 0
+    # master_leaf / drop: the repair round is statically absent -> a2a only
+    for policy in ("master_leaf", "drop"):
+        assert dispatch.ep_bytes_moved(
+            32, 4, 128, 128, 8, overflow_policy=policy,
+            tokens_per_shard=256) == base
+    # exact_dense pays the all_gather + psum repair round on top
+    exact = dispatch.ep_bytes_moved(32, 4, 128, 128, 8,
+                                    overflow_policy="exact_dense",
+                                    tokens_per_shard=256)
+    assert exact > base
+    # single shard: nothing crosses, any policy
+    assert dispatch.ep_bytes_moved(32, 1, 128, 128, 8,
+                                   overflow_policy="exact_dense",
+                                   tokens_per_shard=256) == 0
